@@ -1,0 +1,50 @@
+"""Paper Fig. 16: latency speedup vs inference computing load.
+
+Higher load = more concurrent inference rounds = communication-resource
+contention (per-user bandwidth headroom shrinks).  MCSA re-optimizes its
+bandwidth/compute rent under the shrunken box; baselines keep midpoint
+allocations.  Paper: all methods except Device-Only degrade; MCSA
+degrades least.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.baselines import run_baseline_batch
+from repro.core.costs import edge_dict, stack_devices
+from repro.core.ligd import LiGDConfig, solve_ligd_batch_jit
+from repro.core.profile import profile_of
+from repro.configs.chain_cnns import vgg16
+
+from .common import csv_row, scenario_devices, scenario_edge
+
+N_USERS = 16
+LOADS = (1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+
+
+def run(users: int = N_USERS, seed: int = 0) -> List[str]:
+    rows = []
+    prof = profile_of(vgg16())
+    devs = stack_devices(scenario_devices(users, seed))
+    cfg = LiGDConfig(max_iters=300)
+    for load in LOADS:
+        edge = edge_dict(scenario_edge(load=load))
+        d_only = run_baseline_batch("device_only", prof, devs, edge)
+        dT = float(np.mean(np.asarray(d_only.T)))
+        mcsa = solve_ligd_batch_jit(prof, devs, edge, cfg)
+        rows.append(csv_row("fig16", f"load{load}", "mcsa",
+                            "latency_speedup",
+                            dT / float(np.mean(np.asarray(mcsa.T)))))
+        for bname in ("edge_only", "neurosurgeon", "dnn_surgery"):
+            b = run_baseline_batch(bname, prof, devs, edge)
+            rows.append(csv_row("fig16", f"load{load}", bname,
+                                "latency_speedup",
+                                dT / float(np.mean(np.asarray(b.T)))))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,56 @@
+"""Paper Figs. 6–8: MCSA vs Neurosurgeon [29] and DNN-Surgery [14]
+(no mobility), normalized to Neurosurgeon.
+
+Paper claims: latency 0.89–0.92× (MCSA trades a little latency), energy
+reduction 1.8–2.48× larger, renting cost 0.76–0.81× lower.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.baselines import run_baseline_batch
+from repro.core.costs import edge_dict, stack_devices
+from repro.core.ligd import LiGDConfig, solve_ligd_batch_jit
+
+from .common import csv_row, profiles, scenario_devices, scenario_edge, \
+    summarize
+
+N_USERS = 24
+
+
+def run(users: int = N_USERS, seed: int = 0) -> List[str]:
+    rows = []
+    devs = stack_devices(scenario_devices(users, seed))
+    edge = edge_dict(scenario_edge())
+    cfg = LiGDConfig(max_iters=300)
+    for name, prof in profiles().items():
+        mcsa = summarize(solve_ligd_batch_jit(prof, devs, edge, cfg))
+        neuro = summarize(run_baseline_batch("neurosurgeon", prof, devs,
+                                             edge))
+        surgery = summarize(run_baseline_batch("dnn_surgery", prof, devs,
+                                               edge))
+        for method, st in (("mcsa", mcsa), ("neurosurgeon", neuro),
+                           ("dnn_surgery", surgery)):
+            # latency speedup relative to Neurosurgeon's (ratio of speedups
+            # = inverse ratio of latencies)
+            rows.append(csv_row("fig6", name, method, "latency_vs_neuro",
+                                neuro.T / st.T))
+            rows.append(csv_row("fig7", name, method, "energy_vs_neuro",
+                                neuro.E / st.E))
+            rows.append(csv_row("fig8", name, method, "rent_vs_neuro",
+                                st.C / max(neuro.C, 1e-12)))
+    return rows
+
+
+CLAIMS = {
+    "fig6:mcsa:latency_vs_neuro": (0.89, 0.92),
+    "fig7:mcsa:energy_vs_neuro": (1.8, 2.48),
+    "fig8:mcsa:rent_vs_neuro": (0.76, 0.81),
+}
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,59 @@
+"""Corollaries 2–4: Li-GD convergence & complexity measurements.
+
+Reports, per DNN model:
+  * total GD iterations, warm-started (Li-GD) vs cold-started (plain
+    GD × M layers) — Corollary 4's speedup;
+  * wall-clock per batched solve (X users simultaneously, jitted);
+  * scaling in X (the O(X·K·M·…) complexity factor).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.costs import edge_dict, stack_devices
+from repro.core.ligd import LiGDConfig, solve_ligd_batch_jit
+from repro.core.profile import profile_of
+from repro.configs.chain_cnns import CNN_BUILDERS
+
+from .common import CNN_NAMES, csv_row, scenario_devices, scenario_edge
+
+
+def run(seed: int = 0) -> List[str]:
+    rows = []
+    edge = edge_dict(scenario_edge())
+    for name in CNN_NAMES:
+        prof = profile_of(CNN_BUILDERS[name]())
+        devs = stack_devices(scenario_devices(16, seed))
+        for warm in (True, False):
+            cfg = LiGDConfig(max_iters=400, warm_start=warm)
+            res = solve_ligd_batch_jit(prof, devs, edge, cfg)
+            iters = float(np.mean(np.sum(np.asarray(res.iters_per_layer),
+                                         axis=-1)))
+            label = "ligd_warm" if warm else "gd_cold"
+            rows.append(csv_row("corollary4", name, label,
+                                "gd_iterations", iters))
+            rows.append(csv_row("corollary4", name, label, "utility",
+                                float(np.mean(np.asarray(res.U)))))
+    # wall-clock scaling in X (users)
+    prof = profile_of(CNN_BUILDERS["vgg16"]())
+    cfg = LiGDConfig(max_iters=400)
+    for X in (8, 32, 128):
+        devs = stack_devices(scenario_devices(X, seed))
+        solve_ligd_batch_jit(prof, devs, edge, cfg)      # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            res = solve_ligd_batch_jit(prof, devs, edge, cfg)
+            np.asarray(res.U)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append(csv_row("complexity", f"X{X}", "ligd",
+                            "solve_ms", dt * 1e3))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

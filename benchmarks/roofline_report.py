@@ -1,0 +1,121 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from
+experiments/dryrun/*.json (written by repro.launch.dryrun).
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      --dryrun experiments/dryrun --out EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dryrun_dir: str) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(n):
+    return f"{n / 2**30:.2f}"
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.2f}"
+
+
+def dryrun_table(recs: List[dict], mesh: str) -> str:
+    lines = [
+        "| arch | cell | status | compile s | args GiB/dev | temp GiB/dev "
+        "| HLO flops/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['cell']} | SKIP (long-ctx "
+                         f"needs sub-quadratic attn) | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['cell']} | ERROR | — | — "
+                         f"| — | — | — |")
+            continue
+        mem = r.get("memory_analysis", {})
+        cost = r.get("cost_analysis", {})
+        coll = r.get("collectives", {})
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | ok | {r['compile_s']} "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes', 0))} "
+            f"| {fmt_bytes(mem.get('temp_size_in_bytes', 0))} "
+            f"| {cost.get('flops', 0):.3g} "
+            f"| {coll.get('summary', '')[:70]} |")
+    return "\n".join(lines)
+
+
+def _recompute(r: dict) -> dict:
+    """Re-derive MODEL_FLOPS/useful/MFU with the current accounting (the
+    stored JSON may predate fixes, e.g. last-position-only unembed)."""
+    from repro.configs import get_cell, get_config
+    from repro.launch.mesh import PEAK_BF16_FLOPS
+    from repro.launch.roofline import model_flops
+    rl = dict(r["roofline"])
+    mf = model_flops(get_config(r["arch"]), get_cell(r["cell"]))
+    rl["model_flops"] = mf
+    hlo_global = rl["flops_per_device"] * rl["chips"]
+    rl["useful_ratio"] = mf / hlo_global if hlo_global else 0.0
+    step = max(rl["compute_s"], rl["memory_est_s"], rl["collective_link_s"])
+    rl["mfu"] = (mf / (step * rl["chips"] * PEAK_BF16_FLOPS)
+                 if step > 0 else 0.0)
+    return rl
+
+
+def roofline_table(recs: List[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | cell | compute ms | mem ms (HLO) | mem ms (est) "
+        "| coll ms | bottleneck | MODEL_FLOPS | useful | MFU |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r["status"] != "ok":
+            continue
+        rl = _recompute(r)
+        lines.append(
+            f"| {r['arch']} | {r['cell']} "
+            f"| {fmt_ms(rl['compute_s'])} | {fmt_ms(rl['memory_s'])} "
+            f"| {fmt_ms(rl['memory_est_s'])} "
+            f"| {fmt_ms(rl['collective_link_s'])} | {rl['bottleneck']} "
+            f"| {rl['model_flops']:.3g} | {rl['useful_ratio']:.2f} "
+            f"| {rl['mfu']:.3f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    recs = load(args.dryrun)
+    parts = []
+    for mesh, title in (("single", "single-pod (16×16 = 256 chips)"),
+                        ("multi", "multi-pod (2×16×16 = 512 chips)")):
+        parts.append(f"### Dry-run — {title}\n")
+        parts.append(dryrun_table(recs, mesh))
+        parts.append("")
+    parts.append("### Roofline terms — single-pod\n")
+    parts.append(roofline_table(recs, "single"))
+    out = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out)
+    print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Benchmark driver: one suite per paper figure + the Li-GD complexity
+corollaries + a split-serving microbench.  Prints CSV
+(fig,model,method,metric,value) and checks paper-claim ranges.
+
+  PYTHONPATH=src python -m benchmarks.run [--out experiments/bench]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+from . import (fig3_5_static, fig6_8_static_vs_partitioners,
+               fig9_14_mobility, fig15_hops, fig16_load, ligd_convergence,
+               split_serving_bench)
+
+SUITES = (
+    ("fig3_5", fig3_5_static),
+    ("fig6_8", fig6_8_static_vs_partitioners),
+    ("fig9_14", fig9_14_mobility),
+    ("fig15", fig15_hops),
+    ("fig16", fig16_load),
+    ("ligd_convergence", ligd_convergence),
+    ("split_serving", split_serving_bench),
+)
+
+
+def check_claims(rows, claims):
+    """Compare measured values against paper ranges; returns report lines."""
+    out = []
+    table = {}
+    for r in rows:
+        fig, model, method, metric, value = r.split(",")
+        table.setdefault(f"{fig}:{method}:{metric}", []).append(float(value))
+    for key, (lo, hi) in claims.items():
+        vals = table.get(key)
+        if not vals:
+            continue
+        vmin, vmax = min(vals), max(vals)
+        overlap = not (vmax < lo or vmin > hi)
+        out.append(f"CLAIM {key}: paper [{lo}, {hi}] "
+                   f"reproduced [{vmin:.3g}, {vmax:.3g}] "
+                   f"{'OVERLAP' if overlap else 'MISS'}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--suite", default="all")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    all_rows = []
+    claims_report = []
+    for name, mod in SUITES:
+        if args.suite != "all" and args.suite != name:
+            continue
+        t0 = time.time()
+        rows = mod.run()
+        dt = time.time() - t0
+        all_rows += rows
+        with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
+            f.write("fig,model,method,metric,value\n")
+            f.write("\n".join(rows) + "\n")
+        print(f"== {name} ({dt:.1f}s) ==")
+        for r in rows:
+            print(r)
+        if hasattr(mod, "CLAIMS"):
+            claims_report += check_claims(rows, mod.CLAIMS)
+        sys.stdout.flush()
+
+    print("\n== paper-claim check ==")
+    for line in claims_report:
+        print(line)
+    with open(os.path.join(args.out, "claims.txt"), "w") as f:
+        f.write("\n".join(claims_report) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""Split-serving microbench (beyond-paper): MCSA split execution on a
+transformer LM — device-prefix/edge-suffix wall time and shipped-payload
+size per split point, CPU-scale reduced config.
+
+This grounds the Li-GD profile tables in the executable model: the
+planner's w_s (shipped bits) is exactly the engine's transfer tensor.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as tfm
+from repro.runtime.meshenv import CPU_ENV as env
+from repro.serving.split import SplitServer, activation_bits
+
+from .common import csv_row
+
+
+def run() -> List[str]:
+    rows = []
+    cfg = reduced(get_config("qwen3-8b"), layers=4)
+    params, _ = tfm.init_lm(cfg, jax.random.PRNGKey(0), env)
+    server = SplitServer(cfg, params, env)
+    B, S, N = 1, 32, 8
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                             cfg.vocab_size)
+    for split in range(cfg.num_layers + 1):
+        out = server.generate(tok, split, max_new=N)     # compile+run
+        t0 = time.perf_counter()
+        out = server.generate(tok, split, max_new=N)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        rows.append(csv_row("split_serving", f"split{split}", "mcsa",
+                            "ms_per_8tok", dt * 1e3))
+        rows.append(csv_row("split_serving", f"split{split}", "mcsa",
+                            "payload_kbits",
+                            activation_bits(cfg, B, 1) / 1e3))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,78 @@
+"""Quickstart: the paper's MCSA pipeline end-to-end in ~60 seconds on CPU.
+
+  1. build an edge network (N APs, Z < N edge servers, multi-hop);
+  2. profile a DNN (VGG16's per-layer FLOPs / activation sizes);
+  3. run Li-GD: jointly pick each user's split point s, bandwidth B and
+     edge-compute units r (paper Algorithm 1);
+  4. compare against Device-Only / Edge-Only / Neurosurgeon / DNN-Surgery;
+  5. move the users; on an edge-server handoff run MLi-GD (Algorithm 2):
+     re-split against the new server vs relay traffic back.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.chain_cnns import vgg16
+from repro.core.costs import DeviceParams
+from repro.core.ligd import LiGDConfig
+from repro.core.mobility import RandomWaypointMobility
+from repro.core.network import build_topology
+from repro.core.planner import MCSAPlanner
+from repro.core.profile import profile_of
+
+
+def main():
+    # 1. network: 16 APs, 4 edge servers, fiber backhaul, multi-hop relays
+    topo = build_topology(num_aps=16, num_servers=4, seed=0)
+    print(f"topology: {topo.num_aps} APs, {topo.num_servers} servers, "
+          f"max hops {int(topo.hops.min(1).max())}")
+
+    # 2. model profile (the f_l / f_e / w_s tables of paper Eq. 18)
+    profile = profile_of(vgg16())
+    print(f"model: {profile.name}, {profile.num_layers} layers, "
+          f"{profile.flops.sum() / 1e9:.2f} GFLOPs")
+
+    # 3. users + Li-GD plan
+    rng = np.random.default_rng(0)
+    devices = [DeviceParams(c_dev=float(rng.uniform(3e9, 6e9)))
+               for _ in range(6)]
+    planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=300))
+    mob = RandomWaypointMobility(topo, len(devices), seed=1,
+                                 speed_range=(5.0, 25.0))
+    aps = topo.nearest_ap(mob.positions())
+    res, servers, plans = planner.plan_static(devices, aps)
+    print("\n== Li-GD plan (per user) ==")
+    for i, p in enumerate(plans):
+        print(f"  user{i}: server {p.server}  split s={p.split:2d}  "
+              f"B={p.B / 1e6:5.2f} MHz  r={p.r:4.1f}  "
+              f"T={p.T * 1e3:6.1f} ms  E={p.E * 1e3:6.1f} mJ")
+
+    # 4. baselines
+    print("\n== baselines (mean over users) ==")
+    for name in ("device_only", "edge_only", "neurosurgeon", "dnn_surgery"):
+        b = planner.run_baseline(name, devices, aps)
+        print(f"  {name:13s} T={float(np.mean(b.T)) * 1e3:7.1f} ms  "
+              f"E={float(np.mean(b.E)) * 1e3:6.1f} mJ  "
+              f"C=${float(np.mean(b.C)):.6f}/round")
+    print(f"  {'mcsa':13s} T={float(np.mean(res.T)) * 1e3:7.1f} ms  "
+          f"E={float(np.mean(res.E)) * 1e3:6.1f} mJ  "
+          f"C=${float(np.mean(res.C)):.6f}/round")
+
+    # 5. mobility: run the waypoint model until somebody changes servers
+    print("\n== mobility (MLi-GD handoff decisions) ==")
+    t, events = 0.0, []
+    while not events and t < 3600:
+        events = mob.step(10.0, t)
+        t += 10.0
+    planner.on_handoffs(events, devices, plans)
+    for ev in events:
+        p = plans[ev.user]
+        action = "relay-back" if p.R else "re-split"
+        print(f"  t={ev.t:5.0f}s user{ev.user}: server "
+              f"{ev.old_server}->{ev.new_server}  decision={action}  "
+              f"split={p.split}  T={p.T * 1e3:.1f} ms")
+    print("\ndone.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a ~100M-parameter qwen3-family model for a few hundred steps on
+CPU, with checkpointing + preemption + restart-safe resume (deliverable b:
+the end-to-end training driver).
+
+Runs the SAME code path as the production launcher (launch/train.py) —
+this wrapper just picks CPU-sized knobs and simulates one preemption.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import shutil
+import tempfile
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="mcsa_100m_")
+    common = ["--arch", "qwen3-8b", "--size", "100m",
+              "--steps", str(args.steps), "--seq", str(args.seq),
+              "--batch", str(args.batch), "--ckpt-dir", ckpt_dir,
+              "--ckpt-every", "25", "--log-every", "10"]
+    try:
+        print("== phase 1: train until 'preemption' at half way ==")
+        train_driver.main(common + ["--stop-after",
+                                    str(args.steps // 2), "--resume"])
+        print("\n== phase 2: restart, resume from checkpoint, finish ==")
+        train_driver.main(common + ["--resume"])
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Config registry: ``get_config("<arch-id>")`` / ``--arch`` resolution."""
+from __future__ import annotations
+
+from .base import (
+    ALL_CELLS, ATTN_GLOBAL, ATTN_LOCAL, CELLS_BY_NAME, DECODE_32K, LONG_500K,
+    PREFILL_32K, RGLRU, RWKV6, TRAIN_4K, ModelConfig, ShapeCell, reduced,
+    supports_cell,
+)
+from .archs import ARCH_BUILDERS
+from .chain_cnns import CNN_BUILDERS
+
+_REGISTRY = dict(ARCH_BUILDERS)
+_REGISTRY.update(CNN_BUILDERS)
+
+ARCH_IDS = tuple(sorted(ARCH_BUILDERS))
+CNN_IDS = tuple(sorted(CNN_BUILDERS))
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}") from None
+
+
+def get_cell(name: str) -> ShapeCell:
+    return CELLS_BY_NAME[name]
+
+
+__all__ = [
+    "ALL_CELLS", "ARCH_IDS", "CNN_IDS", "CELLS_BY_NAME", "ModelConfig",
+    "ShapeCell", "get_config", "get_cell", "reduced", "supports_cell",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "ATTN_GLOBAL", "ATTN_LOCAL", "RGLRU", "RWKV6",
+]

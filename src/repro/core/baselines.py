@@ -1,0 +1,129 @@
+"""Comparison baselines from the paper's §6: Device-Only, Edge-Only,
+Neurosurgeon [29], and DNN-Surgery/DADS [14].
+
+None of these optimize the (B, r) allocation — that is MCSA's contribution.
+They receive a *static* fair allocation: bandwidth at the box midpoint and
+compute units proportional to the offloaded model fraction,
+
+    r_base(s) = r_min + (r_max - r_min) · f_e(s)/f_total,
+
+so Edge-Only (s=0) rents the most units (matching the paper's "Edge-Only
+renting cost is the highest") and partial offloads rent proportionally.
+DNN-Surgery additionally caps the rentable units (its resource-limitation
+assumption), making it slightly slower but cheaper than Neurosurgeon —
+exactly the orderings in Figs. 3–8.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costs import LayerProfile, utility
+
+
+class BaselineResult(NamedTuple):
+    split: jnp.ndarray
+    B: jnp.ndarray
+    r: jnp.ndarray
+    U: jnp.ndarray
+    T: jnp.ndarray
+    E: jnp.ndarray
+    C: jnp.ndarray
+
+
+def _tables(profile: LayerProfile):
+    f_l, f_e, w = profile.prefix_tables()
+    return (jnp.asarray(f_l, jnp.float32), jnp.asarray(f_e, jnp.float32),
+            jnp.asarray(w, jnp.float32),
+            jnp.asarray(profile.result_bits, jnp.float32))
+
+
+def _default_B(edge):
+    """Latency-greedy baselines grab the full bandwidth: they optimize
+    nothing and are cost-oblivious (this is exactly what MCSA's
+    renting-cost objective trades against — Figs. 5/8)."""
+    return edge["B_max"]
+
+
+def _r_base(edge, f_e, f_total, cap=None):
+    r = edge["r_min"] + (edge["r_max"] - edge["r_min"]) * f_e / f_total
+    if cap is not None:
+        r = jnp.minimum(r, cap)
+    return jnp.clip(r, edge["r_min"], edge["r_max"])
+
+
+def eval_split(profile: LayerProfile, dev, edge, s, B, r) -> BaselineResult:
+    f_l, f_e, w, m = _tables(profile)
+    U, (T, E, C) = utility(dev, edge, f_l[s], f_e[s], w[s], m, B, r)
+    return BaselineResult(split=jnp.asarray(s), B=B, r=r, U=U, T=T, E=E, C=C)
+
+
+def device_only(profile: LayerProfile, dev, edge) -> BaselineResult:
+    M = profile.num_layers
+    return eval_split(profile, dev, edge, M, _default_B(edge),
+                      edge["r_min"])
+
+
+def edge_only(profile: LayerProfile, dev, edge) -> BaselineResult:
+    return eval_split(profile, dev, edge, 0, _default_B(edge),
+                      edge["r_max"])
+
+
+def _min_latency_split(profile: LayerProfile, dev, edge, cap=None
+                       ) -> BaselineResult:
+    f_l, f_e, w, m = _tables(profile)
+    f_total = f_l[-1]
+    B = _default_B(edge)
+
+    def per_split(s):
+        r = _r_base(edge, f_e[s], f_total, cap)
+        U, (T, E, C) = utility(dev, edge, f_l[s], f_e[s], w[s], m, B, r)
+        return T, (U, E, C, r)
+
+    s_all = jnp.arange(profile.num_layers + 1)
+    T_all, (U_all, E_all, C_all, r_all) = jax.vmap(per_split)(s_all)
+    best = jnp.argmin(T_all)                    # latency-only objective
+    return BaselineResult(split=best, B=B, r=r_all[best], U=U_all[best],
+                          T=T_all[best], E=E_all[best], C=C_all[best])
+
+
+def neurosurgeon(profile: LayerProfile, dev, edge) -> BaselineResult:
+    """Latency-optimal single split, no allocation optimization [29]."""
+    return _min_latency_split(profile, dev, edge, cap=None)
+
+
+def dnn_surgery(profile: LayerProfile, dev, edge,
+                r_cap_frac: float = 0.5) -> BaselineResult:
+    """DNN-Surgery/DADS [14]: latency-optimal split under an edge
+    compute cap (resource-limited edge server)."""
+    cap = edge["r_min"] + r_cap_frac * (edge["r_max"] - edge["r_min"])
+    return _min_latency_split(profile, dev, edge, cap=cap)
+
+
+BASELINES = {
+    "device_only": device_only,
+    "edge_only": edge_only,
+    "neurosurgeon": neurosurgeon,
+    "dnn_surgery": dnn_surgery,
+}
+
+_CACHE: dict = {}
+
+
+def run_baseline_batch(name: str, profile: LayerProfile, devs, edge
+                       ) -> BaselineResult:
+    """vmap a baseline over users (devs leaves batched; edge shared or
+    batched)."""
+    edge_batched = jnp.ndim(next(iter(edge.values()))) > 0
+    key = (name, id(profile), edge_batched)
+    fn = _CACHE.get(key)
+    if fn is None:
+        base = BASELINES[name]
+        in_axes = (0, 0 if edge_batched else None)
+        fn = jax.jit(jax.vmap(lambda d, e: base(profile, d, e),
+                              in_axes=in_axes))
+        _CACHE[key] = fn
+    return fn(devs, edge)

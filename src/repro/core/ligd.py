@@ -1,0 +1,163 @@
+"""Li-GD: Loop-iteration Gradient Descent (paper Algorithm 1).
+
+The split point ``s`` is discrete, so a GD solve over the continuous
+(B, r) runs once per candidate split — but instead of cold-starting each
+solve, layer s+1's GD starts from layer s's optimum (adjacent layers have
+similar profiles, paper §4.1 "theory foundations").  Corollary 4: this cuts
+convergence time from M·K_cold to K_cold + Σ K_warm with K_warm ≪ K_cold.
+
+Implementation notes
+--------------------
+* Variables are optimized in normalized coordinates x ∈ [0,1]² with
+  projection (the paper's box constraints B∈[B_min,B_max], r∈[r_min,r_max]).
+* Gradients are exact ``jax.grad`` of the Eq. (19) utility (the paper's
+  closed forms (21)/(22) are its special case for λ(r)=r, g(B)=B^γ; tests
+  check our autodiff against the paper's analytic ∂U/∂B form).
+* The layer loop is a ``lax.scan`` carrying the warm start; the inner GD is
+  a ``lax.while_loop`` with the paper's stopping rules (‖g‖<ε, |ΔU|<ε,
+  ‖Δx‖<ε, k>K_max).  Everything vmaps over users.
+* ``warm_start=False`` reproduces the baseline "repeat plain GD M times"
+  that Corollary 4 compares against (benchmarks/ligd_convergence.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costs import LayerProfile, utility
+
+
+@dataclasses.dataclass(frozen=True)
+class LiGDConfig:
+    lr: float = 0.15             # step size λ (normalized coordinates)
+    eps: float = 1e-5            # accuracy threshold ε
+    max_iters: int = 400         # per-layer iteration cap
+    init: Tuple[float, float] = (0.5, 0.5)   # cold-start (B, r) normalized
+    warm_start: bool = True      # Li-GD warm start (False = plain GD ×M)
+
+
+class LiGDResult(NamedTuple):
+    """Per-user solution (leading axes = vmap batch)."""
+    split: jnp.ndarray           # s* ∈ [0, M]
+    B: jnp.ndarray               # B* (Hz)
+    r: jnp.ndarray               # r* (units)
+    U: jnp.ndarray               # utility at optimum
+    T: jnp.ndarray               # delay at optimum (s)
+    E: jnp.ndarray               # device energy (J)
+    C: jnp.ndarray               # renting cost per round ($)
+    iters_per_layer: jnp.ndarray  # (M+1,) GD iterations per split
+    U_per_layer: jnp.ndarray     # (M+1,)
+    B_per_layer: jnp.ndarray     # (M+1,)
+    r_per_layer: jnp.ndarray     # (M+1,)
+
+
+def _denorm(edge, x):
+    B = edge["B_min"] + x[0] * (edge["B_max"] - edge["B_min"])
+    r = edge["r_min"] + x[1] * (edge["r_max"] - edge["r_min"])
+    return B, r
+
+
+def make_split_utility(dev, edge, f_l, f_e, w, m_bits):
+    """U(s, x) for normalized x; s indexes precomputed prefix tables."""
+    def u_fn(s, x):
+        B, r = _denorm(edge, x)
+        U, (T, E, C) = utility(dev, edge, f_l[s], f_e[s], w[s], m_bits,
+                               B, r)
+        return U, (T, E, C)
+    return u_fn
+
+
+def _gd_solve(u_scalar: Callable, x0, cfg: LiGDConfig):
+    """Projected GD with the paper's stopping rules.
+
+    u_scalar: x -> U.  Returns (x*, U*, iters)."""
+    grad_fn = jax.value_and_grad(u_scalar)
+
+    def cond(state):
+        x, u_prev, it, done = state
+        return jnp.logical_and(~done, it < cfg.max_iters)
+
+    def body(state):
+        x, u_prev, it, _ = state
+        u, g = grad_fn(x)
+        x_new = jnp.clip(x - cfg.lr * g, 0.0, 1.0)
+        u_new = u_scalar(x_new)
+        done = jnp.logical_or(
+            jnp.linalg.norm(g) < cfg.eps,
+            jnp.logical_or(jnp.abs(u_new - u_prev) < cfg.eps,
+                           jnp.max(jnp.abs(x_new - x)) < cfg.eps))
+        return (x_new, u_new, it + 1, done)
+
+    x0 = jnp.asarray(x0, jnp.float32)
+    u0 = u_scalar(x0)
+    x, u, it, _ = jax.lax.while_loop(
+        cond, body, (x0, u0, jnp.asarray(0, jnp.int32), jnp.asarray(False)))
+    return x, u, it
+
+
+def solve_ligd(profile: LayerProfile, dev, edge,
+               cfg: LiGDConfig = LiGDConfig()) -> LiGDResult:
+    """Solve one user's (s, B, r) — paper Algorithm 1.
+
+    dev/edge: dicts from costs.dev_dict / costs.edge_dict (leaves may carry
+    a leading batch axis under vmap)."""
+    f_l_np, f_e_np, w_np = profile.prefix_tables()
+    f_l = jnp.asarray(f_l_np, jnp.float32)
+    f_e = jnp.asarray(f_e_np, jnp.float32)
+    w = jnp.asarray(w_np, jnp.float32)
+    m_bits = jnp.asarray(profile.result_bits, jnp.float32)
+    M1 = len(f_l_np)                       # M + 1 split points (s = 0..M)
+    u_fn = make_split_utility(dev, edge, f_l, f_e, w, m_bits)
+
+    def layer_step(carry_x, s):
+        x0 = carry_x if cfg.warm_start else jnp.asarray(cfg.init, jnp.float32)
+        x, u, it = _gd_solve(lambda x: u_fn(s, x)[0], x0, cfg)
+        B, r = _denorm(edge, x)
+        return x, (u, B, r, it, x)
+
+    x_init = jnp.asarray(cfg.init, jnp.float32)
+    _, (U_all, B_all, r_all, iters, _) = jax.lax.scan(
+        layer_step, x_init, jnp.arange(M1))
+
+    best = jnp.argmin(U_all)
+    x_best = jnp.stack([
+        (B_all[best] - edge["B_min"]) / (edge["B_max"] - edge["B_min"]),
+        (r_all[best] - edge["r_min"]) / (edge["r_max"] - edge["r_min"])])
+    _, (T, E, C) = u_fn(best, x_best)
+    return LiGDResult(split=best, B=B_all[best], r=r_all[best],
+                      U=U_all[best], T=T, E=E, C=C,
+                      iters_per_layer=iters, U_per_layer=U_all,
+                      B_per_layer=B_all, r_per_layer=r_all)
+
+
+def solve_ligd_batch(profile: LayerProfile, devs, edge,
+                     cfg: LiGDConfig = LiGDConfig()) -> LiGDResult:
+    """vmap over users: ``devs`` leaves have a leading X axis; ``edge`` may
+    be shared (scalars) or per-user (leading X axis)."""
+    edge_batched = jnp.ndim(next(iter(edge.values()))) > 0
+    in_axes = (0, 0 if edge_batched else None)
+    fn = jax.vmap(lambda d, e: solve_ligd(profile, d, e, cfg),
+                  in_axes=in_axes)
+    return fn(devs, edge)
+
+
+_PROFILE_CACHE: dict = {}
+
+
+def solve_ligd_batch_jit(profile: LayerProfile, devs, edge,
+                         cfg: LiGDConfig = LiGDConfig()) -> LiGDResult:
+    """jit-cached batched solve (keyed by profile identity + cfg)."""
+    edge_batched = jnp.ndim(next(iter(edge.values()))) > 0
+    key = (id(profile), cfg, edge_batched)
+    fn = _PROFILE_CACHE.get(key)
+    if fn is None:
+        in_axes = (0, 0 if edge_batched else None)
+        fn = jax.jit(jax.vmap(lambda d, e: solve_ligd(profile, d, e, cfg),
+                              in_axes=in_axes))
+        _PROFILE_CACHE[key] = fn
+    return fn(devs, edge)

@@ -1,0 +1,165 @@
+"""MLi-GD: Mobility-aware Li-GD (paper Algorithm 2, §5).
+
+When a user moves into a new edge server's coverage it chooses between:
+  R=0  re-solve (s, B, r) against the NEW server (Li-GD, Eq. 18), or
+  R=1  keep the original split/server and relay the intermediate data back
+       over the new AP's allocated bandwidth B_back and H₂ backhaul hops
+       (Eq. 41–43).
+
+R ∈ {0,1} is relaxed to [0,1]; U = (1-R)·U₁ + R·U₂ is affine in R so the
+optimum sits at a vertex and the relaxation is exact (Corollary 7) — after
+the joint GD we evaluate both vertices and pick the min, which is also how
+the ε-approximation claim is realized.
+
+Variables: x = (B_norm, r_norm, R, B_back_norm) ∈ [0,1]⁴, optimized jointly
+with the same warm-started layer loop as Li-GD (only U₁ depends on s; U₂'s
+split is frozen at the original strategy, paper §5: "the model segmentation
+strategy in the second term does not change").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costs import LayerProfile, energy_compute, energy_transmit, rent_cost, \
+    shannon_rate, t_device, t_server, t_transmit, utility
+from .ligd import LiGDConfig, LiGDResult, _denorm, _gd_solve, \
+    make_split_utility
+
+
+class MLiGDResult(NamedTuple):
+    R: jnp.ndarray               # 0 = re-solve at new server, 1 = relay back
+    split: jnp.ndarray           # s* (new split if R=0, original if R=1)
+    B: jnp.ndarray               # bandwidth at the serving AP (Hz)
+    r: jnp.ndarray               # compute units at the serving server
+    U: jnp.ndarray
+    T: jnp.ndarray
+    E: jnp.ndarray
+    C: jnp.ndarray
+    U_recalc: jnp.ndarray        # vertex utilities (diagnostics)
+    U_back: jnp.ndarray
+    iters_per_layer: jnp.ndarray
+
+
+def u_transmit_back(dev, edge_new, orig, m_bits, B_back, hops_back):
+    """U₂ (Eq. 41–43): original device+edge terms are constant; only the
+    relay transmission through the new AP varies.
+
+    orig: dict with the frozen original strategy
+      {f_l, f_e, w (bits at original split), r (units), B (orig bandwidth),
+       rent (orig per-round rent $)}.
+    """
+    w = orig["w"]
+    T = (t_device(dev, orig["f_l"])
+         + t_server(dev, edge_new, orig["f_e"], orig["r"])
+         + (w + m_bits) / B_back
+         + hops_back * (w + m_bits) / edge_new["B_backhaul"])
+    E = (energy_compute(dev, orig["f_l"])
+         + energy_transmit(dev, edge_new, w, m_bits, B_back))
+    # original server rent is unchanged; the new AP's bandwidth is rented.
+    gB = edge_new["rho_B"] * jnp.power(
+        B_back / edge_new["B0"], edge_new["gamma_B"])
+    C = (orig["rent"] + gB) / dev["k_rounds"]
+    U = dev["w_T"] * T + dev["w_E"] * E + dev["w_C"] * C
+    return U, (T, E, C)
+
+
+def solve_mligd(profile: LayerProfile, dev, edge_new, orig, hops_back,
+                cfg: LiGDConfig = LiGDConfig()) -> MLiGDResult:
+    """Joint (s, B, r, R, B_back) solve for one user after a handoff.
+
+    edge_new: the NEW server's parameters (dev['hops'] must already be the
+    hop count to the new server).  hops_back: H₂ hops from the new AP back
+    to the ORIGINAL server.  orig: frozen original strategy (see
+    u_transmit_back).
+    """
+    f_l_np, f_e_np, w_np = profile.prefix_tables()
+    f_l = jnp.asarray(f_l_np, jnp.float32)
+    f_e = jnp.asarray(f_e_np, jnp.float32)
+    w = jnp.asarray(w_np, jnp.float32)
+    m_bits = jnp.asarray(profile.result_bits, jnp.float32)
+    M1 = len(f_l_np)
+    u1_fn = make_split_utility(dev, edge_new, f_l, f_e, w, m_bits)
+
+    def joint_u(s, x4):
+        u1, _ = u1_fn(s, x4[:2])
+        B_back = edge_new["B_min"] + x4[3] * (edge_new["B_max"]
+                                              - edge_new["B_min"])
+        u2, _ = u_transmit_back(dev, edge_new, orig, m_bits, B_back,
+                                hops_back)
+        R = x4[2]
+        return (1.0 - R) * u1 + R * u2
+
+    def layer_step(carry_x, s):
+        x0 = carry_x if cfg.warm_start else jnp.asarray(
+            (*cfg.init, 0.5, 0.5), jnp.float32)
+        x, u, it = _gd_solve(lambda x: joint_u(s, x), x0, cfg)
+        return x, (u, x, it)
+
+    x_init = jnp.asarray((*cfg.init, 0.5, 0.5), jnp.float32)
+    _, (U_all, X_all, iters) = jax.lax.scan(layer_step, x_init,
+                                            jnp.arange(M1))
+
+    # Corollary 7: evaluate both vertices of R with the solved continuous
+    # variables; the relaxation optimum is at one of them.
+    best_s = jnp.argmin(U_all)
+    x_best = X_all[best_s]
+    u1_star, (T1, E1, C1) = u1_fn(best_s, x_best[:2])
+    B_back = edge_new["B_min"] + x_best[3] * (edge_new["B_max"]
+                                              - edge_new["B_min"])
+    u2_star, (T2, E2, C2) = u_transmit_back(dev, edge_new, orig, m_bits,
+                                            B_back, hops_back)
+    take_back = u2_star < u1_star
+    B1, r1 = _denorm(edge_new, x_best[:2])
+    return MLiGDResult(
+        R=take_back.astype(jnp.int32),
+        split=jnp.where(take_back, orig["split"], best_s),
+        B=jnp.where(take_back, B_back, B1),
+        r=jnp.where(take_back, orig["r"], r1),
+        U=jnp.minimum(u1_star, u2_star),
+        T=jnp.where(take_back, T2, T1),
+        E=jnp.where(take_back, E2, E1),
+        C=jnp.where(take_back, C2, C1),
+        U_recalc=u1_star, U_back=u2_star,
+        iters_per_layer=iters)
+
+
+def orig_strategy_dict(profile: LayerProfile, edge_orig, res: LiGDResult):
+    """Freeze a Li-GD solution into the ``orig`` dict MLi-GD consumes."""
+    f_l_np, f_e_np, w_np = profile.prefix_tables()
+    f_l = jnp.asarray(f_l_np, jnp.float32)
+    f_e = jnp.asarray(f_e_np, jnp.float32)
+    w = jnp.asarray(w_np, jnp.float32)
+    s = res.split
+    return {
+        "split": s,
+        "f_l": f_l[s],
+        "f_e": f_e[s],
+        "w": w[s],
+        "r": res.r,
+        "B": res.B,
+        "rent": rent_cost(edge_orig, res.r, res.B),
+    }
+
+
+_CACHE: dict = {}
+
+
+def solve_mligd_batch_jit(profile: LayerProfile, devs, edge_new, origs,
+                          hops_back, cfg: LiGDConfig = LiGDConfig()
+                          ) -> MLiGDResult:
+    """vmap over users; edge_new may be shared or per-user batched."""
+    edge_batched = jnp.ndim(next(iter(edge_new.values()))) > 0
+    key = (id(profile), cfg, edge_batched)
+    fn = _CACHE.get(key)
+    if fn is None:
+        in_axes = (0, 0 if edge_batched else None, 0, 0)
+        fn = jax.jit(jax.vmap(
+            lambda d, e, o, h: solve_mligd(profile, d, e, o, h, cfg),
+            in_axes=in_axes))
+        _CACHE[key] = fn
+    return fn(devs, edge_new, origs, hops_back)

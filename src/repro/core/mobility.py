@@ -1,0 +1,83 @@
+"""User mobility: random-waypoint traces + handoff detection.
+
+The "model-mule" concept (paper §3): each mobile user carries the whole
+model; on entering a new edge server's coverage the MLi-GD decision is
+either re-split against the new server or relay back to the old one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .network import Topology
+
+
+@dataclasses.dataclass
+class UserState:
+    xy: np.ndarray               # (2,)
+    waypoint: np.ndarray         # (2,)
+    speed: float                 # m/s
+    ap: int
+    server: int
+
+
+@dataclasses.dataclass
+class HandoffEvent:
+    user: int
+    t: float
+    old_server: int
+    new_server: int
+    new_ap: int
+    hops_new: int                # user's AP -> new server
+    hops_back: int               # user's AP -> ORIGINAL server (H₂)
+
+
+class RandomWaypointMobility:
+    """Classic random-waypoint over the topology area."""
+
+    def __init__(self, topo: Topology, num_users: int, *,
+                 speed_range: Tuple[float, float] = (1.0, 15.0),
+                 seed: int = 0):
+        self.topo = topo
+        self.rng = np.random.default_rng(seed)
+        area = topo.ap_xy.max(0) * 1.05
+        self.area = area
+        self.users: List[UserState] = []
+        for _ in range(num_users):
+            xy = self.rng.uniform(0, 1, 2) * area
+            ap = int(topo.nearest_ap(xy))
+            self.users.append(UserState(
+                xy=xy, waypoint=self.rng.uniform(0, 1, 2) * area,
+                speed=float(self.rng.uniform(*speed_range)),
+                ap=ap, server=int(topo.ap_server[ap])))
+
+    def positions(self) -> np.ndarray:
+        return np.stack([u.xy for u in self.users])
+
+    def step(self, dt: float, t: float) -> List[HandoffEvent]:
+        """Advance all users by dt seconds; return handoff events."""
+        events: List[HandoffEvent] = []
+        for i, u in enumerate(self.users):
+            to_wp = u.waypoint - u.xy
+            dist = np.linalg.norm(to_wp)
+            travel = u.speed * dt
+            if travel >= dist:
+                u.xy = u.waypoint.copy()
+                u.waypoint = self.rng.uniform(0, 1, 2) * self.area
+                u.speed = float(self.rng.uniform(1.0, 15.0))
+            else:
+                u.xy = u.xy + to_wp / dist * travel
+            new_ap = int(self.topo.nearest_ap(u.xy))
+            if new_ap != u.ap:
+                new_server = int(self.topo.ap_server[new_ap])
+                if new_server != u.server:
+                    events.append(HandoffEvent(
+                        user=i, t=t, old_server=u.server,
+                        new_server=new_server, new_ap=new_ap,
+                        hops_new=int(self.topo.hops[new_ap, new_server]),
+                        hops_back=int(self.topo.hops[new_ap, u.server])))
+                    u.server = new_server
+                u.ap = new_ap
+        return events

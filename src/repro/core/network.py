@@ -1,0 +1,127 @@
+"""Edge network topology: N APs, Z < N edge servers, multi-hop relays.
+
+Faithful to the paper's §3 network model: APs connected by fiber backhaul;
+only Z of N APs host an edge server (deployment-cost constraint); each AP
+offloads to one server, reached over multi-hop AP relays; users attach to
+their nearest AP.  Hop counts H_i come from BFS shortest paths (the paper
+invokes Dijkstra on the unweighted AP graph — identical result).
+
+Pure numpy — topology is static control-plane state, not jitted compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .costs import EdgeParams
+
+
+@dataclasses.dataclass
+class Topology:
+    ap_xy: np.ndarray            # (N, 2) AP positions (meters)
+    adj: np.ndarray              # (N, N) bool adjacency (fiber links)
+    server_aps: np.ndarray       # (Z,) AP index hosting each server
+    ap_server: np.ndarray        # (N,) serving server id per AP
+    hops: np.ndarray             # (N, Z) AP->server hop counts
+    edges: List[EdgeParams]      # per-server parameters (heterogeneous!)
+    ap_radius: float             # user association radius
+
+    @property
+    def num_aps(self) -> int:
+        return len(self.ap_xy)
+
+    @property
+    def num_servers(self) -> int:
+        return len(self.server_aps)
+
+    # ------------------------------------------------------------------
+    def nearest_ap(self, xy: np.ndarray) -> np.ndarray:
+        """xy: (..., 2) user positions -> AP index."""
+        d = np.linalg.norm(xy[..., None, :] - self.ap_xy, axis=-1)
+        return np.argmin(d, axis=-1)
+
+    def serving_server(self, ap: np.ndarray) -> np.ndarray:
+        return self.ap_server[ap]
+
+    def hops_to(self, ap: np.ndarray, server: np.ndarray) -> np.ndarray:
+        return self.hops[ap, server]
+
+    def pathloss(self, xy: np.ndarray, ap: np.ndarray,
+                 exponent: float = 3.5, ref: float = 1.0) -> np.ndarray:
+        """Large-scale fading α_i^κ: distance-based path gain."""
+        d = np.linalg.norm(xy - self.ap_xy[ap], axis=-1)
+        return ref * np.power(np.maximum(d, 1.0), -exponent)
+
+
+def _bfs_hops(adj: np.ndarray, src: int) -> np.ndarray:
+    n = len(adj)
+    dist = np.full(n, np.inf)
+    dist[src] = 0
+    q = deque([src])
+    while q:
+        u = q.popleft()
+        for v in np.nonzero(adj[u])[0]:
+            if dist[v] == np.inf:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def build_topology(num_aps: int = 16, num_servers: int = 4, *,
+                   area: float = 2000.0, link_radius: Optional[float] = None,
+                   seed: int = 0,
+                   edge_params: Optional[Sequence[EdgeParams]] = None,
+                   heterogeneity: float = 0.5) -> Topology:
+    """Random-geometric AP graph + greedy server placement.
+
+    Server placement greedily minimizes the max AP→server hop distance —
+    a k-center heuristic standing in for the paper's [24] submodular
+    placement.  Per-server compute heterogeneity (±``heterogeneity``)
+    models the paper's "heterogeneity of edge servers".
+    """
+    rng = np.random.default_rng(seed)
+    grid = int(np.ceil(np.sqrt(num_aps)))
+    # jittered grid: connected, realistic AP deployment
+    cells = [(i, j) for i in range(grid) for j in range(grid)][:num_aps]
+    step = area / grid
+    ap_xy = np.array([[ (i + 0.5) * step, (j + 0.5) * step] for i, j in cells])
+    ap_xy += rng.uniform(-0.2 * step, 0.2 * step, ap_xy.shape)
+    if link_radius is None:
+        link_radius = 1.6 * step
+    d = np.linalg.norm(ap_xy[:, None] - ap_xy[None, :], axis=-1)
+    adj = (d < link_radius) & ~np.eye(num_aps, dtype=bool)
+    # ensure connectivity: link each isolated component to nearest AP
+    for _ in range(num_aps):
+        dist0 = _bfs_hops(adj, 0)
+        if np.all(np.isfinite(dist0)):
+            break
+        far = int(np.argmax(~np.isfinite(dist0)))
+        reach = np.nonzero(np.isfinite(dist0))[0]
+        nearest = reach[np.argmin(d[far, reach])]
+        adj[far, nearest] = adj[nearest, far] = True
+
+    # greedy k-center server placement on hop metric
+    all_hops = np.stack([_bfs_hops(adj, i) for i in range(num_aps)])
+    servers: List[int] = [int(np.argmin(all_hops.max(1)))]
+    while len(servers) < num_servers:
+        cover = np.min(all_hops[servers], axis=0)
+        servers.append(int(np.argmax(cover)))
+    server_aps = np.array(sorted(servers))
+
+    hops = all_hops[server_aps].T                       # (N, Z)
+    ap_server = np.argmin(hops, axis=1)                 # nearest server
+    if edge_params is None:
+        edge_params = []
+        for z in range(num_servers):
+            f = 1.0 + heterogeneity * (rng.uniform(-1, 1))
+            edge_params.append(EdgeParams(
+                c_min=50e9 * f,
+                rho_min=2e-4 / max(f, 0.25),
+                r_max=float(rng.choice([16, 32, 48])),
+            ))
+    return Topology(ap_xy=ap_xy, adj=adj, server_aps=server_aps,
+                    ap_server=ap_server, hops=hops,
+                    edges=list(edge_params), ap_radius=step)

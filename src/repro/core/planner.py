@@ -1,0 +1,131 @@
+"""MCSA planner: ties the Li-GD/MLi-GD solvers to a concrete network of
+users, APs, and heterogeneous edge servers (the full system of Fig. 1).
+
+Responsibilities:
+  * static planning — per-user (s, B, r) via batched Li-GD against each
+    user's serving edge server (grouped by server, solved vectorized);
+  * mobility — on handoff events, batched MLi-GD decisions (re-solve vs
+    relay-back), updating the user's strategy;
+  * strategy-calculation-time feedback — measured solver time feeds the
+    CBR term T_Ag/k of the *next* solve (Eq. 6/7's self-consistency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .baselines import run_baseline_batch
+from .costs import (DEV_FIELDS, DeviceParams, EdgeParams, LayerProfile,
+                    edge_dict, stack_devices, stack_edges)
+from .ligd import LiGDConfig, LiGDResult, solve_ligd_batch_jit
+from .mligd import MLiGDResult, orig_strategy_dict, solve_mligd_batch_jit
+from .mobility import HandoffEvent
+from .network import Topology
+
+
+@dataclasses.dataclass
+class UserPlan:
+    server: int
+    split: int
+    B: float
+    r: float
+    U: float
+    T: float
+    E: float
+    C: float
+    R: int = 0                    # last mobility decision
+
+
+class MCSAPlanner:
+    def __init__(self, profile: LayerProfile, topo: Topology,
+                 cfg: LiGDConfig = LiGDConfig(),
+                 per_iter_time: float = 5e-5):
+        self.profile = profile
+        self.topo = topo
+        self.cfg = cfg
+        self.per_iter_time = per_iter_time
+        self.t_ag_estimate = 0.0
+
+    # ------------------------------------------------------------------
+    def _edge_dicts_for(self, servers: np.ndarray) -> dict:
+        edges = [self.topo.edges[s] for s in servers]
+        return stack_edges(edges)
+
+    def plan_static(self, devices: Sequence[DeviceParams],
+                    user_aps: np.ndarray) -> tuple:
+        """Solve every user against its serving server.  Returns
+        (LiGDResult batched, servers, planned list)."""
+        servers = self.topo.ap_server[user_aps]
+        hops = self.topo.hops[user_aps, servers]
+        devs = [dataclasses.replace(d, hops=int(h),
+                                    t_ag=self.t_ag_estimate)
+                for d, h in zip(devices, hops)]
+        devs_s = stack_devices(devs)
+        edges_s = self._edge_dicts_for(servers)
+        t0 = time.perf_counter()
+        res = solve_ligd_batch_jit(self.profile, devs_s, edges_s, self.cfg)
+        jax.block_until_ready(res.U)
+        wall = time.perf_counter() - t0
+        # Eq. 6/7 feedback: observed per-user strategy time for future CBR.
+        iters = float(np.mean(np.sum(np.asarray(res.iters_per_layer), -1)))
+        self.t_ag_estimate = iters * self.per_iter_time
+        plans = [UserPlan(server=int(s), split=int(res.split[i]),
+                          B=float(res.B[i]), r=float(res.r[i]),
+                          U=float(res.U[i]), T=float(res.T[i]),
+                          E=float(res.E[i]), C=float(res.C[i]))
+                 for i, s in enumerate(servers)]
+        return res, servers, plans
+
+    # ------------------------------------------------------------------
+    def on_handoffs(self, events: List[HandoffEvent],
+                    devices: Sequence[DeviceParams],
+                    plans: List[UserPlan]) -> List[MLiGDResult]:
+        """Batched MLi-GD over this step's handoff events; updates plans."""
+        if not events:
+            return []
+        devs, edges_new, origs, hops_back = [], [], [], []
+        for ev in events:
+            d = devices[ev.user]
+            devs.append(dataclasses.replace(
+                d, hops=ev.hops_new, t_ag=self.t_ag_estimate))
+            edges_new.append(self.topo.edges[ev.new_server])
+            plan = plans[ev.user]
+            orig_edge = edge_dict(self.topo.edges[plan.server])
+            prev = LiGDResult(
+                split=jnp.asarray(plan.split), B=jnp.asarray(plan.B),
+                r=jnp.asarray(plan.r), U=jnp.asarray(plan.U),
+                T=jnp.asarray(plan.T), E=jnp.asarray(plan.E),
+                C=jnp.asarray(plan.C), iters_per_layer=jnp.zeros(1),
+                U_per_layer=jnp.zeros(1), B_per_layer=jnp.zeros(1),
+                r_per_layer=jnp.zeros(1))
+            origs.append(orig_strategy_dict(self.profile, orig_edge, prev))
+            hops_back.append(float(ev.hops_back))
+        devs_s = stack_devices(devs)
+        edges_s = stack_edges([e for e in edges_new])
+        origs_s = jax.tree.map(lambda *xs: jnp.stack(xs), *origs)
+        res = solve_mligd_batch_jit(self.profile, devs_s, edges_s, origs_s,
+                                    jnp.asarray(hops_back, jnp.float32),
+                                    self.cfg)
+        for i, ev in enumerate(events):
+            take_back = bool(res.R[i])
+            plans[ev.user] = UserPlan(
+                server=plans[ev.user].server if take_back else ev.new_server,
+                split=int(res.split[i]), B=float(res.B[i]),
+                r=float(res.r[i]), U=float(res.U[i]), T=float(res.T[i]),
+                E=float(res.E[i]), C=float(res.C[i]), R=int(res.R[i]))
+        return [res]
+
+    # ------------------------------------------------------------------
+    def run_baseline(self, name: str, devices: Sequence[DeviceParams],
+                     user_aps: np.ndarray):
+        servers = self.topo.ap_server[user_aps]
+        hops = self.topo.hops[user_aps, servers]
+        devs = [dataclasses.replace(d, hops=int(h))
+                for d, h in zip(devices, hops)]
+        return run_baseline_batch(name, self.profile, stack_devices(devs),
+                                  self._edge_dicts_for(servers))

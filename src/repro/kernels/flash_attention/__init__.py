@@ -1,0 +1,3 @@
+from .ops import flash_attention
+from .kernel import flash_attention_tpu
+from .ref import attention_ref

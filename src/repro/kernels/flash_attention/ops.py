@@ -1,0 +1,30 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, interpret-mode
+Pallas on CPU when requested, and exposes the (B, S, H, hd) layout the
+model code uses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_tpu
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512,
+                    force_pallas: bool = False):
+    """q: (B, S, Hq, hd) model layout; k/v: (B, S, Hkv, hd)."""
+    qh = q.swapaxes(1, 2)
+    kh = k.swapaxes(1, 2)
+    vh = v.swapaxes(1, 2)
+    if _on_tpu() or force_pallas:
+        out = flash_attention_tpu(qh, kh, vh, causal=causal, window=window,
+                                  q_block=q_block, kv_block=kv_block,
+                                  interpret=not _on_tpu())
+    else:
+        out = attention_ref(qh, kh, vh, causal=causal, window=window)
+    return out.swapaxes(1, 2)

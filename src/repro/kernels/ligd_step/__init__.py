@@ -1,0 +1,3 @@
+from .ops import ligd_steps
+from .kernel import edge_tuple_of, ligd_steps_tpu, pack_features
+from .ref import ligd_steps_ref

@@ -1,0 +1,141 @@
+"""Pallas-TPU batched Li-GD inner loop — the paper's compute hot-spot.
+
+The MCSA planner at an edge server solves (B, r) for EVERY attached user ×
+EVERY candidate split layer (X·M GD solves, Corollary 3's X·K̄·M cost).
+Each solve is a tiny independent optimization — an embarrassingly-parallel
+VPU workload, not an MXU one.  The TPU adaptation tiles users into
+(8×128)-lane VMEM blocks and runs K projected-GD steps IN KERNEL with the
+closed-form gradients (the paper's Eqs. 21–22 for our λ(r)=r^a,
+g(B)=ρ_B(B/B0)^γ), so the X·K HBM round-trips of a naive
+one-step-per-launch loop collapse to a single read of the feature block
+and a single write of the solution.
+
+Feature layout per user (NF = 16):
+  0:f_l  1:f_e  2:w_bits  3:m_bits  4:offloaded  5:c_dev  6:xi·c²·φ
+  7:p_tx  8:c1(=pαg/N0)  9:hops  10:k_rounds  11:t_ag  12:w_T  13:w_E
+  14:w_C  15:x0_B (warm start)   [16:x0_r packed in a second array]
+
+Edge scalars are compile-time-constant across a server's user batch and
+enter as kernel params (c_min, ρ, a, ρ_B, γ, B0, B_backhaul, bounds).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NF = 16
+LN2 = math.log(2.0)
+
+
+def _utility_terms(feat, xB, xr, ep):
+    """U and dU/d(xB, xr) in normalized coordinates — closed form."""
+    f_l, f_e, w, m, offl = (feat[..., i] for i in range(5))
+    c_dev, e_per_flop, p_tx, c1, hops, k_rounds, t_ag = (
+        feat[..., i] for i in range(5, 12))
+    wT, wE, wC = (feat[..., i] for i in range(12, 15))
+
+    B_span = ep["B_max"] - ep["B_min"]
+    r_span = ep["r_max"] - ep["r_min"]
+    B = ep["B_min"] + xB * B_span
+    r = ep["r_min"] + xr * r_span
+
+    wm = w + m
+    lam = jnp.power(r, ep["lam_a"])
+    q = c1 / ep["N0"]                              # pαg/N0
+    L = jnp.log1p(q / B) / LN2                     # log2(1 + pαg/(B·N0))
+    tau = B * L
+    gB = ep["rho_B"] * jnp.power(B / ep["B0"], ep["gamma_B"])
+
+    T = (f_l / c_dev
+         + offl * (f_e / (lam * ep["c_min"])
+                   + wm / B + hops * wm / ep["B_backhaul"])
+         + t_ag / k_rounds)
+    E = e_per_flop * f_l + offl * p_tx * wm / tau
+    C = offl * (r * ep["rho_min"] + gB) / k_rounds
+    U = wT * T + wE * E + wC * C
+
+    # dτ/dB = L - q / (ln2 · (B + q))
+    dtau = L - q / (LN2 * (B + q))
+    dU_dB = (wT * offl * (-wm / (B * B))
+             + wE * offl * p_tx * wm * (-dtau / (tau * tau))
+             + wC * offl * ep["rho_B"] * ep["gamma_B"]
+             * jnp.power(B / ep["B0"], ep["gamma_B"]) / (B * k_rounds))
+    dU_dr = (wT * offl * f_e / ep["c_min"]
+             * (-ep["lam_a"]) * jnp.power(r, -ep["lam_a"] - 1.0)
+             + wC * offl * ep["rho_min"] / k_rounds)
+    return U, dU_dB * B_span, dU_dr * r_span
+
+
+def _ligd_kernel(feat_ref, x0_ref, x_ref, u_ref, *, iters: int, lr: float,
+                 ep: dict):
+    feat = feat_ref[...].astype(jnp.float32)       # (xb, NF)
+    x = x0_ref[...].astype(jnp.float32)            # (xb, 2)
+
+    def step(_, x):
+        _, gB, gr = _utility_terms(feat, x[:, 0], x[:, 1], ep)
+        g = jnp.stack([gB, gr], axis=-1)
+        return jnp.clip(x - lr * g, 0.0, 1.0)
+
+    x = jax.lax.fori_loop(0, iters, step, x)
+    u, _, _ = _utility_terms(feat, x[:, 0], x[:, 1], ep)
+    x_ref[...] = x
+    u_ref[...] = u[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "iters", "lr", "user_block", "interpret", "edge_tuple"))
+def ligd_steps_tpu(feat, x0, *, edge_tuple, iters: int = 64,
+                   lr: float = 0.15, user_block: int = 1024,
+                   interpret: bool = False):
+    """feat: (X, NF) user features; x0: (X, 2) normalized warm starts.
+    edge_tuple: tuple of (name, value) edge constants.
+    Returns (x*: (X, 2), U*: (X,))."""
+    ep = dict(edge_tuple)
+    X = feat.shape[0]
+    xb = min(user_block, max(X, 8))
+    nb = pl.cdiv(X, xb)
+    kernel = functools.partial(_ligd_kernel, iters=iters, lr=lr, ep=ep)
+    x, u = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((xb, NF), lambda i: (i, 0)),
+            pl.BlockSpec((xb, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((xb, 2), lambda i: (i, 0)),
+            pl.BlockSpec((xb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((X, 2), jnp.float32),
+            jax.ShapeDtypeStruct((X, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+        name="mcsa_ligd_step",
+    )(feat, x0)
+    return x, u[:, 0]
+
+
+def pack_features(f_l, f_e, w, m, offl, dev: dict) -> jnp.ndarray:
+    """Assemble the (X, NF) feature matrix from batched device dicts."""
+    e_per_flop = dev["xi"] * dev["c_dev"] ** 2 * dev["phi"]
+    c1 = dev["p_tx"] * dev["alpha"] * dev["g_fade"]
+    cols = [f_l, f_e, w, m, offl, dev["c_dev"], e_per_flop, dev["p_tx"],
+            c1, dev["hops"], dev["k_rounds"], dev["t_ag"], dev["w_T"],
+            dev["w_E"], dev["w_C"], jnp.zeros_like(f_l)]
+    return jnp.stack([jnp.broadcast_to(c, f_l.shape) for c in cols], -1)
+
+
+def edge_tuple_of(edge: dict) -> tuple:
+    """Hashable edge constants for the kernel (per-server, static)."""
+    c1 = None
+    keys = ("B_min", "B_max", "r_min", "r_max", "lam_a", "c_min",
+            "rho_min", "rho_B", "gamma_B", "B0", "B_backhaul", "N0")
+    return tuple((k, float(edge[k])) for k in keys)

@@ -1,0 +1,16 @@
+"""Public wrapper for the batched Li-GD step kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import edge_tuple_of, ligd_steps_tpu, pack_features
+from .ref import ligd_steps_ref
+
+
+def ligd_steps(feat, x0, edge: dict, *, iters: int = 64, lr: float = 0.15,
+               force_pallas: bool = False):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return ligd_steps_tpu(feat, x0, edge_tuple=edge_tuple_of(edge),
+                              iters=iters, lr=lr,
+                              interpret=jax.default_backend() != "tpu")
+    return ligd_steps_ref(feat, x0, edge, iters=iters, lr=lr)

@@ -1,0 +1,39 @@
+"""Oracle for the Li-GD step kernel: autodiff gradient of the Eq. (19)
+utility (repro.core.costs.utility) + the same projected-GD loop.
+
+This doubles as the check that the kernel's closed-form gradients match
+the paper's analytic forms (Eqs. 21–22 generalized to λ(r)=r^a, convex g).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costs import utility
+
+
+def ligd_steps_ref(feat, x0, edge: dict, *, iters: int = 64, lr: float = 0.15):
+    """Same contract as kernel.ligd_steps_tpu, via jax.grad + vmap."""
+    def u_of(f, x):
+        dev = {
+            "c_dev": f[5], "xi": f[6] / jnp.maximum(f[5] ** 2, 1e-30),
+            "phi": jnp.asarray(1.0), "p_tx": f[7],
+            "alpha": f[8] / jnp.maximum(f[7], 1e-30),
+            "g_fade": jnp.asarray(1.0), "w_T": f[12], "w_E": f[13],
+            "w_C": f[14], "k_rounds": f[10], "t_ag": f[11], "hops": f[9],
+        }
+        B = edge["B_min"] + x[0] * (edge["B_max"] - edge["B_min"])
+        r = edge["r_min"] + x[1] * (edge["r_max"] - edge["r_min"])
+        U, _ = utility(dev, edge, f[0], f[1], f[2], f[3], B, r,
+                       offloaded=f[4])
+        return U
+
+    def solve_one(f, x):
+        def step(_, x):
+            g = jax.grad(lambda xx: u_of(f, xx))(x)
+            return jnp.clip(x - lr * g, 0.0, 1.0)
+        x = jax.lax.fori_loop(0, iters, step, x)
+        return x, u_of(f, x)
+
+    return jax.vmap(solve_one)(feat.astype(jnp.float32),
+                               x0.astype(jnp.float32))

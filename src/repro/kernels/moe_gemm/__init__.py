@@ -1,0 +1,3 @@
+from .ops import moe_swiglu
+from .kernel import moe_swiglu_tpu
+from .ref import moe_swiglu_ref

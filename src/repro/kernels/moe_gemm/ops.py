@@ -1,0 +1,14 @@
+"""Public wrapper: Pallas fused grouped SwiGLU on TPU, jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import moe_swiglu_tpu
+from .ref import moe_swiglu_ref
+
+
+def moe_swiglu(x, wg, wu, wd, *, force_pallas: bool = False):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return moe_swiglu_tpu(x, wg, wu, wd,
+                              interpret=jax.default_backend() != "tpu")
+    return moe_swiglu_ref(x, wg, wu, wd)

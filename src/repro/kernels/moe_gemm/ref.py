@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused grouped expert SwiGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_swiglu_ref(x, wg, wu, wd):
+    """x: (E, C, d); wg/wu: (E, d, ff); wd: (E, ff, d) -> (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   wg.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   wu.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(jnp.float32))
+    return y.astype(x.dtype)

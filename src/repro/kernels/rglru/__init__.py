@@ -1,0 +1,3 @@
+from .ops import rglru_scan
+from .kernel import rglru_scan_tpu
+from .ref import rglru_scan_ref

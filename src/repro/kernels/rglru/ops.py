@@ -1,0 +1,16 @@
+"""Public wrapper for the RG-LRU scan: Pallas on TPU, associative_scan
+fallback elsewhere (see repro.models.rglru.rglru_scan for the model-side
+formulation that computes (a, b) from gates)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rglru_scan_tpu
+from .ref import rglru_scan_ref
+
+
+def rglru_scan(a, b, *, force_pallas: bool = False, chunk: int = 256):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return rglru_scan_tpu(a, b, chunk=chunk,
+                              interpret=jax.default_backend() != "tpu")
+    return rglru_scan_ref(a, b)

@@ -1,0 +1,20 @@
+"""Per-step oracle for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t ⊙ h_{t-1} + b_t, h_0 = b_0 (zero initial state).
+    a, b: (B, S, C) -> (B, S, C)."""
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    a32 = a.astype(jnp.float32).swapaxes(0, 1)
+    b32 = b.astype(jnp.float32).swapaxes(0, 1)
+    h0 = jnp.zeros_like(b32[0])
+    _, hs = jax.lax.scan(step, h0, (a32, b32))
+    return hs.swapaxes(0, 1).astype(a.dtype)

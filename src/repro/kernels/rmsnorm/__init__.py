@@ -1,0 +1,3 @@
+from .ops import rmsnorm
+from .kernel import rmsnorm_tpu
+from .ref import rmsnorm_ref

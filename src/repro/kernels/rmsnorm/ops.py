@@ -1,0 +1,14 @@
+"""Public wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rmsnorm_tpu
+from .ref import rmsnorm_ref
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, force_pallas: bool = False):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return rmsnorm_tpu(x, w, eps=eps,
+                           interpret=jax.default_backend() != "tpu")
+    return rmsnorm_ref(x, w, eps)

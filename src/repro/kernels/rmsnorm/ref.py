@@ -1,0 +1,2 @@
+"""Oracle: repro.models.layers.rms_norm."""
+from repro.models.layers import rms_norm as rmsnorm_ref  # noqa: F401

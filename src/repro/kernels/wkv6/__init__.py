@@ -1,0 +1,3 @@
+from .ops import wkv6
+from .kernel import wkv6_tpu
+from .ref import wkv6_ref

@@ -1,0 +1,14 @@
+"""Public wrapper for WKV6: Pallas on TPU, lax.scan elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import wkv6_tpu
+from .ref import wkv6_ref
+
+
+def wkv6(r, k, v, w, u, *, force_pallas: bool = False, chunk: int = 128):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return wkv6_tpu(r, k, v, w, u, chunk=chunk,
+                        interpret=jax.default_backend() != "tpu")
+    return wkv6_ref(r, k, v, w, u)

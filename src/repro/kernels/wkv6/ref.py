@@ -1,0 +1,25 @@
+"""Per-step oracle for WKV6 (head-major layout), mirroring
+repro.models.rwkv.wkv6_scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B, H, S, n); u: (H, n) -> y (B, H, S, n) f32."""
+    B, H, S, n = r.shape
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                       # (B, H, n)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        y = y + vt * jnp.sum(rt * (u * kt), axis=-1, keepdims=True)
+        s = wt[..., None] * s + kt[..., None] * vt[:, :, None, :]
+        return s, y
+
+    xs = (r32.transpose(2, 0, 1, 3), k32.transpose(2, 0, 1, 3),
+          v32.transpose(2, 0, 1, 3), w32.transpose(2, 0, 1, 3))
+    s0 = jnp.zeros((B, H, n, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 2, 0, 3)

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first backend init).  This module is the ONLY place the 512
+# placeholder devices exist — tests/benches see the real single CPU device.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input-shape × mesh) combination this lowers and
+compiles the cell's step function against the production mesh —
+``(16, 16) = 256 chips`` single-pod and ``(2, 16, 16) = 512 chips``
+multi-pod — and records:
+
+  * ``compiled.memory_analysis()``   (per-device bytes: proves it fits)
+  * ``compiled.cost_analysis()``     (per-device FLOPs / HBM bytes)
+  * collective traffic parsed from the post-SPMD HLO (hlo_stats)
+  * the derived roofline terms (roofline)
+
+Results land in ``experiments/dryrun/<arch>__<cell>__<mesh>.json`` and a
+``summary.csv``; EXPERIMENTS.md §Dry-run / §Roofline are generated from
+them by ``benchmarks/roofline_report.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --cell all \
+      --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ALL_CELLS, ARCH_IDS, get_cell, get_config,
+                           supports_cell)
+from repro.launch import hlo_stats, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.runtime.meshenv import make_env
+from repro.runtime.train import TrainConfig
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c) if c else {}
+
+
+def _memory_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(m)
+    return out
+
+
+def _truncated(cfg, dec_sb: int, enc_sb: int = 1):
+    """Same-family config with ``dec_sb`` decoder superblocks (+ the full
+    model's tail remainder, so probe and full model share the same
+    out-of-loop structure) and ``enc_sb`` encoder layers."""
+    period = len(cfg.pattern)
+    rem = cfg.num_layers % period
+    kw = dict(num_layers=rem + period * dec_sb)
+    if cfg.enc_dec:
+        kw["num_enc_layers"] = enc_sb
+    return dataclasses.replace(cfg, **kw)
+
+
+def probe_costs(cfg, cell, env, tcfg) -> dict:
+    """Exact per-device flops/bytes by depth extrapolation.
+
+    XLA's cost analysis counts while-loop bodies ONCE, so the full scanned
+    program under-reports loop work.  Superblocks are identical by
+    construction, so cost is affine in superblock count: compile UNROLLED
+    truncated models at 1 and 2 superblocks (and 1/2 encoder layers for
+    enc-dec) and extrapolate.  Exact up to fusion boundary differences.
+    """
+    period = len(cfg.pattern)
+    n_dec = cfg.num_layers // period
+    points = {}
+    probes = [(1, 1), (2, 1)] + ([(1, 2)] if cfg.enc_dec else [])
+    for dec_sb, enc_sb in probes:
+        pc = _truncated(cfg, dec_sb, enc_sb)
+        prog = build_cell(pc, env, cell, tcfg, unroll=True)
+        compiled = prog.lower().compile()
+        points[(dec_sb, enc_sb)] = _cost_dict(compiled)
+
+    out = {}
+    for key in ("flops", "bytes accessed"):
+        f11 = float(points[(1, 1)].get(key, 0.0))
+        f21 = float(points[(2, 1)].get(key, 0.0))
+        val = f11 + (f21 - f11) * (n_dec - 1)
+        if cfg.enc_dec:
+            f12 = float(points[(1, 2)].get(key, 0.0))
+            val += (f12 - f11) * (cfg.num_enc_layers - 1)
+        out[key] = val
+    out["probe_points"] = {f"{k}": {kk: float(vv) for kk, vv in v.items()
+                                    if isinstance(vv, (int, float))}
+                           for k, v in points.items()}
+    return out
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, *,
+             unroll: bool = False, tcfg: TrainConfig = TrainConfig(),
+             save_hlo: bool = False, probe: bool = True) -> dict:
+    """Lower + compile one cell on one mesh; return the report dict.
+
+    Full-depth program compiles with the superblock scan (fast compile,
+    realistic memory_analysis, trip-corrected collectives); exact
+    flops/bytes come from truncated unrolled probes (``probe_costs``).
+    """
+    cfg = get_config(arch)
+    cell = get_cell(cell_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "cell": cell_name, "mesh": mesh_name,
+           "status": "ok"}
+    if not supports_cell(cfg, cell):
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention arch on 500k decode cell "
+                         "(sub-quadratic required; DESIGN.md §Skips)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    env = make_env(
+        mesh, context_parallel_attn=tcfg.context_parallel_attention)
+    chips = mesh.size
+
+    t0 = time.time()
+    prog = build_cell(cfg, env, cell, tcfg, unroll=unroll)
+    with mesh:
+        lowered = prog.lower()
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        cost = _cost_dict(compiled)
+        if probe:
+            ex = probe_costs(cfg, cell, env, tcfg)
+            cost_scan = dict(cost)
+            cost = {"flops": ex["flops"],
+                    "bytes accessed": ex["bytes accessed"]}
+            rec["cost_analysis_scan"] = {
+                k: float(v) for k, v in cost_scan.items()
+                if isinstance(v, (int, float))}
+            rec["probe_points"] = ex["probe_points"]
+
+    mem = _memory_dict(compiled)
+    hlo = compiled.as_text()
+    stats = hlo_stats.collect_stats(hlo, chips)
+    kv_b = 1.25 if tcfg.kv_quant_serving else 2.0   # int8 + f32/row scales
+    rl = roofline.derive(cfg, cell, cost, stats, chips,
+                         tp=env.tp, dp=env.dp, kv_elem_bytes=kv_b)
+
+    rec.update(
+        kind=prog.kind, chips=chips, lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2), unrolled=unroll,
+        memory_analysis=mem,
+        cost_analysis={k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float))},
+        collectives={"bytes_by_kind": stats.bytes_by_kind,
+                     "counts": stats.counts,
+                     "total_bytes": stats.total_bytes,
+                     "link_bytes": stats.link_bytes,
+                     "summary": stats.summary()},
+        roofline=rl.row(),
+        roofline_step_s=rl.step_time_s,
+        mfu=rl.mfu,
+        hlo_bytes=len(hlo),
+    )
+    if save_hlo:
+        rec["hlo_text"] = hlo
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="comma-separated arch ids or 'all'")
+    ap.add_argument("--cell", default="all",
+                    help="comma-separated cell names or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll the full-depth program too "
+                         "(slow compile; probes already give exact costs)")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the truncated-depth cost probes")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--triangular", action="store_true",
+                    help="§Perf flag: statically-skipped causal kv blocks")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    cells = ([c.name for c in ALL_CELLS] if args.cell == "all"
+             else args.cell.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    tcfg = TrainConfig(triangular_attention=args.triangular)
+
+    failures = []
+    for arch in archs:
+        for cell in cells:
+            for multi in meshes:
+                tag = f"{arch}__{cell}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, cell, multi, unroll=args.unroll,
+                                   probe=not args.no_probe, tcfg=tcfg)
+                except Exception as e:                 # noqa: BLE001
+                    rec = {"arch": arch, "cell": cell,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    rl = rec["roofline"]
+                    print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                          f"compute={rl['compute_s']*1e3:.2f}ms "
+                          f"memory={rl['memory_s']*1e3:.2f}ms "
+                          f"collective={rl['collective_link_s']*1e3:.2f}ms "
+                          f"bottleneck={rl['bottleneck']} "
+                          f"mfu={rec['mfu']:.3f}")
+                elif rec["status"] == "skipped":
+                    print(f"[skipped] {tag}: {rec['reason']}")
+                else:
+                    print(f"[ERROR] {tag}: {rec['error']}")
+                sys.stdout.flush()
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        return 1
+    print("\nAll requested dry-run cells compiled.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,207 @@
+"""Collective-traffic extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+traffic, so the roofline's third term is derived here: parse the per-device
+HLO module, find every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, and sum operand sizes.
+
+Two subtleties handled:
+
+* **While loops.** ``lax.scan`` bodies appear once in the module but
+  execute trip-count times.  We build the computation call graph
+  (while/call/conditional), read XLA's ``known_trip_count`` annotations,
+  and multiply nested collective bytes accordingly.  (The dry-run can also
+  compile with ``--unroll`` so that even FLOP counts need no correction.)
+* **Link-traffic weighting.**  Reported ``bytes`` are the sum of operand
+  shapes (what the formula ``collective_bytes / (chips · link_bw)``
+  consumes).  ``link_bytes`` additionally weights each op by its ring-cost
+  factor on an N-device ring — all-reduce moves 2(N-1)/N × size per link,
+  all-gather/reduce-scatter (N-1)/N ×, all-to-all (N-1)/N ×, permute 1× —
+  which is the physically meaningful per-link load used in §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?"
+                          r"\s*->.*\{\s*$")
+_CALL_RE = re.compile(
+    r"\b(?:body|condition|to_apply|branch_computations|called_computations)"
+    r"=(\{[^}]*\}|%?[\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.+)$")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        w = _DTYPE_BYTES.get(dtype)
+        if w is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * w
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int                 # operand bytes (per device)
+    computation: str
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: List[CollectiveOp]
+    bytes_by_kind: Dict[str, int]       # trip-count-weighted operand bytes
+    total_bytes: int
+    link_bytes: float                   # ring-weighted per-link traffic
+    counts: Dict[str, int]
+
+    def summary(self) -> str:
+        parts = [f"{k}: {v / 1e6:.1f} MB ×{self.counts.get(k, 0)}"
+                 for k, v in sorted(self.bytes_by_kind.items()) if v]
+        return "; ".join(parts) or "none"
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0                           # collective-permute
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    depth = 0
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    """Participant count from replica_groups annotation (best effort)."""
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:                                # [groups, size] iota form
+        return int(m.group(2))
+    return max(total_devices, 2)
+
+
+def collect_stats(hlo: str, total_devices: int) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    # Call graph with trip counts (finditer: a while line carries BOTH
+    # condition= and body= — every referenced computation must be linked).
+    calls: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            matches = list(_CALL_RE.finditer(line))
+            if not matches:
+                continue
+            trip = 1
+            if " while(" in line or "= while(" in line:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+            for m in matches:
+                blob = m.group(1).strip("{}")
+                for target in re.split(r",\s*", blob):
+                    target = target.strip().lstrip("%")
+                    if target in comps:
+                        calls[cname].append((target, trip))
+
+    # Execution multiplicity per computation (entry = 1).
+    entry = None
+    for cname in comps:
+        if re.search(rf"ENTRY\s+%?{re.escape(cname)}\b", hlo):
+            entry = cname
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+
+    def walk(c: str, m: float, seen: Tuple[str, ...]):
+        if c in seen:                      # defensive: HLO has no recursion
+            return
+        mult[c] = mult.get(c, 0.0) + m
+        for tgt, trip in calls.get(c, []):
+            walk(tgt, m * max(trip, 1), seen + (c,))
+
+    if entry is not None:
+        walk(entry, 1.0, ())
+
+    ops: List[CollectiveOp] = []
+    bytes_by_kind: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    link_bytes = 0.0
+    opcode_re = re.compile(
+        r"\b(" + "|".join(COLLECTIVE_KINDS) + r")(-start|-done)?\(")
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            rhs = om.group(1)
+            km = opcode_re.search(rhs)
+            if not km:
+                continue
+            kind, suffix = km.group(1), km.group(2)
+            if suffix == "-done":          # async pair: count -start only
+                continue
+            # Post-optimization HLO prints operands WITHOUT shapes; the
+            # OUTPUT shape precedes the opcode.  Convert output -> moved
+            # buffer size per kind (reduce-scatter's input is N× output;
+            # the others move ~the output size).
+            out_b = shape_bytes(rhs[:km.start()])
+            n = _group_size(line, total_devices)
+            b = out_b * n if kind == "reduce-scatter" else out_b
+            eff = int(b * m)
+            ops.append(CollectiveOp(kind=kind, bytes=eff, computation=cname,
+                                    line=line.strip()[:200]))
+            bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + eff
+            counts[kind] = counts.get(kind, 0) + int(m)
+            link_bytes += eff * _ring_factor(kind, n)
+
+    return CollectiveStats(ops=ops, bytes_by_kind=bytes_by_kind,
+                           total_bytes=sum(bytes_by_kind.values()),
+                           link_bytes=link_bytes, counts=counts)

@@ -1,0 +1,54 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init and then calls it; tests and benchmarks import freely and see one CPU
+device.
+
+Mesh axes:
+  * single-pod:  (16, 16)      -> ("data", "model")
+  * multi-pod:   (2, 16, 16)   -> ("pod", "data", "model")
+
+"pod" and "data" are both batch axes (MeshEnv groups them); "model" carries
+tensor/expert/sequence parallelism.  On a real TPU v5e deployment the
+"model" axis maps to the pod's minor ICI dimension (highest bandwidth), the
+"data" axis to the major ICI dimension, and "pod" to DCN.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests / elastic rescale)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(max_model: int = 1) -> Optional[Mesh]:
+    """Best-effort mesh over whatever devices exist (examples on CPU).
+    Returns None when there is a single device (pure single-device path)."""
+    n = jax.device_count()
+    if n <= 1:
+        return None
+    model = 1
+    for cand in range(min(max_model, n), 0, -1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Hardware constants for the roofline analysis (TPU v5e per chip).
+PEAK_BF16_FLOPS = 197e12          # 197 TFLOP/s
+HBM_BW = 819e9                    # 819 GB/s
+ICI_BW = 50e9                     # ~50 GB/s per link

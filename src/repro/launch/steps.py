@@ -1,0 +1,260 @@
+"""Cell programs: (architecture × input-shape) -> jit-able step + shardings.
+
+One :class:`CellProgram` fully describes what the launcher compiles for a
+cell:
+
+  * ``train_4k``     -> ``train_step(params, opt_state, batch)``
+  * ``prefill_32k``  -> ``prefill_step(params, batch)``
+  * ``decode_32k`` / ``long_500k`` -> ``serve_step(params, token, pos, caches)``
+
+All example arguments are ``jax.ShapeDtypeStruct`` stand-ins — building a
+program never allocates device memory, so the 512-device dry-run meshes
+compile full-size yi-34b/gemma3-27b programs on one CPU host.  The same
+builders feed the real train/serve drivers (which substitute real arrays).
+
+``input_specs(cfg, cell)`` is the public shape oracle: ShapeDtypeStructs
+for every model input of a cell (tokens/labels, stubbed modality
+frontends' precomputed embeddings, decode token/pos/caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, supports_cell
+from repro.models import transformer as tfm
+from repro.models.sharded_ops import padded_vocab
+from repro.optim import adamw
+from repro.runtime.meshenv import MeshEnv
+from repro.runtime.train import (TrainConfig, batch_specs, make_train_step,
+                                 opt_state_specs)
+
+# Encoder source length used for decode cells of enc-dec archs (the decoder
+# KV cache carries the cell's seq_len; the cross-attention memory is fixed).
+DECODE_SRC_LEN = 4096
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    kind: str                         # train | prefill | decode
+    fn: Callable
+    args: Tuple[Any, ...]             # ShapeDtypeStructs
+    in_shardings: Optional[Tuple[Any, ...]]
+    out_shardings: Optional[Any]
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        kw = {}
+        if self.in_shardings is not None:
+            kw["in_shardings"] = self.in_shardings
+            kw["out_shardings"] = self.out_shardings
+        return jax.jit(self.fn, donate_argnums=self.donate_argnums, **kw)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+# ---------------------------------------------------------------------------
+# Abstract state builders (no allocation)
+# ---------------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig, env: MeshEnv):
+    """(param ShapeDtypeStruct tree, PartitionSpec tree) without allocating.
+
+    ``init_lm`` computes specs statically during tracing, so ``eval_shape``
+    plus a side-channel recovers both."""
+    box: dict = {}
+
+    def f(key):
+        p, s = tfm.init_lm(cfg, key, env)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def abstract_caches(cfg: ModelConfig, env: MeshEnv, batch: int,
+                    cache_len: int, cross_len: int = 0,
+                    kv_quant: bool = False):
+    box: dict = {}
+
+    def f():
+        c, s = tfm.init_caches(cfg, env, batch, cache_len, cross_len,
+                               kv_quant=kv_quant)
+        box["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["specs"]
+
+
+def abstract_opt_state(param_shapes):
+    return jax.eval_shape(adamw.init, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (the dry-run's shape oracle)
+# ---------------------------------------------------------------------------
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def text_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """Token count such that the TOTAL context (frontend prefix + text)
+    equals the cell's seq_len."""
+    if cfg.frontend == "vit":
+        return cell.seq_len - cfg.frontend_len
+    return cell.seq_len
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    B = cell.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    if cell.kind == "train":
+        S = text_len(cfg, cell)
+        out = {"tokens": _tok(B, S), "labels": _tok(B, S)}
+        if cfg.frontend == "vit":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dt)
+        if cfg.enc_dec:
+            out["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, cell.seq_len, cfg.d_model), dt)
+        return out
+    if cell.kind == "prefill":
+        S = text_len(cfg, cell)
+        out = {"tokens": _tok(B, S)}
+        if cfg.frontend == "vit":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dt)
+        if cfg.enc_dec:
+            out["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, cell.seq_len, cfg.d_model), dt)
+        return out
+    # decode: one new token against a seq_len cache.
+    return {"token": _tok(B, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _batch_shardings(env: MeshEnv, tree):
+    if not env.is_spmd:
+        return None
+    b = env.batch()
+
+    def spec_of(x):
+        if x.shape and x.shape[0] % max(env.dp, 1) == 0 and env.dp > 1:
+            return NamedSharding(env.mesh, P(b, *([None] * (x.ndim - 1))))
+        return NamedSharding(env.mesh, P(*([None] * x.ndim)))
+
+    return jax.tree.map(spec_of, tree)
+
+
+def _named(env: MeshEnv, spec_tree):
+    if not env.is_spmd:
+        return None
+    return jax.tree.map(lambda sp: NamedSharding(env.mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Cell program builders
+# ---------------------------------------------------------------------------
+def build_train(cfg: ModelConfig, env: MeshEnv, cell: ShapeCell,
+                tcfg: TrainConfig = TrainConfig(), *, unroll: bool = False
+                ) -> CellProgram:
+    params, pspecs = abstract_params(cfg, env)
+    opt = abstract_opt_state(params)
+    batch = input_specs(cfg, cell)
+    o_specs = opt_state_specs(pspecs, params, env)
+    step = make_train_step(cfg, env, tcfg, unroll=unroll,
+                           grad_specs=o_specs.m if env.is_spmd else None)
+
+    in_sh = out_sh = None
+    if env.is_spmd:
+        p_sh = _named(env, pspecs)
+        o_sh = _named(env, o_specs)
+        b_sh = _batch_shardings(env, batch)
+        in_sh = (p_sh, o_sh, b_sh)
+        metric_sh = {k: NamedSharding(env.mesh, P()) for k in
+                     ("loss", "aux", "total", "grad_norm")}
+        out_sh = (p_sh, o_sh, metric_sh)
+    return CellProgram(
+        name=f"{cfg.name}:{cell.name}", kind="train", fn=step,
+        args=(params, opt, batch), in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(0, 1))
+
+
+def build_prefill(cfg: ModelConfig, env: MeshEnv, cell: ShapeCell, *,
+                  unroll: bool = False, triangular: bool = False
+                  ) -> CellProgram:
+    params, pspecs = abstract_params(cfg, env)
+    batch = input_specs(cfg, cell)
+    B = cell.global_batch
+    cross_len = cell.seq_len if cfg.enc_dec else 0
+    _, cache_specs = abstract_caches(cfg, env, B, cell.seq_len, cross_len)
+
+    def prefill_step(params, batch):
+        return tfm.prefill(cfg, params, env, batch, cache_len=cell.seq_len,
+                           unroll=unroll, triangular=triangular)
+
+    in_sh = out_sh = None
+    if env.is_spmd:
+        b_ax = env.batch() if B % max(env.dp, 1) == 0 and env.dp > 1 else None
+        logits_sh = NamedSharding(env.mesh, P(b_ax, "model"))
+        in_sh = (_named(env, pspecs), _batch_shardings(env, batch))
+        out_sh = (logits_sh, _named(env, cache_specs))
+    return CellProgram(
+        name=f"{cfg.name}:{cell.name}", kind="prefill", fn=prefill_step,
+        args=(params, batch), in_shardings=in_sh, out_shardings=out_sh)
+
+
+def build_decode(cfg: ModelConfig, env: MeshEnv, cell: ShapeCell, *,
+                 unroll: bool = False, kv_quant: bool = False
+                 ) -> CellProgram:
+    params, pspecs = abstract_params(cfg, env)
+    B = cell.global_batch
+    cross_len = DECODE_SRC_LEN if cfg.enc_dec else 0
+    caches, cache_specs = abstract_caches(cfg, env, B, cell.seq_len,
+                                          cross_len, kv_quant=kv_quant)
+    io = input_specs(cfg, cell)
+
+    def serve_step(params, token, pos, caches):
+        return tfm.decode_step(cfg, params, env, token, pos, caches,
+                               unroll=unroll)
+
+    in_sh = out_sh = None
+    if env.is_spmd:
+        b_ax = env.batch() if B % max(env.dp, 1) == 0 and env.dp > 1 else None
+        tok_sh = NamedSharding(env.mesh, P(b_ax, None))
+        pos_sh = NamedSharding(env.mesh, P())
+        cache_sh = _named(env, cache_specs)
+        in_sh = (_named(env, pspecs), tok_sh, pos_sh, cache_sh)
+        out_sh = (NamedSharding(env.mesh, P(b_ax, "model")),   # logits
+                  NamedSharding(env.mesh, P(b_ax)),            # next token
+                  cache_sh)
+    return CellProgram(
+        name=f"{cfg.name}:{cell.name}", kind="decode", fn=serve_step,
+        args=(params, io["token"], io["pos"], caches),
+        in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(3,))
+
+
+def build_cell(cfg: ModelConfig, env: MeshEnv, cell: ShapeCell,
+               tcfg: TrainConfig = TrainConfig(), *, unroll: bool = False
+               ) -> CellProgram:
+    if not supports_cell(cfg, cell):
+        raise ValueError(
+            f"{cfg.name} does not support {cell.name} "
+            "(full-attention arch on a 500k-context cell; see DESIGN.md)")
+    if cell.kind == "train":
+        return build_train(cfg, env, cell, tcfg, unroll=unroll)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, env, cell, unroll=unroll,
+                             triangular=tcfg.triangular_attention)
+    return build_decode(cfg, env, cell, unroll=unroll,
+                        kv_quant=tcfg.kv_quant_serving)

@@ -1,0 +1,12 @@
+"""Model zoo: composable JAX definitions for the ten assigned architectures
+(decoder stacks, MoE, RG-LRU, RWKV6, enc-dec) and the paper's chain CNNs."""
+from .transformer import (apply_block, apply_stack, decode_step, init_caches,
+                          init_lm, loss_fn, prefill)
+from . import attention, chain_cnn, frontend, layers, moe, rglru, rwkv
+from .sharded_ops import padded_vocab
+
+__all__ = [
+    "apply_block", "apply_stack", "decode_step", "init_caches", "init_lm",
+    "loss_fn", "prefill", "attention", "chain_cnn", "frontend", "layers",
+    "moe", "rglru", "rwkv", "padded_vocab",
+]

@@ -1,0 +1,304 @@
+"""Attention compute paths: flash-style chunked jnp, banded local, decode.
+
+All paths are **GQA-grouped**: q arrives with Hq heads, k/v with Hkv ≤ Hq
+heads, and the group structure (rep = Hq//Hkv) is carried through the
+einsums — the kv tensors are never materialized at Hq width (an 8× HBM
+saving for yi-34b's 64q/8kv).  Casting to f32 happens per block inside the
+online-softmax loop, never on the whole sequence.
+
+Three execution paths, all numerically equivalent to naive softmax
+attention (tests assert this):
+
+* ``flash_attention`` — blockwise online-softmax attention expressed as a
+  nested ``lax.scan`` (compact HLO: one loop body regardless of S).  This
+  is the memory-safe path for 32k prefill.  By default it visits the full
+  rectangle of (q-block, kv-block) pairs with masking — the paper-faithful
+  baseline.  ``triangular=True`` unrolls q-blocks in python and gives each
+  a statically-shorter kv scan, eliminating the ~2× causal FLOP waste (a
+  beyond-paper §Perf optimization; see EXPERIMENTS.md).
+* ``banded_attention`` — sliding-window attention in O(S·W) via block
+  roll-stacking (gemma3 local layers, recurrentgemma local attention).
+* ``decode_attention`` — single-token attention against a KV cache (ring
+  buffer for local layers); supports per-sequence positions.
+
+The Pallas TPU kernel (``repro.kernels.flash_attention``) implements the
+same contract with explicit VMEM tiling and is validated against
+``naive_attention`` here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Default flash block sizes (overridable: the dry-run's exact-cost probes
+# raise them so the python-unrolled block grid stays compile-tractable —
+# block size does not change total FLOPs, only skip granularity).
+FLASH_Q_BLOCK = 512
+FLASH_KV_BLOCK = 1024
+
+
+def _mask_bias(mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _group(q: jnp.ndarray, Hkv: int):
+    """(B, S, Hq, hd) -> (B, S, Hkv, rep, hd)."""
+    B, S, Hq, hd = q.shape
+    return q.reshape(B, S, Hkv, Hq // Hkv, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_positions=None, kv_positions=None,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference: q (B,Sq,Hq,hd), k/v (B,Skv,Hkv,hd), Hkv | Hq ->
+    (B,Sq,Hq,hd)."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(Sq) + (Skv - Sq if causal else 0)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+    qg = _group(q, Hkv).astype(jnp.float32)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg,
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.ones((Sq, Skv), bool)
+    dq = q_positions[:, None]
+    dk = kv_positions[None, :]
+    if causal:
+        mask &= dq >= dk
+    if window > 0:
+        mask &= (dq - dk) < window
+    scores = scores + _mask_bias(mask)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style blockwise attention (jnp, nested scan, GQA-grouped)
+# ---------------------------------------------------------------------------
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 512, kv_block: int = 1024,
+                    triangular: bool = False, static_loops: bool = False,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Online-softmax blockwise attention; shapes as ``naive_attention``.
+
+    ``triangular`` statically skips fully-masked kv blocks for causal
+    attention (python-unrolled q blocks), trading HLO size for ~2× fewer
+    attention FLOPs (≫2× for sliding-window layers).
+
+    ``static_loops`` python-unrolls BOTH block loops without skipping —
+    numerically identical to the scanned path, but every block pair is
+    visible to XLA's cost analysis exactly once (the dry-run probes use
+    this: a lax.scan body is otherwise counted once regardless of trip
+    count)."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    nq = -(-Sq // qb)
+    nk = -(-Skv // kb)
+    qp = _pad_to(q, nq * qb, 1)
+    kp = _pad_to(k, nk * kb, 1)
+    vp = _pad_to(v, nk * kb, 1)
+    q_pos = _pad_to(jnp.arange(Sq) + (Skv - Sq if causal else 0), nq * qb, 0)
+    kv_pos = jnp.where(jnp.arange(nk * kb) < Skv, jnp.arange(nk * kb), 2**30)
+
+    # blocks keep the INPUT dtype; f32 casts happen per block in the loop.
+    qblocks = qp.reshape(B, nq, qb, Hkv, rep, hd)
+    kblocks = kp.reshape(B, nk, kb, Hkv, hd)
+    vblocks = vp.reshape(B, nk, kb, Hkv, hd)
+    qpb = q_pos.reshape(nq, qb)
+    kpb = kv_pos.reshape(nk, kb)
+
+    def kv_step(carry, xs):
+        m, l, acc, qi_blk, qi_pos = carry
+        k_blk, v_blk, k_pos = xs
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qi_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((qb, kb), bool)
+        dq = qi_pos[:, None]
+        dk = k_pos[None, :]
+        if causal:
+            mask &= dq >= dk
+        if window > 0:
+            mask &= (dq - dk) < window
+        s = s + _mask_bias(mask)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new, qi_blk, qi_pos), None
+
+    def run_q_block(qi_blk, qi_pos, n_kv_blocks, kv_start=0):
+        m0 = jnp.full((B, Hkv, rep, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, qb, hd), jnp.float32)
+        carry = (m0, l0, a0, qi_blk, qi_pos)
+        if static_loops:
+            for ki in range(kv_start, n_kv_blocks):
+                carry, _ = kv_step(carry, (kblocks[:, ki], vblocks[:, ki],
+                                           kpb[ki]))
+            m, l, acc = carry[:3]
+        else:
+            xs = (kblocks[:, kv_start:n_kv_blocks].swapaxes(0, 1),
+                  vblocks[:, kv_start:n_kv_blocks].swapaxes(0, 1),
+                  kpb[kv_start:n_kv_blocks])
+            (m, l, acc, _, _), _ = jax.lax.scan(kv_step, carry, xs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)        # (B, qb, Hkv, rep, hd)
+
+    if (triangular and causal) or static_loops:
+        outs = []
+        for qi in range(nq):
+            # kv blocks fully beyond this q block (causal) or fully before
+            # its sliding window are statically skipped (triangular mode);
+            # static_loops without triangular visits the full rectangle.
+            n_kv, k0 = nk, 0
+            if triangular and causal:
+                max_pos = int(min(Sq - 1, (qi + 1) * qb - 1) + (Skv - Sq))
+                n_kv = min(nk, max_pos // kb + 1)
+                if window > 0:
+                    min_pos = int(qi * qb + (Skv - Sq)) - (window - 1)
+                    k0 = max(0, min_pos // kb)
+            outs.append(run_q_block(qblocks[:, qi], qpb[qi], n_kv, k0))
+        out = jnp.stack(outs, axis=1)              # (B, nq, qb, Hkv, rep, hd)
+    else:
+        def q_step(_, xs):
+            qi_blk, qi_pos = xs
+            return None, run_q_block(qi_blk, qi_pos, nk)
+        _, out = jax.lax.scan(q_step, None,
+                              (qblocks.swapaxes(0, 1), qpb))
+        out = out.swapaxes(0, 1)                   # (B, nq, qb, Hkv, rep, hd)
+
+    out = out.reshape(B, nq * qb, Hq, hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Banded (sliding-window) attention: O(S * W), GQA-grouped
+# ---------------------------------------------------------------------------
+def banded_attention(q, k, v, *, window: int,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Causal sliding-window attention via block roll-stacking.
+
+    Each q block of size W attends its own block plus the previous one —
+    exactly covering the causal window (pos_q - pos_k < W)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    W = window
+    if S <= W:
+        return flash_attention(q, k, v, causal=True, window=W,
+                               q_block=min(512, S), kv_block=min(1024, S),
+                               scale=scale)
+    nb = -(-S // W)
+    Sp = nb * W
+    qp = _pad_to(q, Sp, 1).reshape(B, nb, W, Hkv, rep, hd)
+    kp = _pad_to(k, Sp, 1).reshape(B, nb, W, Hkv, hd)
+    vp = _pad_to(v, Sp, 1).reshape(B, nb, W, Hkv, hd)
+    pos = jnp.where(jnp.arange(Sp) < S, jnp.arange(Sp), -(2**30))
+    pos = pos.reshape(nb, W)
+
+    # kv band for block i = [block i-1, block i]  (block 0 gets zeros-pad)
+    k_prev = jnp.pad(kp[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    v_prev = jnp.pad(vp[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    p_prev = jnp.pad(pos[:-1], ((1, 0), (0, 0)), constant_values=-(2**30))
+    k_band = jnp.concatenate([k_prev, kp], axis=2)      # (B, nb, 2W, Hkv, hd)
+    v_band = jnp.concatenate([v_prev, vp], axis=2)
+    p_band = jnp.concatenate([p_prev, pos], axis=1)     # (nb, 2W)
+
+    s = jnp.einsum("bnqgrd,bnkgd->bngrqk", qp, k_band,
+                   preferred_element_type=jnp.float32) * scale
+    dq = pos[:, :, None]                                # (nb, W, 1)
+    dk = p_band[:, None, :]                             # (nb, 1, 2W)
+    mask = (dq >= dk) & ((dq - dk) < W)
+    s = s + _mask_bias(mask)[None, :, None, None]
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngrqk,bnkgd->bnqgrd", probs,
+                     v_band.astype(jnp.float32))
+    return out.reshape(B, Sp, Hq, hd)[:, :S].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention against a KV cache (GQA-grouped, vector positions)
+# ---------------------------------------------------------------------------
+def decode_attention(q, cache_k, cache_v, pos, *, window: int = 0,
+                     scale: Optional[float] = None,
+                     k_scale=None, v_scale=None) -> jnp.ndarray:
+    """q: (B,1,Hq,hd); cache_k/v: (B,Skv,Hkv,hd); pos: scalar position of
+    the query token, or (B,) per-sequence positions (continuous batching).
+    For local layers the cache is a ring buffer of size W and slot j holds
+    absolute position ``pos - ((pos - j) mod W)``.
+
+    ``k_scale``/``v_scale`` (B,Skv,Hkv): per-row dequant scales for int8
+    KV caches (§Perf).  Scales fold into the scores / probs — the cache is
+    never materialized at higher precision."""
+    B, _, Hq, hd = q.shape
+    Skv, Hkv = cache_k.shape[1], cache_k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    qg = _group(q, Hkv)                                  # (B,1,Hkv,rep,hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    slots = jnp.arange(Skv)
+    p = jnp.asarray(pos)
+    if p.ndim == 1:
+        p = p[:, None]                                   # (B,1) vs (Skv,)
+    if window > 0:
+        slot_pos = p - jnp.mod(p - slots, Skv)           # ring positions
+        valid = (slot_pos >= 0) & (slot_pos <= p) & ((p - slot_pos) < window)
+    else:
+        valid = slots <= p
+    bias = _mask_bias(valid)                             # (Skv,) or (B,Skv)
+    if bias.ndim == 1:
+        bias = bias[None, None, None, None, :]
+    else:
+        bias = bias[:, None, None, None, :]
+    s = s + bias
+    probs = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs,
+                     cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """(B,S,Hkv,hd) -> (int8 codes, (B,S,Hkv) f32 scales), per-row."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(m / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B,S,Hkv,hd) -> (B,S,Hkv*n_rep,hd) for GQA (kept for kernel tests;
+    the jnp paths are natively grouped and never call this)."""
+    if n_rep == 1:
+        return x
+    B, S, Hkv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, Hkv, n_rep, hd)
+                            ).reshape(B, S, Hkv * n_rep, hd)

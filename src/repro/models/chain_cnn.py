@@ -1,0 +1,109 @@
+"""Executable chain-topology CNNs (NiN / YOLOv2 / VGG16) for the paper's
+experiments, plus split execution: layers [0, s) on "device", [s, M) on
+"edge" — the computation MCSA plans for.
+
+Forward uses NHWC conv via lax.conv_general_dilated; each CNNLayer in the
+config is one split point (the paper's layer granularity).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.chain_cnns import ChainCNNConfig, CNNLayer
+
+
+def _layer_shapes(cfg: ChainCNNConfig) -> List[Tuple[int, ...]]:
+    """Output (H, W, C) (or (F,) for fc) after each layer, single example."""
+    h = w = cfg.in_hw
+    c = cfg.in_ch
+    shapes: List[Tuple[int, ...]] = []
+    flat = None
+    for layer in cfg.layers:
+        if layer.kind == "conv":
+            h = -(-h // layer.stride)
+            w = -(-w // layer.stride)
+            c = layer.out_ch
+            shapes.append((h, w, c))
+        elif layer.kind == "pool":
+            h = max(1, h // layer.stride)
+            w = max(1, w // layer.stride)
+            shapes.append((h, w, c))
+        else:                           # fc
+            if flat is None:
+                flat = h * w * c
+            shapes.append((layer.out_features,))
+            flat = layer.out_features
+    return shapes
+
+
+def init_cnn(cfg: ChainCNNConfig, key) -> list:
+    """Per-layer params: conv -> (K,K,Cin,Cout)+bias, fc -> (In,Out)+bias."""
+    params = []
+    h = w = cfg.in_hw
+    c = cfg.in_ch
+    flat = None
+    keys = jax.random.split(key, len(cfg.layers))
+    for layer, k in zip(cfg.layers, keys):
+        if layer.kind == "conv":
+            fan_in = layer.kernel * layer.kernel * c
+            wgt = jax.random.normal(
+                k, (layer.kernel, layer.kernel, c, layer.out_ch),
+                jnp.float32) / jnp.sqrt(fan_in)
+            params.append({"w": wgt, "b": jnp.zeros((layer.out_ch,))})
+            h = -(-h // layer.stride)
+            w = -(-w // layer.stride)
+            c = layer.out_ch
+        elif layer.kind == "pool":
+            params.append({})
+            h = max(1, h // layer.stride)
+            w = max(1, w // layer.stride)
+        else:
+            if flat is None:
+                flat = h * w * c
+            wgt = jax.random.normal(
+                k, (flat, layer.out_features), jnp.float32) / jnp.sqrt(flat)
+            params.append({"w": wgt, "b": jnp.zeros((layer.out_features,))})
+            flat = layer.out_features
+    return params
+
+
+def apply_layer(layer: CNNLayer, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: NHWC or (N, F) for fc chains."""
+    if layer.kind == "conv":
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(layer.stride, layer.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + p["b"])
+    if layer.kind == "pool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, layer.kernel, layer.kernel, 1),
+            (1, layer.stride, layer.stride, 1), "SAME")
+    # fc
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ p["w"] + p["b"])
+
+
+def forward_range(cfg: ChainCNNConfig, params: list, x: jnp.ndarray,
+                  start: int, stop: int) -> jnp.ndarray:
+    """Apply layers [start, stop) — the split-execution primitive."""
+    for i in range(start, stop):
+        x = apply_layer(cfg.layers[i], params[i], x)
+    return x
+
+
+def forward(cfg: ChainCNNConfig, params: list, x: jnp.ndarray) -> jnp.ndarray:
+    return forward_range(cfg, params, x, 0, len(cfg.layers))
+
+
+def split_inference(cfg: ChainCNNConfig, params: list, x: jnp.ndarray,
+                    split: int):
+    """Run the device part and edge part separately; returns
+    (intermediate activation shipped over the network, final logits)."""
+    inter = forward_range(cfg, params, x, 0, split)
+    out = forward_range(cfg, params, inter, split, len(cfg.layers))
+    return inter, out

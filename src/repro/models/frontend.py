@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify
+the transformer backbone only; the frontend provides precomputed
+frame/patch embeddings).
+
+These helpers generate deterministic stand-in embeddings for tests and
+examples; the dry-run uses ShapeDtypeStructs of the same shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def vit_patch_embeds(cfg: ModelConfig, key, batch: int) -> jnp.ndarray:
+    """InternViT stub: (B, frontend_len, d_model) patch embeddings."""
+    assert cfg.frontend == "vit"
+    return jax.random.normal(
+        key, (batch, cfg.frontend_len, cfg.d_model), jnp.float32
+    ).astype(jnp.dtype(cfg.dtype))
+
+
+def audio_frame_embeds(cfg: ModelConfig, key, batch: int,
+                       num_frames: int) -> jnp.ndarray:
+    """Speech-frontend stub: (B, num_frames, d_model) frame embeddings
+    (the w2v-BERT conv feature extractor output in seamless-m4t)."""
+    assert cfg.frontend == "audio"
+    return jax.random.normal(
+        key, (batch, num_frames, cfg.d_model), jnp.float32
+    ).astype(jnp.dtype(cfg.dtype))

@@ -1,0 +1,181 @@
+"""Core layer primitives: norms, RoPE, SwiGLU MLP, parameter builders.
+
+Parameters are plain dict pytrees of ``jnp.ndarray``.  Every init function
+returns ``(params, specs)`` where ``specs`` mirrors the param tree with
+``PartitionSpec`` leaves — the single source of truth for how each weight
+shards over the (data, model) / (pod, data, model) meshes.
+
+Sharding conventions (TP size 16 on the production meshes):
+  * attention projections are 3-D ``(d_model, heads, head_dim)`` sharded on
+    the *heads* dim (GSPMD pads uneven head counts — see DESIGN.md);
+  * kv projections shard heads only when ``kv_heads % tp == 0``, else they
+    are replicated (standard GQA practice when kv < tp);
+  * FFN hidden dim shards on ``model``; expert dim shards on ``model`` (EP);
+  * embedding / unembedding shard the vocab dim on ``model``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, RWKV6,
+                                ModelConfig)
+from repro.runtime.meshenv import MeshEnv
+
+Params = dict
+Specs = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(max(in_dim, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def group_norm_heads(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 64e-5):
+    """Per-head group norm used by RWKV6; x: (..., H, hd), weight: (H, hd)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)              # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                  # (hd/2,)
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * freqs                # (B, S, hd/2) or (S, hd/2)
+    if angles.ndim == 2:                           # (S, hd/2) -> broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]           # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, env: MeshEnv) -> Tuple[Params, Specs]:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wg": dense_init(k1, (d, ff), d, dt),
+        "wu": dense_init(k2, (d, ff), d, dt),
+        "wd": dense_init(k3, (ff, d), ff, dt),
+    }
+    specs = {
+        "wg": P(None, "model"),
+        "wu": P(None, "model"),
+        "wd": P("model", None),
+    }
+    return params, specs
+
+
+def apply_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# Attention params
+# ---------------------------------------------------------------------------
+def padded_heads(hq: int, hkv: int, tp: int) -> int:
+    """Query-head count padded so that (a) heads divide TP and (b) the GQA
+    repeat factor stays integral.  yi-34b 56->64, starcoder2 24->32,
+    internvl2 14->16 at tp=16; divisible counts are unchanged.  Padded
+    heads have zero wo rows (exact no-op on the output); the extra FLOPs
+    show up honestly in the roofline's useful_ratio."""
+    if tp <= 1 or hq % tp == 0:
+        return hq
+    unit = tp
+    while unit % hkv and hkv % unit:
+        unit += tp                       # keep hq_pad a multiple of hkv too
+    pad = -(-hq // unit) * unit
+    while pad % hkv:
+        pad += tp
+    return pad
+
+
+def init_attention(cfg: ModelConfig, key, env: MeshEnv,
+                   cross: bool = False) -> Tuple[Params, Specs]:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    hq_pad = padded_heads(hq, hkv, env.tp)
+    wq = dense_init(k1, (d, hq_pad, hd), d, dt)
+    wo = dense_init(k4, (hq_pad, hd, d), hq * hd, dt)
+    if hq_pad != hq:
+        # zero the padded heads' output rows: they contribute nothing.
+        mask = (jnp.arange(hq_pad) < hq)[:, None, None]
+        wo = jnp.where(mask, wo, 0)
+    params = {
+        "wq": wq,
+        "wk": dense_init(k2, (d, hkv, hd), d, dt),
+        "wv": dense_init(k3, (d, hkv, hd), d, dt),
+        "wo": wo,
+    }
+    # kv heads replicate when they don't divide TP (standard GQA-under-TP
+    # practice: kv weights are small); q heads always shard (padded above).
+    # Context-parallel mode (§Perf): attention weights replicate and the
+    # SEQUENCE carries the model-axis parallelism instead.
+    q_axis = "model" if (env.tp > 1
+                         and not env.context_parallel_attn) else None
+    kv_axis = "model" if (env.tp > 1 and cfg.num_kv_heads % env.tp == 0
+                          and not env.context_parallel_attn) else None
+    specs = {
+        "wq": P(None, q_axis, None),
+        "wk": P(None, kv_axis, None),
+        "wv": P(None, kv_axis, None),
+        "wo": P(q_axis, None, None),
+    }
+    if cfg.qk_norm and not cross:
+        params["q_norm"] = jnp.zeros((hd,), dt)
+        params["k_norm"] = jnp.zeros((hd,), dt)
+        specs["q_norm"] = P(None)
+        specs["k_norm"] = P(None)
+    return params, specs
+
+
+def init_norm(cfg: ModelConfig) -> Tuple[jnp.ndarray, P]:
+    return jnp.zeros((cfg.d_model,), _dtype(cfg)), P(None)
+
+
+__all__ = [
+    "Params", "Specs", "dense_init", "rms_norm", "group_norm_heads",
+    "rope_freqs", "apply_rope", "init_mlp", "apply_mlp", "init_attention",
+    "init_norm",
+]

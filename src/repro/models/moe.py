@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP) over the model axis.
+
+Design (see DESIGN.md §4): experts are sharded over ``model``; activations
+arrive replicated over ``model`` (sharded over batch axes only).  Inside a
+``shard_map`` every device:
+
+  1. computes router logits for its data-shard's tokens (replicated across
+     the model axis, so routing is consistent),
+  2. selects the tokens routed to its *local* experts via a sort-based,
+     capacity-bounded dispatch (Switch-style; overflow tokens drop),
+  3. runs the local experts' SwiGLU on an (E_local, capacity, d) buffer,
+  4. scatters results back and ``psum``s over ``model``.
+
+Communication = one (B,S,d) all-reduce — identical cost to a dense TP FFN's
+all-reduce, with compute proportional to *active* (top-k) FLOPs.  No
+all-to-all is needed because tokens are replicated across the EP axis; this
+trades EP-axis activation memory for collective simplicity (a good trade at
+S·d sizes here — revisited in EXPERIMENTS.md §Perf).
+
+The same ``_moe_local`` core runs single-device (CPU tests) with
+``e0=0, E_local=E``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.runtime.meshenv import MeshEnv
+from .layers import dense_init
+
+Params = dict
+
+
+def init_moe(cfg: ModelConfig, key, env: MeshEnv) -> Tuple[Params, dict]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    params = {
+        "router": dense_init(kr, (d, E), d, jnp.float32),
+        "wg": dense_init(kg, (E, d, ff), d, dt),
+        "wu": dense_init(ku, (E, d, ff), d, dt),
+        "wd": dense_init(kd, (E, ff, d), ff, dt),
+    }
+    specs = {
+        "router": P(None, None),
+        "wg": P("model", None, None),
+        "wu": P("model", None, None),
+        "wd": P("model", None, None),
+    }
+    return params, specs
+
+
+def _moe_local(x_flat, router, wg, wu, wd, *, e0, num_experts, top_k,
+               capacity):
+    """Dispatch + expert compute for ONE device's tokens and local experts.
+
+    x_flat: (T, d).  wg/wu/wd: (E_local, ...) local expert weights.
+    Returns (y: (T, d) partial sum over local experts, aux: (T,) per-token
+    load-balance loss contribution — identical on every EP replica).
+    """
+    T, d = x_flat.shape
+    E_local = wg.shape[0]
+    k = top_k
+
+    logits = x_flat.astype(jnp.float32) @ router                # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    g_top, idx_top = jax.lax.top_k(gates, k)                    # (T, k)
+    g_top = g_top / jnp.maximum(jnp.sum(g_top, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e — ≈1.0 when
+    # routing is balanced, broadcast per token (batch-size independent;
+    # the old /T normalization made the incentive shrink with batch).
+    me = jnp.mean(gates, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx_top, num_experts, dtype=jnp.float32), 1),
+        axis=0) / k
+    aux = jnp.full((T,), num_experts * jnp.sum(me * ce), jnp.float32)
+
+    flat_e = idx_top.reshape(-1)                                # (T*k,)
+    flat_g = g_top.reshape(-1)
+    flat_src = jnp.arange(T * k) // k
+    order = jnp.argsort(flat_e)                                 # stable
+    se, ssrc, sg = flat_e[order], flat_src[order], flat_g[order]
+
+    counts = jnp.bincount(flat_e, length=num_experts)
+    offsets = jnp.cumsum(counts) - counts                       # exclusive
+    rank = jnp.arange(T * k) - offsets[se]
+    keep = (rank < capacity) & (se >= e0) & (se < e0 + E_local)
+    slot_e = jnp.clip(se - e0, 0, E_local - 1)
+    slot_c = jnp.clip(rank, 0, capacity - 1)
+
+    xbuf = jnp.zeros((E_local, capacity, d), x_flat.dtype)
+    contrib = jnp.where(keep[:, None], x_flat[ssrc], 0)
+    xbuf = xbuf.at[slot_e, slot_c].add(contrib)
+
+    g = jnp.einsum("ecd,edf->ecf", xbuf, wg)
+    u = jnp.einsum("ecd,edf->ecf", xbuf, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xbuf.dtype) * u
+    ybuf = jnp.einsum("ecf,efd->ecd", h, wd)                    # (E_loc, C, d)
+
+    out_contrib = ybuf[slot_e, slot_c] * (sg * keep)[:, None].astype(ybuf.dtype)
+    y = jnp.zeros((T, d), ybuf.dtype).at[ssrc].add(out_contrib)
+    return y, aux
+
+
+def capacity_for(tokens: int, cfg: ModelConfig, factor: float) -> int:
+    return max(1, math.ceil(tokens * cfg.experts_per_token
+                            / cfg.num_experts * factor))
+
+
+def apply_moe(cfg: ModelConfig, p: Params, env: MeshEnv, x: jnp.ndarray,
+              *, capacity_factor: float = 1.25
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss per token (B, S))."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    if not env.is_spmd or env.tp <= 1:
+        cap = capacity_for(B * S, cfg, capacity_factor)
+        y, aux = _moe_local(x.reshape(B * S, d), p["router"], p["wg"],
+                            p["wu"], p["wd"], e0=0, num_experts=E,
+                            top_k=k, capacity=cap)
+        return y.reshape(B, S, d), aux.reshape(B, S)
+
+    assert E % env.tp == 0, f"experts {E} must divide EP size {env.tp}"
+    E_local = E // env.tp
+    batch = env.batch_if(B)
+    dp_shards = env.dp if batch is not None else 1
+    tokens_local = (B // dp_shards) * S
+    cap = capacity_for(tokens_local, cfg, capacity_factor)
+    model = env.model_axis
+
+    def f(x_loc, router, wg, wu, wd):
+        b_loc, S_loc, _ = x_loc.shape
+        e0 = jax.lax.axis_index(model) * E_local
+        y, aux = _moe_local(x_loc.reshape(b_loc * S_loc, d), router,
+                            wg, wu, wd, e0=e0, num_experts=E, top_k=k,
+                            capacity=cap)
+        y = jax.lax.psum(y, model)
+        return y.reshape(b_loc, S_loc, d), aux.reshape(b_loc, S_loc)
+
+    y, aux = jax.shard_map(
+        f, mesh=env.mesh,
+        in_specs=(P(batch, None, None), P(None, None),
+                  P(model, None, None), P(model, None, None),
+                  P(model, None, None)),
+        out_specs=(P(batch, None, None), P(batch, None)),
+        check_vma=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+    return y, aux

@@ -1,0 +1,176 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (Griffin "recurrent block"):
+    x  -> ln -> [branch a: W_x -> causal conv1d(4) -> RG-LRU]
+               [branch b: W_y -> GeLU]
+    out = W_o (lru_out * branch_b)
+
+RG-LRU recurrence (per channel, gates block-diagonal per head):
+    r_t = sigmoid(x_t @ W_a)        (recurrence gate)
+    i_t = sigmoid(x_t @ W_i)        (input gate)
+    log a_t = -c * softplus(Λ) * r_t            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Sequence mode uses ``jax.lax.associative_scan`` (log-depth, the standard TPU
+formulation); decode mode is the single-step update.  The Pallas TPU kernel
+(``repro.kernels.rglru``) implements a chunked variant validated against
+``ref`` here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.runtime.meshenv import MeshEnv
+from .layers import dense_init
+
+Params = dict
+C_RGLRU = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key, env: MeshEnv) -> Tuple[Params, dict]:
+    d, r = cfg.d_model, cfg.d_rnn
+    H = cfg.num_heads
+    rh = r // H
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    params = {
+        "wx": dense_init(ks[0], (d, r), d, dt),
+        "wy": dense_init(ks[1], (d, r), d, dt),
+        "wo": dense_init(ks[2], (r, d), r, dt),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, r), cfg.conv_width, dt),
+        # block-diagonal (per-head) gate projections
+        "gate_a": dense_init(ks[4], (H, rh, rh), rh, jnp.float32),
+        "gate_i": dense_init(ks[5], (H, rh, rh), rh, jnp.float32),
+        # Λ init so that a ≈ 0.9..0.999 at r_gate=1 (Griffin appendix)
+        "a_param": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, r)) / C_RGLRU)).astype(jnp.float32),
+    }
+    specs = {
+        "wx": P(None, "model"),
+        "wy": P(None, "model"),
+        "wo": P("model", None),
+        "conv_w": P(None, "model"),
+        "gate_a": P("model", None, None),
+        "gate_i": P("model", None, None),
+        "a_param": P("model"),
+    }
+    return params, specs
+
+
+def _gates(p: Params, H: int, xc: jnp.ndarray):
+    """xc: (..., r) -> (log_a, gated_input) both f32."""
+    shape = xc.shape
+    r = shape[-1]
+    rh = r // H
+    xh = xc.astype(jnp.float32).reshape(*shape[:-1], H, rh)
+    r_gate = jax.nn.sigmoid(jnp.einsum("...hi,hij->...hj", xh, p["gate_a"]))
+    i_gate = jax.nn.sigmoid(jnp.einsum("...hi,hij->...hj", xh, p["gate_i"]))
+    r_gate = r_gate.reshape(shape)
+    i_gate = i_gate.reshape(shape)
+    log_a = -C_RGLRU * jax.nn.softplus(p["a_param"]) * r_gate
+    gated_x = i_gate * xc.astype(jnp.float32)
+    return log_a, gated_x
+
+
+def rglru_scan(log_a: jnp.ndarray, gated_x: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Associative linear recurrence over axis 1 (time).
+
+    log_a, gated_x: (B, S, r) f32.  Returns h: (B, S, r).
+    """
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * gated_x
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(conv_w: jnp.ndarray, x: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over time.  x: (B, S, r); conv_w: (K, r).
+
+    conv_state: (B, K-1, r) previous inputs (decode continuation).
+    """
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, r)
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        out = out + conv_w[K - 1 - j] * jax.lax.dynamic_slice_in_dim(
+            xp, j, x.shape[1], axis=1)
+    return out
+
+
+def apply_rglru_seq(cfg: ModelConfig, p: Params, env: MeshEnv,
+                    x: jnp.ndarray, state: Optional[dict] = None
+                    ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence mode.  x: (B, S, d) -> (out (B, S, d), final state)."""
+    B, S, d = x.shape
+    xi = jnp.einsum("bsd,dr->bsr", x, p["wx"])
+    xi = env.constrain(xi, env.batch(), None, env.model())
+    conv_state = state["conv"] if state is not None else None
+    xc = _causal_conv(p["conv_w"], xi, conv_state)
+    log_a, gated = _gates(p, cfg.num_heads, xc)
+    h0 = state["h"] if state is not None else None
+    h = rglru_scan(log_a, gated, h0)                # (B, S, r) f32
+    y = jnp.einsum("bsd,dr->bsr", x, p["wy"])
+    out = (h.astype(x.dtype) * jax.nn.gelu(y.astype(jnp.float32)).astype(x.dtype))
+    out = jnp.einsum("bsr,rd->bsd", out, p["wo"])
+    K = cfg.conv_width
+    tail = jnp.concatenate([conv_state, xi], axis=1)[:, -(K - 1):] \
+        if conv_state is not None else _last_k(xi, K - 1)
+    new_state = {"h": h[:, -1], "conv": tail}
+    return out, new_state
+
+
+def _last_k(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Last k timesteps of (B, S, r), zero-padded on the left if S < k."""
+    B, S, r = x.shape
+    if S >= k:
+        return x[:, S - k:]
+    return jnp.concatenate([jnp.zeros((B, k - S, r), x.dtype), x], axis=1)
+
+
+def apply_rglru_decode(cfg: ModelConfig, p: Params, env: MeshEnv,
+                       x: jnp.ndarray, state: dict
+                       ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token mode.  x: (B, 1, d); state {'h': (B,r) f32, 'conv': (B,K-1,r)}."""
+    B, _, d = x.shape
+    xi = jnp.einsum("bsd,dr->bsr", x, p["wx"])              # (B, 1, r)
+    window = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    K = cfg.conv_width
+    # window[k] holds x_{t-(K-1-k)}; seq path applies w[m] to x_{t-m},
+    # so tap m = K-1-k -> flip the kernel over the window axis.
+    xc = jnp.einsum("bkr,kr->br", window, p["conv_w"][::-1])[:, None]  # (B,1,r)
+    log_a, gated = _gates(p, cfg.num_heads, xc)
+    a = jnp.exp(log_a[:, 0])
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a[:, 0]), 1e-12))
+    h = a * state["h"] + beta * gated[:, 0]                 # (B, r) f32
+    y = jnp.einsum("bsd,dr->bsr", x, p["wy"])
+    out = h[:, None].astype(x.dtype) * jax.nn.gelu(
+        y.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsr,rd->bsd", out, p["wo"])
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return out, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    r, K = cfg.d_rnn, cfg.conv_width
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, r), jnp.dtype(cfg.dtype))}

@@ -1,0 +1,176 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892) — attention-free time mixing
+with data-dependent decay, plus the RWKV channel-mix FFN.
+
+Time-mix (per head, head dim n):
+    token shift:  x̃_z = x_t + μ_z ⊙ (x_{t-1} - x_t)   for z ∈ {r,k,v,g,w}
+    decay:        w_t = exp(-exp(w0 + tanh(x̃_w A) B))      (data-dependent!)
+    r,k,v,g = x̃_z @ W_z          (each d -> H·n)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ                      (state: (n, n))
+    y_t = (S_{t-1} + (u ⊙ k_t) v_tᵀ)ᵀ r_t
+    out = W_o · (groupnorm_head(y) ⊙ silu(g))
+
+Channel-mix:
+    k = relu(x̃_k W_k)²;  out = sigmoid(x̃_r W_r) ⊙ (k W_v)
+
+Sequence mode runs a ``lax.scan`` over time (exact; compact HLO).  The
+Pallas TPU kernel (``repro.kernels.wkv6``) implements a chunked variant.
+State for decode: {s: (B,H,n,n) f32, tm: (B,d), cm: (B,d)} (shift buffers).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.runtime.meshenv import MeshEnv
+from .layers import dense_init, group_norm_heads
+
+Params = dict
+
+
+def init_rwkv_time_mix(cfg: ModelConfig, key, env: MeshEnv) -> Tuple[Params, dict]:
+    d = cfg.d_model
+    H, n = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    L = cfg.rwkv_decay_lora
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params = {
+        "mu": 0.5 * jnp.ones((5, d), dt),           # shift mixes for r,k,v,g,w
+        "w0": jnp.zeros((d,), jnp.float32),
+        "wA": dense_init(ks[0], (d, L), d, jnp.float32),
+        "wB": dense_init(ks[1], (L, d), L, jnp.float32),
+        "wr": dense_init(ks[2], (d, H, n), d, dt),
+        "wk": dense_init(ks[3], (d, H, n), d, dt),
+        "wv": dense_init(ks[4], (d, H, n), d, dt),
+        "wg": dense_init(ks[5], (d, H, n), d, dt),
+        "u": dense_init(ks[6], (H, n), n, jnp.float32),
+        "ln_x": jnp.ones((H, n), jnp.float32),
+        "wo": dense_init(ks[7], (H, n, d), H * n, dt),
+    }
+    # Head sharding only when H divides TP (rwkv6-3b has H=40 vs tp=16:
+    # time-mix weights replicate; the channel-mix FFN still TP-shards).
+    h_ax = "model" if (env.tp > 1 and H % env.tp == 0) else None
+    specs = {
+        "mu": P(None, None), "w0": P(None), "wA": P(None, None),
+        "wB": P(None, None),
+        "wr": P(None, h_ax, None), "wk": P(None, h_ax, None),
+        "wv": P(None, h_ax, None), "wg": P(None, h_ax, None),
+        "u": P(h_ax, None), "ln_x": P(h_ax, None),
+        "wo": P(h_ax, None, None),
+    }
+    return params, specs
+
+
+def init_rwkv_channel_mix(cfg: ModelConfig, key, env: MeshEnv) -> Tuple[Params, dict]:
+    d = cfg.d_model
+    ff = cfg.d_ff_rwkv or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "mu": 0.5 * jnp.ones((2, d), dt),           # shift mixes for k, r
+        "wk": dense_init(k1, (d, ff), d, dt),
+        "wv": dense_init(k2, (ff, d), ff, dt),
+        "wr": dense_init(k3, (d, d), d, dt),
+    }
+    specs = {"mu": P(None, None), "wk": P(None, "model"),
+             "wv": P("model", None), "wr": P(None, None)}
+    return params, specs
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} along time; prev: (B, d) carries across calls (decode)."""
+    B, S, d = x.shape
+    if S == 1:
+        p = jnp.zeros((B, 1, d), x.dtype) if prev is None else prev[:, None].astype(x.dtype)
+        return p
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev.astype(x.dtype))
+    return shifted
+
+
+def wkv6_scan(r, k, v, w, u, s0=None):
+    """Exact per-step WKV6 recurrence.
+
+    r,k,v: (B, S, H, n); w: (B, S, H, n) decay in (0,1) f32; u: (H, n).
+    Returns (y: (B, S, H, n) f32, s_final: (B, H, n, n) f32).
+    State layout s[k_dim, v_dim].
+    """
+    B, S, H, n = r.shape
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    s = jnp.zeros((B, H, n, n), jnp.float32) if s0 is None else s0
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                         # (B, H, n)
+        # y = (S + (u*k) v^T)^T r = S^T r + v ((u*k)·r)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        y = y + vt * jnp.sum(rt * (u * kt), axis=-1, keepdims=True)
+        s_new = wt[..., None] * s + kt[..., None] * vt[:, :, None, :]
+        return s_new, y
+
+    xs = (r32.swapaxes(0, 1), k32.swapaxes(0, 1),
+          v32.swapaxes(0, 1), w.swapaxes(0, 1))
+    s_final, ys = jax.lax.scan(step, s, xs)
+    return ys.swapaxes(0, 1), s_final
+
+
+def apply_time_mix(cfg: ModelConfig, p: Params, env: MeshEnv, x: jnp.ndarray,
+                   state: Optional[dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (out, new_state {'s','tm'})."""
+    B, S, d = x.shape
+    H, n = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    prev = state["tm"] if state is not None else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"]
+    xr, xk, xv, xg, xw = (x + mu[i] * (xs - x) for i in range(5))
+
+    logw = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(jnp.clip(logw, -20.0, 10.0)))      # (B,S,d) in (0,1)
+    w = w.reshape(B, S, H, n)
+
+    r = jnp.einsum("bsd,dhn->bshn", xr, p["wr"])
+    k = jnp.einsum("bsd,dhn->bshn", xk, p["wk"])
+    v = jnp.einsum("bsd,dhn->bshn", xv, p["wv"])
+    g = jnp.einsum("bsd,dhn->bshn", xg, p["wg"])
+    if env.tp > 1 and H % env.tp == 0:
+        r = env.constrain(r, env.batch(), None, env.model(), None)
+        k = env.constrain(k, env.batch(), None, env.model(), None)
+        v = env.constrain(v, env.batch(), None, env.model(), None)
+
+    s0 = state["s"] if state is not None else None
+    y, s_final = wkv6_scan(r, k, v, w, p["u"], s0)
+    y = group_norm_heads(y, p["ln_x"])
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = jnp.einsum("bshn,hnd->bsd", y.astype(x.dtype), p["wo"])
+    new_state = {"s": s_final, "tm": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def apply_channel_mix(cfg: ModelConfig, p: Params, env: MeshEnv,
+                      x: jnp.ndarray, state: Optional[dict] = None
+                      ) -> Tuple[jnp.ndarray, dict]:
+    prev = state["cm"] if state is not None else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"]
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["wr"]).astype(jnp.float32))
+    out = (rgate * v.astype(jnp.float32)).astype(x.dtype)
+    new_state = {"cm": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    H, n = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    return {
+        "s": jnp.zeros((batch, H, n, n), jnp.float32),
+        "tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

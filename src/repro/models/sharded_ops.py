@@ -1,0 +1,153 @@
+"""Vocab-sharded embedding / unembedding / loss primitives.
+
+With the vocabulary sharded over the ``model`` axis we never materialize a
+full (V, d) table or (B, S, V) logits on one device:
+
+* ``embed_lookup`` — masked local gather + all-reduce (each device gathers
+  ids that fall in its vocab shard, others contribute zeros).
+* ``fused_unembed_xent`` — Megatron-style fused projection + softmax
+  cross-entropy: per-device (B,S,V/tp) logits, three (B,S) all-reduces
+  (max, sum-exp, label logit).  Full logits never exist — this is the
+  difference between a 2.2 GiB and a 17 MiB live set for gemma3 train_4k.
+* ``sharded_argmax`` — greedy sampling over vocab-sharded logits.
+
+Each op falls back to the plain jnp equivalent when ``env`` is single-device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.meshenv import MeshEnv
+
+
+def padded_vocab(V: int, tp: int) -> int:
+    """Pad vocab to a multiple of lcm(tp, 128): shard_map needs exact
+    divisibility and 128 keeps the unembed matmul MXU-aligned.  Phantom ids
+    are masked to -inf wherever logits are consumed."""
+    unit = 128
+    while unit % max(tp, 1):
+        unit += 128
+    return -(-V // unit) * unit
+
+
+def embed_lookup(env: MeshEnv, table: jnp.ndarray, ids: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """table: (V, d) sharded P('model', None); ids: (B, S) -> (B, S, d)."""
+    if not env.is_spmd or env.tp <= 1:
+        return jnp.take(table, ids, axis=0)
+
+    V, d = table.shape
+    model = env.model_axis
+    batch = env.batch_if(ids.shape[0])
+
+    def f(table_loc, ids_loc):
+        lo = jax.lax.axis_index(model) * table_loc.shape[0]
+        local = ids_loc - lo
+        ok = (local >= 0) & (local < table_loc.shape[0])
+        safe = jnp.clip(local, 0, table_loc.shape[0] - 1)
+        out = jnp.take(table_loc, safe, axis=0)
+        out = jnp.where(ok[..., None], out, 0)
+        return jax.lax.psum(out, model)
+
+    return jax.shard_map(
+        f, mesh=env.mesh,
+        in_specs=(P(model, None), P(batch, None)),
+        out_specs=P(batch, None, None),
+        check_vma=False,
+    )(table, ids)
+
+
+def fused_unembed_xent(env: MeshEnv, h: jnp.ndarray, table: jnp.ndarray,
+                       labels: jnp.ndarray, *, transpose_table: bool,
+                       valid_vocab: Optional[int] = None) -> jnp.ndarray:
+    """Per-token cross entropy without materializing global logits.
+
+    h: (B, S, d);  table: (Vp, d) if transpose_table (tied embeddings)
+    else (d, Vp);  labels: (B, S) -> loss (B, S) f32.  ``valid_vocab``
+    masks padded vocab rows out of the partition function.
+    """
+    Vp = table.shape[0] if transpose_table else table.shape[1]
+    V = valid_vocab or Vp
+
+    if not env.is_spmd or env.tp <= 1:
+        logits = (h @ (table.T if transpose_table else table)).astype(jnp.float32)
+        if V < Vp:
+            logits = jnp.where(jnp.arange(Vp) < V, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return lse - ll
+
+    model = env.model_axis
+    batch = env.batch_if(h.shape[0])
+
+    def f(h_loc, table_loc, labels_loc):
+        w = table_loc.T if transpose_table else table_loc      # (d, V_loc)
+        logits = (h_loc @ w).astype(jnp.float32)               # (B,S,V_loc)
+        V_loc = logits.shape[-1]
+        lo = jax.lax.axis_index(model) * V_loc
+        gids = lo + jnp.arange(V_loc)
+        logits = jnp.where(gids < V, logits, -1e30)
+        # max-stabilizer: its analytic gradient contribution cancels in
+        # lse - ll, so stop_gradient is exact (and pmax has no JVP rule —
+        # the tangent must be cut BEFORE pmax sees it).
+        gmax = jax.lax.pmax(
+            jax.lax.stop_gradient(jnp.max(logits, -1)), model)  # (B,S)
+        sumexp = jax.lax.psum(
+            jnp.sum(jnp.exp(logits - gmax[..., None]), -1), model)
+        lse = jnp.log(sumexp) + gmax
+        local = labels_loc - lo
+        ok = (local >= 0) & (local < V_loc)
+        safe = jnp.clip(local, 0, V_loc - 1)
+        ll = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+        ll = jax.lax.psum(jnp.where(ok, ll, 0.0), model)
+        return lse - ll
+
+    tspec = P(model, None) if transpose_table else P(None, model)
+    return jax.shard_map(
+        f, mesh=env.mesh,
+        in_specs=(P(batch, None, None), tspec, P(batch, None)),
+        out_specs=P(batch, None),
+        check_vma=False,
+    )(h, table, labels)
+
+
+def unembed_logits(env: MeshEnv, h: jnp.ndarray, table: jnp.ndarray,
+                   *, transpose_table: bool,
+                   valid_vocab: Optional[int] = None) -> jnp.ndarray:
+    """h: (B, S, d) -> logits (B, S, Vp), vocab-sharded over model.
+    Padded vocab ids get -inf so downstream sampling ignores them."""
+    w = table.T if transpose_table else table
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    Vp = logits.shape[-1]
+    if valid_vocab and valid_vocab < Vp:
+        logits = jnp.where(jnp.arange(Vp) < valid_vocab, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return env.constrain(logits, env.batch_if(h.shape[0]), None, env.model())
+
+
+def sharded_argmax(env: MeshEnv, logits: jnp.ndarray) -> jnp.ndarray:
+    """Greedy token from vocab-sharded logits (..., V) -> (...,) int32."""
+    if not env.is_spmd or env.tp <= 1:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    model = env.model_axis
+    batch = env.batch_if(logits.shape[0])
+
+    def f(logits_loc):
+        V_loc = logits_loc.shape[-1]
+        lo = jax.lax.axis_index(model) * V_loc
+        lmax = jnp.max(logits_loc, -1)
+        larg = jnp.argmax(logits_loc, -1).astype(jnp.int32) + lo
+        gmax = jax.lax.pmax(lmax, model)
+        # pick the smallest global index achieving the max (deterministic)
+        cand = jnp.where(lmax >= gmax, larg, jnp.iinfo(jnp.int32).max)
+        return jax.lax.pmin(cand, model)
+
+    in_spec = P(*([batch] + [None] * (logits.ndim - 2) + [model]))
+    out_spec = P(*([batch] + [None] * (logits.ndim - 2)))
+    return jax.shard_map(f, mesh=env.mesh, in_specs=(in_spec,),
+                         out_specs=out_spec, check_vma=False)(logits)

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, AdamWState, global_norm, init, update
+from . import schedules

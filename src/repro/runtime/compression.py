@@ -1,0 +1,78 @@
+"""Gradient compression for the cross-pod (DCI) all-reduce.
+
+At 2+ pods the gradient all-reduce crosses the inter-pod links (~10× less
+bandwidth than intra-pod ICI).  We compress that leg only: int8 block
+quantization with error feedback (the classic 1-bit-Adam/PowerSGD-family
+residual trick — quantization error is carried to the next step, keeping
+the compressed SGD unbiased in the long run).
+
+``compressed_pod_mean`` runs inside shard_map over the ``pod`` axis:
+   q = quantize_int8(g_local + error)
+   g_hat = mean_over_pods(dequantize(all_gather(q)))      # 4× fewer bytes
+   error' = (g_local + error) - dequantize(q)
+
+Block scale granularity is 256 values (bf16-safe dynamic range).  The
+pure quantization functions are tested for error-feedback contraction in
+tests/test_compression.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: any shape -> (q int8 same shape, scales per 256-block)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape, dtype=jnp.float32) -> jnp.ndarray:
+    out = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return out[:size].reshape(shape).astype(dtype)
+
+
+def compressed_pod_mean(env, grads, errors):
+    """Mean gradients across the pod axis with int8 + error feedback.
+
+    grads/errors: pytrees with leaves replicated over ``pod`` is NOT
+    assumed — leaves are pod-local partial grads.  Returns (mean_grads,
+    new_errors).  If the mesh has no pod axis this is the identity."""
+    if not env.is_spmd or "pod" not in (env.mesh.axis_names or ()):
+        return grads, errors
+    npods = env.mesh.shape["pod"]
+
+    def leaf_fn(g, e):
+        shape, dtype = g.shape, g.dtype
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq_local = dequantize_int8(q, scale, shape)
+        new_e = corrected - deq_local
+        q_all = jax.lax.all_gather(q, "pod")            # int8 on the wire
+        s_all = jax.lax.all_gather(scale, "pod")
+        total = jnp.zeros(shape, jnp.float32)
+        for p in range(npods):
+            total = total + dequantize_int8(q_all[p], s_all[p], shape)
+        return (total / npods).astype(dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out = [leaf_fn(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

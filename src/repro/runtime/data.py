@@ -1,0 +1,117 @@
+"""Deterministic synthetic data pipeline + straggler-aware dispatch.
+
+Token batches are a pure function of (seed, step) — restarting from a
+checkpoint's data cursor reproduces the exact stream (fault tolerance is
+only real if the data pipeline is restartable).
+
+``StragglerAwareDispatcher`` models the host-side microbatch assignment
+used at scale: hosts report per-step latencies (EWMA), and the dispatcher
+shifts microbatches away from slow hosts so the synchronous step time
+tracks the p50 host rather than the p99 straggler.  Tested in
+tests/test_data.py with simulated slow hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Synthetic LM stream
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    seq_len: int = 512
+    global_batch: int = 8
+
+
+def batch_at(cfg: ModelConfig, dcfg: DataConfig, step: int) -> dict:
+    """Deterministic batch for ``step`` (pure function — restart safe).
+
+    Emits a Zipf-ish token distribution (more realistic collision behavior
+    for vocab-sharded losses than uniform)."""
+    key = jax.random.fold_in(jax.random.key(dcfg.seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, S = dcfg.global_batch, dcfg.seq_len
+    frontend = cfg.frontend_len if cfg.frontend == "vit" else 0
+    S_text = S - frontend
+    u = jax.random.uniform(k1, (B, S_text + 1), minval=1e-6, maxval=1.0)
+    zipf = jnp.minimum((u ** -0.7 - 1.0) * 40.0, cfg.vocab_size - 1)
+    toks = zipf.astype(jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.frontend == "vit":
+        batch["patch_embeds"] = jax.random.normal(
+            k2, (B, frontend, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.enc_dec:
+        batch["src_embeds"] = jax.random.normal(
+            k3, (B, S, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Straggler-aware microbatch dispatch (host-side control plane)
+# ---------------------------------------------------------------------------
+class StragglerAwareDispatcher:
+    """Assigns ``num_microbatches`` per step across ``num_hosts``.
+
+    Hosts get work inversely proportional to their EWMA step latency,
+    bounded to ±max_skew of the fair share; a host flagged dead gets zero
+    (its share is re-spread — crash handling works the same way)."""
+
+    def __init__(self, num_hosts: int, num_microbatches: int, *,
+                 ewma: float = 0.3, max_skew: float = 0.5):
+        assert num_microbatches >= num_hosts
+        self.num_hosts = num_hosts
+        self.num_microbatches = num_microbatches
+        self.ewma = ewma
+        self.max_skew = max_skew
+        self.latency = np.ones(num_hosts)
+        self.alive = np.ones(num_hosts, bool)
+
+    def report(self, host: int, step_latency: float):
+        self.latency[host] = ((1 - self.ewma) * self.latency[host]
+                              + self.ewma * step_latency)
+
+    def mark_dead(self, host: int):
+        self.alive[host] = False
+
+    def mark_alive(self, host: int):
+        self.alive[host] = True
+        self.latency[host] = float(np.median(self.latency[self.alive]))
+
+    def assignment(self) -> np.ndarray:
+        """(num_hosts,) microbatch counts summing to num_microbatches."""
+        speed = np.where(self.alive, 1.0 / self.latency, 0.0)
+        if speed.sum() == 0:
+            raise RuntimeError("no alive hosts")
+        fair = self.num_microbatches / self.alive.sum()
+        raw = self.num_microbatches * speed / speed.sum()
+        lo = np.where(self.alive, np.floor(fair * (1 - self.max_skew)), 0)
+        hi = np.where(self.alive, np.ceil(fair * (1 + self.max_skew)), 0)
+        counts = np.clip(np.round(raw), lo, hi).astype(int)
+        # repair rounding so counts sum exactly
+        diff = self.num_microbatches - counts.sum()
+        order = np.argsort(-speed)
+        i = 0
+        while diff != 0:
+            h = order[i % len(order)]
+            if self.alive[h]:
+                step = 1 if diff > 0 else -1
+                if lo[h] <= counts[h] + step <= hi[h] or (
+                        diff > 0 and counts[h] + step <= hi[h]):
+                    counts[h] += step
+                    diff -= step
+            i += 1
+            if i > 10_000:
+                counts[order[0]] += diff
+                break
+        return counts

@@ -1,0 +1,51 @@
+"""Elastic scaling: resume a checkpoint on a DIFFERENT mesh.
+
+Because checkpoints store logical (unsharded) arrays and shardings are
+derived from the spec trees + the *current* mesh, elastic rescale is:
+rebuild specs against the new mesh → restore → device_put.  Works for
+growing/shrinking the data axis (node loss, capacity changes); the model
+axis can also change when weight dims divide the new TP size.
+
+``shrink_mesh`` simulates node failure for tests: it rebuilds a mesh with
+fewer data rows from the surviving devices.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from .meshenv import MeshEnv, make_env
+
+
+def shrink_mesh(mesh: Mesh, *, drop_data_rows: int = 1) -> Mesh:
+    """New mesh with ``drop_data_rows`` fewer rows on the data axis —
+    the surviving-device mesh after a (simulated) node failure."""
+    names = mesh.axis_names
+    assert "data" in names
+    idx = list(names).index("data")
+    devs = np.asarray(mesh.devices)
+    slicer = [slice(None)] * devs.ndim
+    new_rows = devs.shape[idx] - drop_data_rows
+    if new_rows < 1:
+        raise ValueError("cannot drop all data rows")
+    slicer[idx] = slice(0, new_rows)
+    return Mesh(devs[tuple(slicer)], names)
+
+
+def remesh_state(state_tree, spec_fn, old_env: MeshEnv,
+                 new_mesh: Mesh):
+    """Re-device_put a live state pytree onto a new mesh.
+
+    spec_fn(env) must return the PartitionSpec tree for ``state_tree``
+    under a given env (specs can differ between meshes — e.g. kv-head
+    sharding toggles with tp size)."""
+    new_env = make_env(new_mesh)
+    specs = spec_fn(new_env)
+    shardings = jax.tree.map(
+        lambda sp: jax.sharding.NamedSharding(new_mesh, sp), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    host = jax.tree.map(lambda x: np.asarray(x), state_tree)
+    return jax.device_put(host, shardings), new_env

@@ -1,0 +1,131 @@
+"""Distributed train step: remat+scan forward, AdamW, ZeRO-1 state sharding.
+
+Sharding strategy (on the (pod, data, model) production meshes):
+  * params — TP specs from the model's spec tree (model axis), replicated
+    over data/pod;
+  * gradients — same as params (GSPMD inserts the data/pod all-reduce);
+  * AdamW m/v — params' spec PLUS the first divisible unsharded dim sharded
+    over the full data-parallel axes (ZeRO-1): the optimizer update runs on
+    a 1/dp shard and GSPMD materializes it as reduce-scatter(grad) →
+    shard-update → all-gather(param), the standard ZeRO schedule — without
+    this, yi-34b's 17 GiB/device of f32 state cannot fit 16 GiB HBM chips;
+  * batch — sharded over (pod, data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.optim import AdamWConfig, AdamWState
+from repro.optim import adamw
+from .meshenv import MeshEnv
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], env: MeshEnv) -> P:
+    """ZeRO-1: extend a param spec by sharding one unsharded dim over the
+    data axes (prefers the largest divisible dim)."""
+    if not env.is_spmd or env.dp <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    axes = tuple(env.batch_axes)
+    dp = env.dp
+    best, best_size = None, 0
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None and n % dp == 0 and n > best_size:
+            best, best_size = i, n
+    if best is None:
+        return spec
+    entries[best] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def opt_state_specs(param_specs, params, env: MeshEnv):
+    """Spec tree for AdamWState given param specs/shapes."""
+    mv = jax.tree.map(
+        lambda sp, p: zero1_spec(sp, p.shape, env), param_specs, params,
+        is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), m=mv, v=mv)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    capacity_factor: float = 1.25
+    triangular_attention: bool = False   # §Perf beyond-paper flag
+    context_parallel_attention: bool = False   # §Perf beyond-paper flag
+    kv_quant_serving: bool = False             # §Perf: int8 KV caches
+    bf16_collectives: bool = False             # §Perf: barrier-pinned casts
+    zero1: bool = True
+
+
+def make_train_step(cfg: ModelConfig, env: MeshEnv,
+                    tcfg: TrainConfig = TrainConfig(),
+                    lr_schedule: Optional[Callable] = None, *,
+                    unroll: bool = False, grad_specs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``grad_specs``: optional PartitionSpec tree (the ZeRO-1 m/v specs) —
+    constraining grads to it right after backward lets GSPMD lower the
+    data-axis gradient reduction as reduce-scatter instead of all-reduce +
+    slice (§Perf: ~2× less gradient traffic).
+
+    Not jitted here — the launcher jits with explicit in/out shardings
+    (see launch/dryrun.py and launch/train.py)."""
+    sched = lr_schedule or (lambda s: 1.0)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss_of(p):
+            total, metrics = loss_fn(
+                cfg, p, env, batch, remat=tcfg.remat,
+                capacity_factor=tcfg.capacity_factor,
+                triangular=tcfg.triangular_attention, unroll=unroll)
+            return total, metrics
+
+        (total, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+        if grad_specs is not None and env.is_spmd:
+            grads = jax.tree.map(
+                lambda g, sp: jax.lax.with_sharding_constraint(
+                    g, jax.sharding.NamedSharding(env.mesh, sp)),
+                grads, grad_specs,
+                is_leaf=lambda x: isinstance(x, P))
+        if tcfg.bf16_collectives and env.is_spmd:
+            # §Perf: pin bf16 materialization points so XLA cannot hoist
+            # AdamW's f32 upcast above the gradient all-reduce (halves
+            # gradient wire bytes) or sink the bf16 param cast below the
+            # ZeRO param all-gather.
+            grads = jax.lax.optimization_barrier(grads)
+        new_params, new_opt, opt_metrics = adamw.update(
+            tcfg.adamw, grads, opt_state, params,
+            lr_scale=sched(opt_state.step))
+        if tcfg.bf16_collectives and env.is_spmd:
+            new_params = jax.lax.optimization_barrier(new_params)
+        metrics = dict(metrics, total=total, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def shardings_for(env: MeshEnv, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (or None off-mesh)."""
+    if not env.is_spmd:
+        return None
+    return jax.tree.map(lambda sp: NamedSharding(env.mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, env: MeshEnv, batch_example) -> dict:
+    """Input batch specs: leading dim over (pod, data)."""
+    b = env.batch()
+    out = {}
+    for k, v in batch_example.items():
+        out[k] = P(b, *([None] * (jnp.ndim(v) - 1)))
+    return out

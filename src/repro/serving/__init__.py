@@ -1,0 +1,6 @@
+"""Serving layer: batched prefill/decode engine + MCSA split serving."""
+from .engine import DecodeState, InferenceEngine
+from .split import SplitServer, device_prefix, edge_suffix, layer_params
+
+__all__ = ["DecodeState", "InferenceEngine", "SplitServer",
+           "device_prefix", "edge_suffix", "layer_params"]

@@ -1,0 +1,188 @@
+"""Batched serving engine: continuous-batching prefill/decode over slot state.
+
+The engine owns a fixed pool of batch slots (the compiled decode program has
+a static batch dim).  Requests are admitted into free slots; each engine
+step runs ONE fused decode for all active slots; finished sequences free
+their slots.  Prefill runs per-request (padded to bucket lengths to bound
+compilation count).
+
+This is the edge-server role of the MCSA system: the planner (Li-GD)
+decides per-user split points and the resource share r_i; the engine is
+what actually burns those compute units.  ``InferenceEngine`` also serves
+unsplit models — the Edge-Only baseline — and is exercised CPU-scale in
+examples/serve_split.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.runtime.meshenv import CPU_ENV, MeshEnv
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # prompt (S,)
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+@dataclasses.dataclass
+class DecodeState:
+    caches: Any                     # stacked KV/recurrent caches (B slots)
+    last_token: jnp.ndarray         # (B, 1)
+    pos: np.ndarray                 # (B,) per-slot positions
+    active: np.ndarray              # (B,) bool
+
+
+def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 4096) * 4096
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params: Params, *,
+                 env: MeshEnv = CPU_ENV, slots: int = 4,
+                 cache_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.env = env
+        self.slots = slots
+        self.cache_len = cache_len
+        self.requests: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        caches, _ = tfm.init_caches(cfg, env, slots, cache_len)
+        self.state = DecodeState(
+            caches=caches,
+            last_token=jnp.zeros((slots, 1), jnp.int32),
+            pos=np.zeros((slots,), np.int64),
+            active=np.zeros((slots,), bool))
+        self._queue: List[Request] = []
+        self._next_rid = 0
+
+        @functools.partial(jax.jit, static_argnames=("prompt_len",))
+        def _prefill(params, tokens, prompt_len):
+            logits, caches = tfm.prefill(cfg, params, env,
+                                         {"tokens": tokens},
+                                         cache_len=cache_len)
+            return logits, caches
+
+        @jax.jit
+        def _decode(params, token, pos_vec, caches):
+            # pos_vec: (slots,) per-slot positions — decode_step supports
+            # vector positions (per-row cache scatter + per-row masks).
+            return tfm.decode_step(cfg, params, env, token,
+                                   pos_vec, caches)
+
+        self._prefill_fn = _prefill
+        self._decode_fn = _decode
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray, max_new: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, tokens=np.asarray(tokens),
+                                   max_new=max_new))
+        return rid
+
+    def _admit(self):
+        free = [i for i in range(self.slots) if not self.state.active[i]]
+        while free and self._queue:
+            slot = free.pop(0)
+            req = self._queue.pop(0)
+            S = len(req.tokens)
+            Sp = _bucket(S)
+            prompt = np.zeros((1, Sp), np.int32)
+            prompt[0, :S] = req.tokens
+            # NOTE: right-pad + prefill at padded length is wasteful but
+            # simple; positions beyond S are causally masked out for the
+            # last-token logits because we re-decode from position S below.
+            logits, caches = self._prefill_fn(self.params,
+                                              jnp.asarray(prompt[:, :S]),
+                                              prompt_len=S)
+            nxt = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+            req.out.append(nxt)
+            # copy this request's caches into its slot (scan-stacked cache
+            # leaves carry a leading superblock axis — the slot axis is
+            # wherever the pool is `slots`-wide and the request is 1-wide)
+            self.state.caches = jax.tree.map(
+                lambda pool, one: _slot_write(pool, one, slot, self.slots),
+                self.state.caches, caches)
+            lt = self.state.last_token.at[slot, 0].set(nxt)
+            self.state.last_token = lt
+            self.state.pos[slot] = S
+            self.state.active[slot] = True
+            self.requests[req.rid] = req
+            self.slot_of[req.rid] = slot
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """Admit + one decode for all active slots.
+        Returns [(rid, token)] emitted this step."""
+        self._admit()
+        if not self.state.active.any():
+            return []
+        logits, nxt, caches = self._decode_fn(
+            self.params, self.state.last_token,
+            jnp.asarray(self.state.pos, jnp.int32), self.state.caches)
+        self.state.caches = caches
+        self.state.last_token = nxt[:, None]
+        emitted = []
+        for rid, slot in list(self.slot_of.items()):
+            if not self.state.active[slot]:
+                continue
+            req = self.requests[rid]
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.state.pos[slot] += 1
+            emitted.append((rid, tok))
+            if req.done:
+                self.state.active[slot] = False
+                del self.slot_of[rid]
+        return emitted
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        while (self._queue or self.state.active.any()) and max_steps:
+            self.step()
+            max_steps -= 1
+        return {rid: req.out for rid, req in self.requests.items()}
+
+
+def _slot_write(pool, one, slot: int, slots: int):
+    """Write a single-request cache leaf into slot ``slot`` of the pool.
+
+    Handles both tail leaves (batch axis 0: pool (slots, L, ...), request
+    (1, L, ...)) and scan-stacked leaves (batch axis 1: pool
+    (n_sb, slots, L, ...), request (n_sb, 1, L, ...)); other dims are
+    padded/cropped (e.g. shorter prefill caches)."""
+    ax = 0
+    for i, (p, o) in enumerate(zip(pool.shape, one.shape)):
+        if o == 1 and p == slots:
+            ax = i
+            break
+    target = list(pool.shape)
+    target[ax] = 1
+    pads, slices = [], []
+    for a, b in zip(one.shape, target):
+        pads.append((0, max(0, b - a)))
+        slices.append(slice(0, b))
+    fitted = jnp.pad(one, pads)[tuple(slices)].astype(pool.dtype)
+    idx = [slice(None)] * pool.ndim
+    idx[ax] = slice(slot, slot + 1)
+    return pool.at[tuple(idx)].set(fitted)

@@ -1,0 +1,202 @@
+"""MCSA split execution for transformer LMs — the paper's technique as a
+first-class serving feature.
+
+The paper's "model-mule" (§3): the mobile device stores the WHOLE model and
+computes layers ``[0, s)`` locally; the residual activation at the split —
+the paper's ``w_s`` payload, (B, tokens, d_model) — ships to the edge
+server, which computes layers ``[s, M)`` plus the LM head.  The split point
+``s`` per user comes from the Li-GD planner (repro.core), driven by the
+same per-layer profiles ``repro.core.profile.profile_transformer`` derives.
+
+Implementation notes
+--------------------
+* Splits are python-static (one compiled program per split point, cached) —
+  the planner's split is control-plane state that changes at mobility
+  timescales, not per token.
+* Params stay in the production stacked-superblock layout;
+  ``layer_params`` tree-slices layer ``i``'s weights out of the scan stack,
+  so split serving shares the training/serving checkpoint format.
+* KV caches are split too: the device holds caches for its prefix layers,
+  the edge for the suffix — on an MLi-GD "re-split" decision only the
+  activation stream moves, never the cache (it is re-prefilled edge-side,
+  matching the paper's accounting where re-splits pay T_Ag, not migration).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import rms_norm
+from repro.models.sharded_ops import sharded_argmax, unembed_logits
+from repro.runtime.meshenv import CPU_ENV, MeshEnv
+
+Params = Dict[str, Any]
+
+
+def layer_params(cfg: ModelConfig, stack: Params, i: int) -> Params:
+    """Weights of absolute layer ``i`` from the {tail, scan} stack layout."""
+    period = len(cfg.pattern)
+    rem = cfg.num_layers % period
+    if i < rem:
+        return stack["tail"][i]
+    j = i - rem
+    return jax.tree.map(lambda x: x[j // period], stack["scan"][j % period])
+
+
+def layer_type_of(cfg: ModelConfig, i: int) -> str:
+    return cfg.layer_types()[i]
+
+
+def _apply_layers(cfg: ModelConfig, params: Params, env: MeshEnv, h,
+                  lo: int, hi: int, *, mode: str, positions,
+                  caches: Optional[List] = None, cache_len: int = 0,
+                  kv_memory=None):
+    """Apply absolute layers [lo, hi); per-layer python loop (split path)."""
+    new_caches = []
+    for i in range(lo, hi):
+        c = caches[i - lo] if caches is not None else None
+        h, nc, _ = tfm.apply_block(
+            cfg, layer_params(cfg, params["stack"], i), env,
+            layer_type_of(cfg, i), h, mode=mode, positions=positions,
+            cache=c, cache_len=cache_len, kv_memory=kv_memory)
+        new_caches.append(nc)
+    return h, new_caches
+
+
+def init_range_caches(cfg: ModelConfig, env: MeshEnv, lo: int, hi: int,
+                      batch: int, cache_len: int) -> List:
+    types = cfg.layer_types()
+    return [tfm.init_layer_cache(cfg, env, types[i], batch, cache_len)[0]
+            for i in range(lo, hi)]
+
+
+# ---------------------------------------------------------------------------
+# Device side: layers [0, s)
+# ---------------------------------------------------------------------------
+def device_prefix(cfg: ModelConfig, params: Params, env: MeshEnv, batch,
+                  split: int, *, mode: str = "prefill", cache_len: int = 0,
+                  caches: Optional[List] = None, pos=None):
+    """Run the device part.  Returns (w_s activation, device caches).
+
+    mode='prefill': batch = {'tokens': (B, S), ...} -> h (B, S, d).
+    mode='decode':  batch = token (B, 1); pos scalar; caches required.
+    """
+    if mode == "decode":
+        h = params["embed"]
+        h = tfm._embed_tokens(cfg, params, env, batch)
+        positions = pos
+    else:
+        h, positions, _ = tfm._assemble_inputs(cfg, params, env, batch)
+        if caches is None and cache_len:
+            caches = init_range_caches(cfg, env, 0, split, h.shape[0],
+                                       cache_len)
+    h, new_caches = _apply_layers(cfg, params, env, h, 0, split, mode=mode,
+                                  positions=positions, caches=caches,
+                                  cache_len=cache_len)
+    return h, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Edge side: layers [s, M) + head
+# ---------------------------------------------------------------------------
+def edge_suffix(cfg: ModelConfig, params: Params, env: MeshEnv, h_split,
+                split: int, *, mode: str = "prefill", cache_len: int = 0,
+                caches: Optional[List] = None, pos=None):
+    """Continue from the shipped activation.  Returns
+    (logits (B, Vp), next_token (B,), edge caches)."""
+    M = cfg.num_layers
+    if mode == "decode":
+        positions = pos
+    else:
+        S = h_split.shape[1]
+        positions = jnp.arange(S)[None, :].repeat(h_split.shape[0], 0)
+        if caches is None and cache_len:
+            caches = init_range_caches(cfg, env, split, M, h_split.shape[0],
+                                       cache_len)
+    h, new_caches = _apply_layers(cfg, params, env, h_split, split, M,
+                                  mode=mode, positions=positions,
+                                  caches=caches, cache_len=cache_len)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_logits(env, h[:, -1:], table,
+                            transpose_table=cfg.tie_embeddings,
+                            valid_vocab=cfg.vocab_size)[:, 0]
+    nxt = sharded_argmax(env, logits)
+    return logits, nxt, new_caches
+
+
+def activation_bits(cfg: ModelConfig, batch: int, tokens: int) -> float:
+    """Size of the shipped w_s payload (bf16 residual stream), in bits —
+    the quantity the Li-GD cost model prices."""
+    return float(batch * tokens * cfg.d_model * 16)
+
+
+# ---------------------------------------------------------------------------
+# SplitServer: jit-cached split programs keyed by (split, mode)
+# ---------------------------------------------------------------------------
+class SplitServer:
+    """Executes MCSA-planned split inference for one model.
+
+    The planner (repro.core.planner.MCSAPlanner) decides (s, B, r) per
+    user; this class owns the compiled device/edge programs and the split
+    caches, and verifies end-to-end equivalence with the unsplit model
+    (tests/test_split_serving.py)."""
+
+    def __init__(self, cfg: ModelConfig, params: Params,
+                 env: MeshEnv = CPU_ENV):
+        self.cfg = cfg
+        self.params = params
+        self.env = env
+        self._prefix_jit: dict = {}
+        self._suffix_jit: dict = {}
+
+    def _programs(self, split: int, mode: str):
+        key = (split, mode)
+        if key not in self._prefix_jit:
+            cfg, env = self.cfg, self.env
+            self._prefix_jit[key] = jax.jit(
+                functools.partial(device_prefix, cfg, self.params, env,
+                                  split=split, mode=mode),
+                static_argnames=("cache_len",))
+            self._suffix_jit[key] = jax.jit(
+                functools.partial(edge_suffix, cfg, self.params, env,
+                                  split=split, mode=mode),
+                static_argnames=("cache_len",))
+        return self._prefix_jit[key], self._suffix_jit[key]
+
+    def prefill(self, tokens, split: int, cache_len: int):
+        """Split prefill: device prefix -> shipped w_s -> edge suffix."""
+        prefix, suffix = self._programs(split, "prefill")
+        batch = {"tokens": tokens}
+        h_split, dev_caches = prefix(batch, cache_len=cache_len)
+        logits, nxt, edge_caches = suffix(h_split, cache_len=cache_len)
+        return logits, nxt, (dev_caches, edge_caches)
+
+    def decode(self, token, pos, caches, split: int):
+        dev_caches, edge_caches = caches
+        prefix, suffix = self._programs(split, "decode")
+        h_split, dev_caches = prefix(token, caches=dev_caches, pos=pos)
+        logits, nxt, edge_caches = suffix(h_split, caches=edge_caches,
+                                          pos=pos)
+        return logits, nxt, (dev_caches, edge_caches)
+
+    def generate(self, tokens, split: int, max_new: int,
+                 cache_len: Optional[int] = None):
+        """Greedy generation under a fixed split; returns (B, max_new)."""
+        B, S = tokens.shape
+        cache_len = cache_len or (S + max_new)
+        logits, nxt, caches = self.prefill(tokens, split, cache_len)
+        out = [nxt]
+        pos = S
+        for _ in range(max_new - 1):
+            logits, nxt, caches = self.decode(nxt[:, None],
+                                              jnp.asarray(pos, jnp.int32),
+                                              caches, split)
+            out.append(nxt)
+            pos += 1
+        return jnp.stack(out, axis=1)

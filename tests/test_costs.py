@@ -1,0 +1,144 @@
+"""Cost-model units (paper Eqs. 1-17): values, monotonicity, and the
+analytic ∂U/∂B form of Eq. (21) against autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costs
+from repro.core.costs import DeviceParams, EdgeParams, dev_dict, edge_dict
+
+
+DEV = dev_dict(DeviceParams())
+EDGE = edge_dict(EdgeParams())
+
+
+def test_device_delay_eq1():
+    d = dev_dict(DeviceParams(c_dev=10e9))
+    assert float(costs.t_device(d, jnp.asarray(5e9))) == pytest.approx(0.5)
+
+
+def test_server_delay_eq3_sublinear():
+    """λ(r) sub-linear: doubling r less than halves delay."""
+    t1 = float(costs.t_server(DEV, EDGE, jnp.asarray(1e12), jnp.asarray(8.0)))
+    t2 = float(costs.t_server(DEV, EDGE, jnp.asarray(1e12), jnp.asarray(16.0)))
+    assert t2 < t1
+    assert t2 > t1 / 2.0
+
+
+def test_transmit_delay_eq5_hop_structure():
+    """T = (w+m)/B_i + H·(w+m)/B_backhaul — exact form."""
+    w, m, B = 8e6, 1e5, 5e6
+    d = dev_dict(DeviceParams(hops=3))
+    t = float(costs.t_transmit(d, EDGE, jnp.asarray(w), jnp.asarray(m),
+                               jnp.asarray(B)))
+    expect = (w + m) / B + 3 * (w + m) / float(EDGE["B_backhaul"])
+    assert t == pytest.approx(expect, rel=1e-6)
+
+
+def test_shannon_rate_eq11_monotone_in_B():
+    rates = [float(costs.shannon_rate(DEV, EDGE, jnp.asarray(b)))
+             for b in (1e6, 5e6, 2e7)]
+    assert rates[0] < rates[1] < rates[2]
+
+
+def test_energy_eq12_split_monotone():
+    """More on-device layers -> more compute energy."""
+    e1 = float(costs.energy_compute(DEV, jnp.asarray(1e9)))
+    e2 = float(costs.energy_compute(DEV, jnp.asarray(2e9)))
+    assert e2 == pytest.approx(2 * e1, rel=1e-6)
+
+
+def test_rent_cost_eq15_convex_in_B():
+    B = np.linspace(1e6, 2e7, 9)
+    c = [float(costs.rent_cost(EDGE, jnp.asarray(4.0), jnp.asarray(b)))
+         for b in B]
+    diffs = np.diff(c)
+    assert np.all(diffs > 0)            # increasing
+    assert np.all(np.diff(diffs) >= -1e-12)   # convex
+
+
+def test_utility_device_only_has_no_edge_terms():
+    """s = M (f_e = 0): no transmission, rent, or edge-compute terms."""
+    U, (T, E, C) = costs.utility(DEV, EDGE, jnp.asarray(1e9),
+                                 jnp.asarray(0.0), jnp.asarray(8e6),
+                                 jnp.asarray(1e5), jnp.asarray(5e6),
+                                 jnp.asarray(4.0))
+    assert float(C) == 0.0
+    assert float(T) == pytest.approx(
+        float(costs.t_device(DEV, jnp.asarray(1e9))
+              + costs.cbr_calc(DEV)), rel=1e-5)
+
+
+def _paper_dUdB(dev, edge, w, m, B, k_rounds):
+    """Eq. (21) specialized to our g(B) = ρ_B (B/B0)^γ."""
+    wT, wE, wC = (float(dev[x]) for x in ("w_T", "w_E", "w_C"))
+    p = float(dev["p_tx"])
+    a = float(dev["alpha"]) * float(dev["g_fade"])
+    N0 = float(edge["N0"])
+    snr = p * a / (B * N0)
+    log_term = np.log2(1 + snr)
+    # d/dB [B log2(1+c/B)] = log2(1+c/B) - (c/B)/((1+c/B) ln2)
+    dtau = log_term - snr / ((1 + snr) * np.log(2))
+    term_T = -wT * (w + m) / B ** 2
+    term_E = -wE * p * w * dtau / (B * log_term) ** 2
+    g_prime = (float(edge["rho_B"]) * float(edge["gamma_B"])
+               * (B / float(edge["B0"])) ** (float(edge["gamma_B"]) - 1)
+               / float(edge["B0"]))
+    term_C = wC * g_prime / k_rounds
+    return term_T + term_E + term_C
+
+
+@pytest.mark.parametrize("B", [2e6, 5e6, 1.5e7])
+def test_autodiff_matches_paper_eq21(B):
+    """jax.grad of Eq. (19) == the paper's closed-form ∂U/∂B (Eq. 21).
+
+    The paper's Eq. 18/21 drop the final-result term m from E^t and
+    amortize rent by k; we evaluate with m folded in (Eq. 12 form) on both
+    sides, so the comparison is exact."""
+    w, m = 8e6, 0.0
+    f_l, f_e, r = 1e9, 5e9, 4.0
+
+    def U_of_B(Bv):
+        U, _ = costs.utility(DEV, EDGE, jnp.asarray(f_l), jnp.asarray(f_e),
+                             jnp.asarray(w), jnp.asarray(m), Bv,
+                             jnp.asarray(r))
+        return U
+
+    g = float(jax.grad(U_of_B)(jnp.asarray(B, jnp.float32)))
+    expect = _paper_dUdB(DEV, EDGE, w, m, B,
+                         float(DEV["k_rounds"]))
+    assert g == pytest.approx(expect, rel=2e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    B=st.floats(1.5e6, 1.9e7),
+    r=st.floats(1.5, 30.0),
+    f_l=st.floats(1e8, 5e10),
+    f_e=st.floats(1e8, 5e11),
+)
+def test_utility_positive_and_finite(B, r, f_l, f_e):
+    U, (T, E, C) = costs.utility(DEV, EDGE, jnp.asarray(f_l),
+                                 jnp.asarray(f_e), jnp.asarray(8e6),
+                                 jnp.asarray(1e5), jnp.asarray(B),
+                                 jnp.asarray(r))
+    for v in (U, T, E, C):
+        assert np.isfinite(float(v))
+        assert float(v) >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.floats(1.5e6, 1.9e7))
+def test_utility_convex_in_B(B):
+    """Corollary 2's convexity premise, checked numerically: U(B) has
+    non-negative second differences around any interior point."""
+    h = 5e4
+    def u(b):
+        U, _ = costs.utility(DEV, EDGE, jnp.asarray(1e9), jnp.asarray(5e9),
+                             jnp.asarray(8e6), jnp.asarray(1e5),
+                             jnp.asarray(b, jnp.float64), jnp.asarray(4.0))
+        return float(U)
+    second = u(B - h) - 2 * u(B) + u(B + h)
+    assert second >= -1e-9

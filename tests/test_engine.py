@@ -1,0 +1,70 @@
+"""Continuous-batching inference engine: per-request outputs must match
+isolated generation despite slot sharing and per-slot positions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as tfm
+from repro.runtime.meshenv import CPU_ENV as env
+from repro.serving.engine import InferenceEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("starcoder2-3b"), layers=2)
+    params, _ = tfm.init_lm(cfg, jax.random.PRNGKey(0), env)
+    return cfg, params
+
+
+def _reference(cfg, params, prompt, max_new):
+    logits, caches = tfm.prefill(cfg, params, env,
+                                 {"tokens": prompt[None]},
+                                 cache_len=512)
+    cur = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    out = [int(cur[0])]
+    pos = prompt.shape[0]
+    for i in range(max_new - 1):
+        _, cur, caches = tfm.decode_step(cfg, params, env, cur[:, None],
+                                         jnp.asarray(pos + i, jnp.int32),
+                                         caches)
+        out.append(int(cur[0]))
+    return out
+
+
+def test_single_request_matches_reference(model):
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=2, cache_len=512)
+    prompt = np.asarray([5, 9, 2, 7], np.int32)
+    rid = eng.submit(prompt, max_new=6)
+    results = eng.run_to_completion()
+    assert results[rid] == _reference(cfg, params, jnp.asarray(prompt), 6)
+
+
+def test_concurrent_requests_isolated(model):
+    """Different prompts in different slots do not contaminate each other
+    (per-slot positions + per-row cache scatter)."""
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=3, cache_len=512)
+    prompts = [np.asarray([1, 2, 3], np.int32),
+               np.asarray([9, 8, 7, 6, 5], np.int32),
+               np.asarray([4, 4], np.int32)]
+    rids = [eng.submit(p, max_new=5) for p in prompts]
+    results = eng.run_to_completion()
+    for rid, p in zip(rids, prompts):
+        assert results[rid] == _reference(cfg, params, jnp.asarray(p), 5), \
+            f"request {rid} diverged"
+
+
+def test_more_requests_than_slots(model):
+    """Queueing: 4 requests through 2 slots all complete correctly."""
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=2, cache_len=512)
+    prompts = [np.asarray([i + 1, i + 2, i + 3], np.int32)
+               for i in range(4)]
+    rids = [eng.submit(p, max_new=4) for p in prompts]
+    results = eng.run_to_completion()
+    assert len(results) == 4
+    for rid, p in zip(rids, prompts):
+        assert results[rid] == _reference(cfg, params, jnp.asarray(p), 4)

@@ -1,0 +1,128 @@
+"""Li-GD (Algorithm 1): optimality vs dense grid search, warm-start
+speedup (Corollary 4), constraint satisfaction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.chain_cnns import nin, vgg16, yolov2
+from repro.core.costs import (DeviceParams, EdgeParams, dev_dict, edge_dict,
+                              stack_devices, utility)
+from repro.core.ligd import LiGDConfig, solve_ligd, solve_ligd_batch_jit
+from repro.core.profile import profile_of
+
+
+def _grid_best(profile, dev, edge, nB=40, nr=40):
+    """Dense grid search over (s, B, r) — the brute-force oracle."""
+    f_l, f_e, w = profile.prefix_tables()
+    m = profile.result_bits
+    Bs = np.linspace(float(edge["B_min"]), float(edge["B_max"]), nB)
+    rs = np.linspace(float(edge["r_min"]), float(edge["r_max"]), nr)
+    best = (np.inf, None)
+    for s in range(len(f_l)):
+        BB, RR = np.meshgrid(Bs, rs, indexing="ij")
+        U, _ = jax.vmap(lambda b, r: utility(
+            dev, edge, jnp.asarray(f_l[s], jnp.float32),
+            jnp.asarray(f_e[s], jnp.float32),
+            jnp.asarray(w[s], jnp.float32), jnp.asarray(m, jnp.float32),
+            b, r))(jnp.asarray(BB.ravel(), jnp.float32),
+                   jnp.asarray(RR.ravel(), jnp.float32))
+        i = int(jnp.argmin(U))
+        if float(U[i]) < best[0]:
+            best = (float(U[i]), (s, BB.ravel()[i], RR.ravel()[i]))
+    return best
+
+
+@pytest.mark.parametrize("model", [nin, yolov2, vgg16])
+def test_ligd_matches_grid_search(model):
+    profile = profile_of(model())
+    dev = dev_dict(DeviceParams())
+    edge = edge_dict(EdgeParams())
+    # The default scenario's optimum sits at a box corner on a shallow
+    # valley: plain GD needs a tight |ΔU| threshold to keep crawling
+    # (the paper's own remark on step-size adaptation).
+    res = solve_ligd(profile, dev, edge,
+                     LiGDConfig(max_iters=20000, lr=0.2, eps=1e-9))
+    u_grid, (s_g, B_g, r_g) = _grid_best(profile, dev, edge)
+    assert float(res.U) <= u_grid * 1.02 + 1e-9
+
+
+def test_ligd_respects_box_constraints():
+    profile = profile_of(nin())
+    edge = edge_dict(EdgeParams())
+    for c_dev in (5e9, 25e9, 100e9):
+        dev = dev_dict(DeviceParams(c_dev=c_dev))
+        res = solve_ligd(profile, dev, edge)
+        assert float(edge["B_min"]) - 1 <= float(res.B) <= float(edge["B_max"]) + 1
+        assert float(edge["r_min"]) - 1e-6 <= float(res.r) <= float(edge["r_max"]) + 1e-6
+        assert 0 <= int(res.split) <= profile.num_layers
+
+
+def test_warm_start_reduces_iterations():
+    """Corollary 4: Li-GD's warm start needs fewer GD iterations than
+    cold-starting every layer (plain GD × M)."""
+    profile = profile_of(vgg16())
+    dev = dev_dict(DeviceParams())
+    edge = edge_dict(EdgeParams())
+    warm = solve_ligd(profile, dev, edge, LiGDConfig(warm_start=True))
+    cold = solve_ligd(profile, dev, edge, LiGDConfig(warm_start=False))
+    it_w = int(np.sum(np.asarray(warm.iters_per_layer)))
+    it_c = int(np.sum(np.asarray(cold.iters_per_layer)))
+    assert it_w < it_c
+    # and reaches an equally good solution
+    assert float(warm.U) <= float(cold.U) * 1.01 + 1e-9
+
+
+def test_ligd_batch_matches_single():
+    profile = profile_of(nin())
+    edge = edge_dict(EdgeParams())
+    devs = [DeviceParams(c_dev=c) for c in (5e9, 25e9, 80e9)]
+    batched = solve_ligd_batch_jit(profile, stack_devices(devs), edge)
+    for i, d in enumerate(devs):
+        single = solve_ligd(profile, dev_dict(d), edge)
+        assert float(batched.U[i]) == pytest.approx(float(single.U),
+                                                    rel=1e-4)
+        assert int(batched.split[i]) == int(single.split)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c_dev=st.floats(5e9, 100e9),
+    w_T=st.floats(0.1, 0.8),
+    w_E=st.floats(0.1, 0.8),
+)
+def test_ligd_beats_midpoint_everywhere(c_dev, w_T, w_E):
+    """Li-GD's optimum is never worse than the naive midpoint allocation
+    at the best midpoint split (hypothesis-swept device params)."""
+    total = w_T + w_E
+    if total >= 0.95:
+        w_T, w_E = w_T / (total + 0.1), w_E / (total + 0.1)
+    w_C = 1.0 - w_T - w_E
+    profile = profile_of(nin())
+    dev = dev_dict(DeviceParams(c_dev=c_dev, w_T=w_T, w_E=w_E, w_C=w_C))
+    edge = edge_dict(EdgeParams())
+    res = solve_ligd(profile, dev, edge, LiGDConfig(max_iters=500))
+    f_l, f_e, w = profile.prefix_tables()
+    m = profile.result_bits
+    B_mid = 0.5 * (float(edge["B_min"]) + float(edge["B_max"]))
+    r_mid = 0.5 * (float(edge["r_min"]) + float(edge["r_max"]))
+    U_mid = min(
+        float(utility(dev, edge, jnp.asarray(f_l[s], jnp.float32),
+                      jnp.asarray(f_e[s], jnp.float32),
+                      jnp.asarray(w[s], jnp.float32),
+                      jnp.asarray(m, jnp.float32),
+                      jnp.asarray(B_mid), jnp.asarray(r_mid))[0])
+        for s in range(len(f_l)))
+    assert float(res.U) <= U_mid * 1.005 + 1e-9
+
+
+def test_split_tradeoff_moves_with_device_speed():
+    """Faster devices should (weakly) keep MORE layers on device."""
+    profile = profile_of(vgg16())
+    edge = edge_dict(EdgeParams())
+    slow = solve_ligd(profile, dev_dict(DeviceParams(c_dev=2e9)), edge)
+    fast = solve_ligd(profile, dev_dict(DeviceParams(c_dev=500e9)), edge)
+    assert int(fast.split) >= int(slow.split)

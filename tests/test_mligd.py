@@ -1,0 +1,103 @@
+"""MLi-GD (Algorithm 2): relaxation exactness (Corollary 7), the
+re-split vs relay-back decision, and batch consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.chain_cnns import nin, vgg16
+from repro.core.costs import (DeviceParams, EdgeParams, dev_dict, edge_dict,
+                              stack_devices)
+from repro.core.ligd import LiGDConfig, solve_ligd
+from repro.core.mligd import (orig_strategy_dict, solve_mligd,
+                              solve_mligd_batch_jit, u_transmit_back)
+from repro.core.profile import profile_of
+
+
+def _setup(model=nin, c_dev=25e9, hops_back=2.0, new_edge=None):
+    profile = profile_of(model())
+    dev = dev_dict(DeviceParams(c_dev=c_dev))
+    edge_orig = edge_dict(EdgeParams())
+    prev = solve_ligd(profile, dev, edge_orig)
+    orig = orig_strategy_dict(profile, edge_orig, prev)
+    edge_new = edge_dict(new_edge or EdgeParams())
+    return profile, dev, edge_new, orig, prev
+
+
+def test_decision_is_vertex():
+    """Corollary 7: the relaxed R solution is evaluated at vertices —
+    returned R is exactly 0 or 1."""
+    profile, dev, edge_new, orig, _ = _setup()
+    res = solve_mligd(profile, dev, edge_new, orig,
+                      jnp.asarray(2.0, jnp.float32))
+    assert int(res.R) in (0, 1)
+    assert float(res.U) == pytest.approx(
+        min(float(res.U_recalc), float(res.U_back)), rel=1e-6)
+
+
+def test_relay_back_wins_when_new_server_is_weak():
+    """New server much slower + expensive -> transmit back (R=1)."""
+    weak = EdgeParams(c_min=2e9, rho_min=5e-3, r_max=4.0)
+    profile, dev, edge_new, orig, _ = _setup(new_edge=weak, hops_back=1.0)
+    res = solve_mligd(profile, dev, edge_new, orig,
+                      jnp.asarray(1.0, jnp.float32))
+    assert int(res.R) == 1
+    # relayed strategy keeps the original split
+    assert int(res.split) == int(orig["split"])
+
+
+def test_resplit_wins_when_new_server_is_strong_and_back_is_far():
+    strong = EdgeParams(c_min=500e9, rho_min=1e-5, r_max=64.0)
+    profile, dev, edge_new, orig, _ = _setup(new_edge=strong)
+    res = solve_mligd(profile, dev, edge_new, orig,
+                      jnp.asarray(12.0, jnp.float32))
+    assert int(res.R) == 0
+
+
+def test_mligd_utility_never_worse_than_forced_strategies():
+    """The MLi-GD pick is min over both alternatives, for several
+    topology/hardware draws."""
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        new_edge = EdgeParams(c_min=float(rng.uniform(5e9, 200e9)),
+                              rho_min=float(rng.uniform(1e-5, 1e-3)))
+        profile, dev, edge_new, orig, _ = _setup(new_edge=new_edge)
+        hops = jnp.asarray(float(rng.integers(1, 8)), jnp.float32)
+        res = solve_mligd(profile, dev, edge_new, orig, hops)
+        assert float(res.U) <= float(res.U_recalc) + 1e-6
+        assert float(res.U) <= float(res.U_back) + 1e-6
+
+
+def test_u_back_increases_with_hops():
+    profile, dev, edge_new, orig, _ = _setup()
+    m = jnp.asarray(profile.result_bits, jnp.float32)
+    B = jnp.asarray(5e6, jnp.float32)
+    u2, _ = u_transmit_back(dev, edge_new, orig, m, B,
+                            jnp.asarray(2.0, jnp.float32))
+    u8, _ = u_transmit_back(dev, edge_new, orig, m, B,
+                            jnp.asarray(8.0, jnp.float32))
+    assert float(u8) > float(u2)
+
+
+def test_mligd_batch_matches_single():
+    profile = profile_of(nin())
+    edge_orig = edge_dict(EdgeParams())
+    devs = [DeviceParams(c_dev=c) for c in (8e9, 40e9)]
+    origs, hops = [], []
+    for d in devs:
+        prev = solve_ligd(profile, dev_dict(d), edge_orig)
+        origs.append(orig_strategy_dict(profile, edge_orig, prev))
+        hops.append(3.0)
+    edge_new = EdgeParams(c_min=80e9)
+    origs_s = jax.tree.map(lambda *xs: jnp.stack(xs), *origs)
+    batched = solve_mligd_batch_jit(
+        profile, stack_devices(devs), edge_dict(edge_new), origs_s,
+        jnp.asarray(hops, jnp.float32))
+    for i, d in enumerate(devs):
+        single = solve_mligd(profile, dev_dict(d), edge_dict(edge_new),
+                             origs[i], jnp.asarray(3.0, jnp.float32))
+        assert int(batched.R[i]) == int(single.R)
+        assert float(batched.U[i]) == pytest.approx(float(single.U),
+                                                    rel=1e-4)

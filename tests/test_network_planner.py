@@ -1,0 +1,101 @@
+"""Topology, mobility, and planner integration (the paper's Fig. 1
+system), plus hypothesis sweeps over topology seeds."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costs import DeviceParams
+from repro.core.ligd import LiGDConfig
+from repro.core.mobility import RandomWaypointMobility
+from repro.core.network import build_topology
+from repro.core.planner import MCSAPlanner
+from repro.core.profile import profile_of
+from repro.configs.chain_cnns import nin, vgg16
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       num_aps=st.integers(6, 30),
+       num_servers=st.integers(1, 5))
+def test_topology_invariants(seed, num_aps, num_servers):
+    num_servers = min(num_servers, num_aps)
+    topo = build_topology(num_aps, num_servers, seed=seed)
+    # every AP reaches its serving server with finite hops
+    assert np.all(np.isfinite(topo.hops[np.arange(num_aps),
+                                        topo.ap_server]))
+    # server APs serve themselves at 0 hops
+    for z, ap in enumerate(topo.server_aps):
+        assert topo.hops[ap, z] == 0
+    # assignment picks the hop-minimal server
+    best = topo.hops.min(axis=1)
+    got = topo.hops[np.arange(num_aps), topo.ap_server]
+    assert np.all(got == best)
+    # adjacency symmetric, no self loops
+    assert np.array_equal(topo.adj, topo.adj.T)
+    assert not topo.adj.diagonal().any()
+
+
+def test_mobility_generates_handoffs():
+    topo = build_topology(16, 4, seed=0)
+    mob = RandomWaypointMobility(topo, 12, seed=1, speed_range=(10., 30.))
+    events = []
+    for t in range(60):
+        events += mob.step(10.0, t * 10.0)
+    assert len(events) > 0
+    for ev in events:
+        assert ev.new_server != ev.old_server
+        assert ev.hops_new >= 0 and ev.hops_back >= 0
+
+
+def test_planner_static_and_handoff_cycle():
+    topo = build_topology(16, 4, seed=0)
+    prof = profile_of(vgg16())
+    planner = MCSAPlanner(prof, topo, LiGDConfig(max_iters=200))
+    devices = [DeviceParams(c_dev=c)
+               for c in np.linspace(3e9, 8e9, 6)]
+    mob = RandomWaypointMobility(topo, 6, seed=2, speed_range=(10., 30.))
+    aps = topo.nearest_ap(mob.positions())
+    res, servers, plans = planner.plan_static(devices, aps)
+    assert len(plans) == 6
+    for p in plans:
+        assert 0 <= p.split <= prof.num_layers
+        assert p.U > 0
+    # planner CBR feedback: after one solve, t_ag estimate is positive
+    assert planner.t_ag_estimate > 0
+
+    events = []
+    for t in range(100):
+        events += mob.step(10.0, t * 10.0)
+        if events:
+            break
+    if events:
+        planner.on_handoffs(events, devices, plans)
+        for ev in events:
+            p = plans[ev.user]
+            assert p.R in (0, 1)
+            # relay-back keeps the original server, re-split moves
+            if p.R == 0:
+                assert p.server == ev.new_server
+
+
+def test_planner_mcsa_beats_baselines_on_utility():
+    """MCSA minimizes U = wT·T + wE·E + wC·C — its utility must dominate
+    every baseline's utility computed with the same weights."""
+    topo = build_topology(12, 3, seed=3)
+    prof = profile_of(nin())
+    planner = MCSAPlanner(prof, topo,
+                          LiGDConfig(max_iters=20000, lr=0.2, eps=1e-9))
+    devices = [DeviceParams() for _ in range(5)]
+    aps = topo.nearest_ap(np.asarray(
+        [[100., 100.]] * 5))
+    res, _, _ = planner.plan_static(devices, aps)
+    d = devices[0]
+    U_mcsa = np.asarray(res.U)
+    for name in ("device_only", "edge_only", "neurosurgeon",
+                 "dnn_surgery"):
+        b = planner.run_baseline(name, devices, aps)
+        U_b = (d.w_T * np.asarray(b.T) + d.w_E * np.asarray(b.E)
+               + d.w_C * np.asarray(b.C))
+        assert np.all(U_mcsa <= U_b * 1.05 + 1e-9), name

@@ -1,0 +1,193 @@
+"""Runtime substrate: checkpoint fault tolerance, data determinism,
+straggler dispatch, gradient compression, elastic remesh."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.compression import dequantize_int8, quantize_int8
+from repro.runtime.data import DataConfig, StragglerAwareDispatcher, batch_at
+from repro.runtime.meshenv import CPU_ENV as env
+
+
+@pytest.fixture(scope="module")
+def small_state():
+    cfg = reduced(get_config("qwen3-8b"))
+    params, _ = tfm.init_lm(cfg, jax.random.PRNGKey(0), env)
+    opt = adamw.init(params)
+    return cfg, params, opt
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: atomic, restart-safe, retention
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path, small_state):
+    cfg, params, opt = small_state
+    state = ckpt.TrainState(step=7, params=params, opt_state=opt,
+                            data_cursor=7, rng_key=jax.random.key(3))
+    ckpt.save(str(tmp_path), state)
+    example = ckpt.TrainState(step=0, params=params, opt_state=opt,
+                              data_cursor=0, rng_key=jax.random.key(0))
+    restored = ckpt.restore(str(tmp_path), example)
+    assert restored is not None
+    assert restored.step == 7 and restored.data_cursor == 7
+    for a, b in zip(jax.tree.leaves(restored.params),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_corrupt_newest_falls_back(tmp_path, small_state):
+    cfg, params, opt = small_state
+    for step in (1, 2):
+        ckpt.save(str(tmp_path), ckpt.TrainState(
+            step=step, params=params, opt_state=opt, data_cursor=step,
+            rng_key=jax.random.key(step)))
+    # corrupt the newest
+    path = os.path.join(str(tmp_path), "step_0000000002", "arrays.npz")
+    with open(path, "wb") as f:
+        f.write(b"garbage")
+    example = ckpt.TrainState(step=0, params=params, opt_state=opt,
+                              data_cursor=0, rng_key=jax.random.key(0))
+    restored = ckpt.restore(str(tmp_path), example)
+    assert restored is not None and restored.step == 1
+
+
+def test_checkpoint_retention(tmp_path, small_state):
+    cfg, params, opt = small_state
+    for step in range(6):
+        ckpt.save(str(tmp_path), ckpt.TrainState(
+            step=step, params=params, opt_state=opt, data_cursor=step,
+            rng_key=jax.random.key(step)), retain=3)
+    assert ckpt.list_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_train_resume_bit_identical(tmp_path):
+    """Train 4 steps; train 2 + checkpoint + resume 2: same final loss."""
+    from repro.runtime.train import TrainConfig, make_train_step
+    cfg = reduced(get_config("starcoder2-3b"))
+    dcfg = DataConfig(seed=1, seq_len=32, global_batch=2)
+    step_fn = jax.jit(make_train_step(cfg, env, TrainConfig(remat=False)))
+
+    def fresh():
+        p, _ = tfm.init_lm(cfg, jax.random.PRNGKey(0), env)
+        return p, adamw.init(p)
+
+    # straight-through
+    p, o = fresh()
+    for s in range(4):
+        p, o, m = step_fn(p, o, batch_at(cfg, dcfg, s))
+    loss_straight = float(m["loss"])
+
+    # interrupted + resumed
+    p, o = fresh()
+    for s in range(2):
+        p, o, _ = step_fn(p, o, batch_at(cfg, dcfg, s))
+    ckpt.save(str(tmp_path), ckpt.TrainState(
+        step=2, params=p, opt_state=o, data_cursor=2,
+        rng_key=jax.random.key(2)))
+    p2, o2 = fresh()
+    example = ckpt.TrainState(step=0, params=p2, opt_state=o2,
+                              data_cursor=0, rng_key=jax.random.key(0))
+    restored = ckpt.restore(str(tmp_path), example)
+    p, o = restored.params, restored.opt_state
+    for s in range(restored.data_cursor, 4):
+        p, o, m = step_fn(p, o, batch_at(cfg, dcfg, s))
+    assert float(m["loss"]) == pytest.approx(loss_straight, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic():
+    cfg = reduced(get_config("qwen3-8b"))
+    dcfg = DataConfig(seed=3, seq_len=64, global_batch=4)
+    b1 = batch_at(cfg, dcfg, 11)
+    b2 = batch_at(cfg, dcfg, 11)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = batch_at(cfg, dcfg, 12)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_data_tokens_in_vocab():
+    cfg = reduced(get_config("gemma3-27b"))
+    dcfg = DataConfig(seed=0, seq_len=128, global_batch=4)
+    b = batch_at(cfg, dcfg, 0)
+    toks = np.asarray(b["tokens"])
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# Straggler-aware dispatch
+# ---------------------------------------------------------------------------
+def test_straggler_shifts_work():
+    d = StragglerAwareDispatcher(num_hosts=4, num_microbatches=16)
+    for _ in range(20):
+        d.report(0, 3.0)                      # host 0 is 3× slower
+        for h in (1, 2, 3):
+            d.report(h, 1.0)
+    counts = d.assignment()
+    assert counts.sum() == 16
+    assert counts[0] < counts[1]
+    assert counts[0] >= 2                     # bounded skew, no starvation
+
+
+def test_straggler_dead_host_respread():
+    d = StragglerAwareDispatcher(num_hosts=4, num_microbatches=12)
+    d.mark_dead(2)
+    counts = d.assignment()
+    assert counts[2] == 0
+    assert counts.sum() == 12
+    d.mark_alive(2)
+    assert d.assignment()[2] > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(lat=st.lists(st.floats(0.5, 5.0), min_size=2, max_size=8))
+def test_straggler_assignment_always_complete(lat):
+    d = StragglerAwareDispatcher(num_hosts=len(lat),
+                                 num_microbatches=4 * len(lat))
+    for h, l in enumerate(lat):
+        d.report(h, l)
+    counts = d.assignment()
+    assert counts.sum() == 4 * len(lat)
+    assert (counts >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale, x.shape)
+    err = np.abs(np.asarray(deq - x))
+    block_max = np.abs(np.asarray(x)).max()
+    assert err.max() <= block_max / 127.0 + 1e-6
+
+
+def test_error_feedback_converges():
+    """Accumulated compressed-sum with error feedback tracks the true sum
+    (the long-run unbiasedness the DCN compression relies on)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    err = jnp.zeros_like(g_true)
+    acc_comp = np.zeros((512,))
+    for step in range(50):
+        corrected = g_true + err
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s, corrected.shape)
+        err = corrected - deq
+        acc_comp += np.asarray(deq)
+    acc_true = np.asarray(g_true) * 50
+    rel = np.abs(acc_comp - acc_true).max() / (np.abs(acc_true).max())
+    assert rel < 0.01

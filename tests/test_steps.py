@@ -1,0 +1,85 @@
+"""Cell-program builders: input_specs shape oracle, abstract state trees,
+cell-support rules — all without touching a production mesh."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (ALL_CELLS, ARCH_IDS, CELLS_BY_NAME, get_config,
+                           reduced, supports_cell)
+from repro.launch.steps import (abstract_caches, abstract_params,
+                                build_cell, input_specs, text_len)
+from repro.runtime.meshenv import CPU_ENV
+from repro.runtime.train import TrainConfig
+
+FULL_ATTENTION = ("granite-moe-1b-a400m", "moonshot-v1-16b-a3b", "qwen3-8b",
+                  "starcoder2-3b", "yi-34b", "internvl2-1b",
+                  "seamless-m4t-large-v2")
+SUBQUADRATIC = ("gemma3-27b", "recurrentgemma-9b", "rwkv6-3b")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("cell_name", ["train_4k", "prefill_32k"])
+def test_input_specs_shapes(arch, cell_name):
+    cfg = get_config(arch)
+    cell = CELLS_BY_NAME[cell_name]
+    specs = input_specs(cfg, cell)
+    B = cell.global_batch
+    S = text_len(cfg, cell)
+    assert specs["tokens"].shape == (B, S)
+    total = S + (cfg.frontend_len if cfg.frontend == "vit" else 0)
+    assert total == cell.seq_len          # frontend prefix + text = cell
+    if cfg.enc_dec:
+        assert specs["src_embeds"].shape == (B, cell.seq_len, cfg.d_model)
+    if cell.kind == "train":
+        assert specs["labels"].shape == (B, S)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_support_rule(arch):
+    cfg = get_config(arch)
+    cell = CELLS_BY_NAME["long_500k"]
+    if arch in SUBQUADRATIC:
+        assert supports_cell(cfg, cell)
+    else:
+        assert not supports_cell(cfg, cell)
+        with pytest.raises(ValueError):
+            build_cell(cfg, CPU_ENV, cell, TrainConfig())
+
+
+def test_abstract_params_matches_real_init():
+    from repro.models import transformer as tfm
+    cfg = reduced(get_config("qwen3-8b"))
+    shapes, specs = abstract_params(cfg, CPU_ENV)
+    real, real_specs = tfm.init_lm(cfg, jax.random.PRNGKey(0), CPU_ENV)
+    flat_s = jax.tree.leaves(shapes)
+    flat_r = jax.tree.leaves(real)
+    assert len(flat_s) == len(flat_r)
+    for s, r in zip(flat_s, flat_r):
+        assert s.shape == r.shape and s.dtype == r.dtype
+    assert jax.tree.structure(specs, is_leaf=lambda x: not isinstance(
+        x, (dict, tuple))) == jax.tree.structure(
+        real_specs, is_leaf=lambda x: not isinstance(x, (dict, tuple)))
+
+
+def test_abstract_caches_kv_quant_shapes():
+    cfg = reduced(get_config("qwen3-8b"))
+    shapes, _ = abstract_caches(cfg, CPU_ENV, batch=2, cache_len=32,
+                                kv_quant=True)
+    import numpy as np
+    leaves = jax.tree.leaves(shapes)
+    dtypes = {np.dtype(l.dtype) for l in leaves}
+    assert np.dtype("int8") in dtypes     # quantized codes
+    assert np.dtype("float32") in dtypes  # per-row scales
+
+
+def test_cell_program_builds_on_cpu_env():
+    """Programs must build (not lower) with env=CPU (no mesh) — the same
+    builders drive CPU examples."""
+    cfg = reduced(get_config("granite-moe-1b-a400m"))
+    for cell in ALL_CELLS:
+        if not supports_cell(cfg, cell):
+            continue
+        if cell.seq_len > 4096:
+            continue                       # CPU example scale only
+        prog = build_cell(cfg, CPU_ENV, cell, TrainConfig())
+        assert prog.kind in ("train", "prefill", "decode")
