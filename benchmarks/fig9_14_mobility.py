@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.baselines import run_baseline_batch
 from repro.core.costs import (DeviceParams, edge_dict, stack_devices)
 from repro.core.ligd import LiGDConfig
-from repro.core.mobility import RandomWaypointMobility
+from repro.core.mobility import HandoffBatch, RandomWaypointMobility
 from repro.core.network import build_topology
 from repro.core.planner import MCSAPlanner
 from repro.core.profile import profile_of
@@ -37,11 +37,10 @@ DT = 10.0
 
 def _evolve_hops(topo, mob, devices):
     """Run the waypoint simulation; return per-user hop counts to their
-    ORIGINAL server (baselines) and handoff events stream (MCSA)."""
-    orig_server = np.array([u.server for u in mob.users])
-    events = []
-    for t in range(SIM_STEPS):
-        events += mob.step(DT, t * DT)
+    ORIGINAL server (baselines) and the handoff batch stream (MCSA)."""
+    orig_server = mob.server.copy()
+    events = HandoffBatch.concat(
+        [mob.step(DT, t * DT) for t in range(SIM_STEPS)])
     aps = topo.nearest_ap(mob.positions())
     hops_back = topo.hops[aps, orig_server]         # baselines relay here
     return aps, orig_server, hops_back, events
@@ -61,15 +60,15 @@ def run(users: int = N_USERS, seed: int = 0) -> List[str]:
         mob = RandomWaypointMobility(topo, users, seed=seed + 1,
                                      speed_range=(5.0, 20.0))
         aps0 = topo.nearest_ap(mob.positions())
-        res0, servers0, plans = planner.plan_static(devices, aps0)
+        res0, servers0, fleet = planner.plan_static(devices, aps0)
 
         aps, orig_server, hops_back, events = _evolve_hops(topo, mob,
                                                            devices)
-        # MCSA: MLi-GD per handoff event (batched)
-        planner.on_handoffs(events, devices, plans)
-        mcsa_T = float(np.mean([p.T for p in plans]))
-        mcsa_E = float(np.mean([p.E for p in plans]))
-        mcsa_C = float(np.mean([p.C for p in plans]))
+        # MCSA: one batched MLi-GD solve over the whole event stream
+        planner.on_handoffs(events, devices, fleet)
+        mcsa_T = float(fleet.T.mean())
+        mcsa_E = float(fleet.E.mean())
+        mcsa_C = float(fleet.C.mean())
 
         # baselines: original plan, original server, NEW hop counts
         devs_moved = [dataclasses.replace(d, hops=int(h))

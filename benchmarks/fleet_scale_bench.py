@@ -1,0 +1,216 @@
+"""Fleet-planner scale benchmark: array-resident FleetState vs the seed's
+per-user-object planner.
+
+Two measurements:
+
+  1. **10k-user head-to-head** — identical scenario (same topology,
+     devices, mobility trace) planned by (a) the seed path: one Python
+     ``UserPlan`` per user, per-event loops building MLi-GD inputs, and
+     exact-shape jit calls (one recompile per distinct event count), and
+     (b) the FleetState path: struct-of-arrays plans, gather/scatter
+     handoff batches, power-of-two-padded solves.  Both share the same
+     jitted Li-GD/MLi-GD solvers — the delta IS the control plane.
+
+  2. **100k-user sustained mobility** — FleetState only: full waypoint
+     steps + handoff replanning at a fleet size the seed path cannot
+     finish in reasonable time (its per-user float() syncs alone are
+     O(minutes)).
+
+Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python benchmarks/fleet_scale_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.chain_cnns import nin
+from repro.core.costs import (DeviceFleet, DeviceParams, LayerProfile,
+                              edge_dict, stack_devices, stack_edges)
+from repro.core.ligd import LiGDConfig, LiGDResult, solve_ligd_batch_jit
+from repro.core.mligd import orig_strategy_dict, solve_mligd_batch_jit
+from repro.core.mobility import HandoffEvent, RandomWaypointMobility
+from repro.core.network import build_topology
+from repro.core.planner import MCSAPlanner, UserPlan
+from repro.core.profile import profile_of
+
+
+# ---------------------------------------------------------------------------
+# The seed planner's control plane (PR1 state), kept verbatim as the
+# baseline under measurement.
+# ---------------------------------------------------------------------------
+class SeedPlanner:
+    def __init__(self, profile: LayerProfile, topo, cfg: LiGDConfig,
+                 per_iter_time: float = 5e-5):
+        self.profile, self.topo, self.cfg = profile, topo, cfg
+        self.per_iter_time = per_iter_time
+        self.t_ag_estimate = 0.0
+
+    def plan_static(self, devices: Sequence[DeviceParams],
+                    user_aps: np.ndarray):
+        servers = self.topo.ap_server[user_aps]
+        hops = self.topo.hops[user_aps, servers]
+        devs = [dataclasses.replace(d, hops=int(h), t_ag=self.t_ag_estimate)
+                for d, h in zip(devices, hops)]
+        devs_s = stack_devices(devs)
+        edges_s = stack_edges([self.topo.edges[s] for s in servers])
+        res = solve_ligd_batch_jit(self.profile, devs_s, edges_s, self.cfg)
+        jax.block_until_ready(res.U)
+        iters = float(np.mean(np.sum(np.asarray(res.iters_per_layer), -1)))
+        self.t_ag_estimate = iters * self.per_iter_time
+        plans = [UserPlan(server=int(s), split=int(res.split[i]),
+                          B=float(res.B[i]), r=float(res.r[i]),
+                          U=float(res.U[i]), T=float(res.T[i]),
+                          E=float(res.E[i]), C=float(res.C[i]))
+                 for i, s in enumerate(servers)]
+        return res, servers, plans
+
+    def on_handoffs(self, events: List[HandoffEvent],
+                    devices: Sequence[DeviceParams],
+                    plans: List[UserPlan]):
+        if not events:
+            return []
+        devs, edges_new, origs, hops_back = [], [], [], []
+        for ev in events:
+            d = devices[ev.user]
+            devs.append(dataclasses.replace(
+                d, hops=ev.hops_new, t_ag=self.t_ag_estimate))
+            edges_new.append(self.topo.edges[ev.new_server])
+            plan = plans[ev.user]
+            orig_edge = edge_dict(self.topo.edges[plan.server])
+            prev = LiGDResult(
+                split=jnp.asarray(plan.split), B=jnp.asarray(plan.B),
+                r=jnp.asarray(plan.r), U=jnp.asarray(plan.U),
+                T=jnp.asarray(plan.T), E=jnp.asarray(plan.E),
+                C=jnp.asarray(plan.C), iters_per_layer=jnp.zeros(1),
+                U_per_layer=jnp.zeros(1), B_per_layer=jnp.zeros(1),
+                r_per_layer=jnp.zeros(1))
+            origs.append(orig_strategy_dict(self.profile, orig_edge, prev))
+            hops_back.append(float(ev.hops_back))
+        devs_s = stack_devices(devs)
+        edges_s = stack_edges(edges_new)
+        origs_s = jax.tree.map(lambda *xs: jnp.stack(xs), *origs)
+        res = solve_mligd_batch_jit(self.profile, devs_s, edges_s, origs_s,
+                                    jnp.asarray(hops_back, jnp.float32),
+                                    self.cfg)
+        for i, ev in enumerate(events):
+            take_back = bool(res.R[i])
+            plans[ev.user] = UserPlan(
+                server=plans[ev.user].server if take_back else ev.new_server,
+                split=int(res.split[i]), B=float(res.B[i]),
+                r=float(res.r[i]), U=float(res.U[i]), T=float(res.T[i]),
+                E=float(res.E[i]), C=float(res.C[i]), R=int(res.R[i]))
+        return [res]
+
+
+def _scenario(users: int, seed: int = 0):
+    topo = build_topology(25, 4, seed=seed)
+    prof = profile_of(nin())
+    cfg = LiGDConfig(max_iters=60)
+    rng = np.random.default_rng(seed)
+    c_dev = rng.uniform(3e9, 8e9, users)
+    return topo, prof, cfg, c_dev
+
+
+def _run_fleet(topo, prof, cfg, c_dev, steps: int, dt: float,
+               mob_seed: int) -> tuple:
+    planner = MCSAPlanner(prof, topo, cfg)
+    devices = DeviceFleet(c_dev=c_dev)
+    mob = RandomWaypointMobility(topo, len(c_dev), seed=mob_seed,
+                                 speed_range=(10.0, 30.0))
+    t0 = time.perf_counter()
+    _, _, fleet = planner.plan_static(devices,
+                                      topo.nearest_ap(mob.positions()))
+    t_static = time.perf_counter() - t0
+    t_steps, n_events = 0.0, 0
+    for k in range(steps):
+        t0 = time.perf_counter()
+        batch = mob.step(dt, k * dt)
+        if batch:
+            res = planner.on_handoffs(batch, devices, fleet)
+            jax.block_until_ready(res.U)
+        t_steps += time.perf_counter() - t0
+        n_events += len(batch)
+    return t_static, t_steps, n_events, fleet
+
+
+def _run_seed(topo, prof, cfg, c_dev, steps: int, dt: float,
+              mob_seed: int) -> tuple:
+    planner = SeedPlanner(prof, topo, cfg)
+    devices = [DeviceParams(c_dev=float(c)) for c in c_dev]
+    mob = RandomWaypointMobility(topo, len(c_dev), seed=mob_seed,
+                                 speed_range=(10.0, 30.0))
+    t0 = time.perf_counter()
+    _, _, plans = planner.plan_static(
+        devices, np.asarray(topo.nearest_ap(mob.positions())))
+    t_static = time.perf_counter() - t0
+    t_steps, n_events = 0.0, 0
+    for k in range(steps):
+        t0 = time.perf_counter()
+        events = list(mob.step(dt, k * dt))
+        if events:
+            planner.on_handoffs(events, devices, plans)
+        t_steps += time.perf_counter() - t0
+        n_events += len(events)
+    return t_static, t_steps, n_events, plans
+
+
+def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
+        dt: float = 30.0) -> List[str]:
+    rows = []
+    topo, prof, cfg, c_dev = _scenario(users)
+
+    # warm the shared Li-GD jit cache (same solver both paths) + one small
+    # MLi-GD compile so the head-to-head mostly measures the control plane.
+    warm = DeviceFleet(c_dev=c_dev[:64])
+    MCSAPlanner(prof, topo, cfg).plan_static(
+        warm, np.zeros(64, np.int64))
+
+    t_static_f, t_steps_f, ev_f, fleet = _run_fleet(
+        topo, prof, cfg, c_dev, steps, dt, mob_seed=1)
+    t_static_s, t_steps_s, ev_s, plans = _run_seed(
+        topo, prof, cfg, c_dev, steps, dt, mob_seed=1)
+
+    # identical trace -> identical plans: sanity before quoting speedups
+    assert ev_f == ev_s
+    assert np.allclose(fleet.U, np.asarray([p.U for p in plans]),
+                       rtol=1e-5)
+
+    total_f = t_static_f + t_steps_f
+    total_s = t_static_s + t_steps_s
+    speedup = total_s / total_f
+    rows.append(f"fleet_bench,{users},seed,total_s,{total_s:.3f}")
+    rows.append(f"fleet_bench,{users},fleet,total_s,{total_f:.3f}")
+    rows.append(f"fleet_bench,{users},fleet,speedup,{speedup:.2f}")
+    print(f"[10k head-to-head] {users} users, {steps} mobility steps, "
+          f"{ev_f} handoffs")
+    print(f"  seed : static {t_static_s:6.2f}s + steps {t_steps_s:6.2f}s "
+          f"= {total_s:6.2f}s")
+    print(f"  fleet: static {t_static_f:6.2f}s + steps {t_steps_f:6.2f}s "
+          f"= {total_f:6.2f}s")
+    print(f"  speedup: {speedup:.1f}x")
+
+    t_static_b, t_steps_b, ev_b, _ = _run_fleet(
+        topo, prof, cfg, np.resize(c_dev, big_users), steps, dt, mob_seed=2)
+    per_step = t_steps_b / steps
+    rows.append(f"fleet_bench,{big_users},fleet,step_s,{per_step:.3f}")
+    rows.append(f"fleet_bench,{big_users},fleet,users_per_step,{big_users}")
+    print(f"[100k sustained] {big_users} users: static plan "
+          f"{t_static_b:.2f}s, {per_step:.2f}s per mobility step "
+          f"({ev_b} handoffs over {steps} steps)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=10_000)
+    ap.add_argument("--big-users", type=int, default=100_000)
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+    for r in run(args.users, args.big_users, args.steps):
+        print(r)

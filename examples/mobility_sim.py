@@ -3,19 +3,27 @@ while driving through the AP grid — live MLi-GD decisions + running
 per-strategy cost accounting (the paper's Figs. 9-14 scenario, animated
 as text).
 
+The whole loop is array-resident: mobility steps, handoff batches, and
+plan updates are vectorized end-to-end, so ``--users 100000`` is a flag
+away (each minute costs one padded MLi-GD solve over that minute's
+handoffs, not a Python loop over vehicles).
+
 Run:  PYTHONPATH=src python examples/mobility_sim.py [--minutes 30]
+      PYTHONPATH=src python examples/mobility_sim.py --users 100000
 """
 import argparse
 
 import numpy as np
 
 from repro.configs.chain_cnns import yolov2
-from repro.core.costs import DeviceParams
+from repro.core.costs import DeviceFleet
 from repro.core.ligd import LiGDConfig
 from repro.core.mobility import RandomWaypointMobility
 from repro.core.network import build_topology
 from repro.core.planner import MCSAPlanner
 from repro.core.profile import profile_of
+
+MAX_EVENT_PRINTS = 8
 
 
 def main():
@@ -28,13 +36,12 @@ def main():
     profile = profile_of(yolov2())
     planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=250))
     rng = np.random.default_rng(0)
-    devices = [DeviceParams(c_dev=float(rng.uniform(3e9, 6e9)))
-               for _ in range(args.users)]
+    devices = DeviceFleet(c_dev=rng.uniform(3e9, 6e9, args.users))
     mob = RandomWaypointMobility(topo, args.users, seed=1,
                                  speed_range=(8.0, 25.0))   # vehicles
 
     aps = topo.nearest_ap(mob.positions())
-    _, _, plans = planner.plan_static(devices, aps)
+    _, _, fleet = planner.plan_static(devices, aps)
     print(f"{args.users} vehicles, {topo.num_aps} APs, "
           f"{topo.num_servers} edge servers; YOLOv2 inference stream")
 
@@ -43,18 +50,21 @@ def main():
     for minute in range(args.minutes):
         events = mob.step(60.0, minute * 60.0)
         if events:
-            planner.on_handoffs(events, devices, plans)
-            for ev in events:
-                p = plans[ev.user]
-                if p.R:
-                    relays += 1
-                else:
-                    resplits += 1
+            res = planner.on_handoffs(events, devices, fleet)
+            R = np.asarray(res.R)
+            relays += int(R.sum())
+            resplits += int(len(R) - R.sum())
+            for i, ev in enumerate(events):
+                if i >= MAX_EVENT_PRINTS:
+                    print(f"  [{minute:3d} min] ... "
+                          f"{len(events) - MAX_EVENT_PRINTS} more handoffs")
+                    break
                 print(f"  [{minute:3d} min] vehicle {ev.user}: server "
                       f"{ev.old_server}->{ev.new_server} "
-                      f"{'relay-back' if p.R else 're-split'} "
-                      f"(split={p.split}, T={p.T * 1e3:.1f} ms)")
-        lat_log.append(np.mean([p.T for p in plans]))
+                      f"{'relay-back' if R[i] else 're-split'} "
+                      f"(split={int(fleet.split[ev.user])}, "
+                      f"T={fleet.T[ev.user] * 1e3:.1f} ms)")
+        lat_log.append(fleet.T.mean())
 
     print(f"\n{args.minutes} min simulated: {resplits} re-splits, "
           f"{relays} relay-backs")

@@ -1,23 +1,25 @@
 """MCSA core — the paper's contribution: cost models (Eqs. 1–17), the
 Li-GD and MLi-GD solvers (Algorithms 1–2), network topology, mobility,
 baselines, and the planner tying them together."""
-from .costs import (DeviceParams, EdgeParams, LayerProfile, dev_dict,
-                    edge_dict, stack_devices, stack_edges, utility)
+from .costs import (DeviceFleet, DeviceParams, EdgeParams, LayerProfile,
+                    dev_dict, edge_dict, stack_devices, stack_edges,
+                    utility)
 from .ligd import LiGDConfig, LiGDResult, solve_ligd, solve_ligd_batch_jit
 from .mligd import (MLiGDResult, orig_strategy_dict, solve_mligd,
                     solve_mligd_batch_jit)
 from .network import Topology, build_topology
-from .mobility import HandoffEvent, RandomWaypointMobility
+from .mobility import HandoffBatch, HandoffEvent, RandomWaypointMobility
 from .profile import profile_chain_cnn, profile_of, profile_transformer
 from .baselines import BASELINES, run_baseline_batch
-from .planner import MCSAPlanner, UserPlan
+from .planner import FleetState, MCSAPlanner, UserPlan
 
 __all__ = [
-    "DeviceParams", "EdgeParams", "LayerProfile", "dev_dict", "edge_dict",
-    "stack_devices", "stack_edges", "utility", "LiGDConfig", "LiGDResult",
-    "solve_ligd", "solve_ligd_batch_jit", "MLiGDResult",
-    "orig_strategy_dict", "solve_mligd", "solve_mligd_batch_jit",
-    "Topology", "build_topology", "HandoffEvent", "RandomWaypointMobility",
-    "profile_chain_cnn", "profile_of", "profile_transformer", "BASELINES",
-    "run_baseline_batch", "MCSAPlanner", "UserPlan",
+    "DeviceFleet", "DeviceParams", "EdgeParams", "LayerProfile",
+    "dev_dict", "edge_dict", "stack_devices", "stack_edges", "utility",
+    "LiGDConfig", "LiGDResult", "solve_ligd", "solve_ligd_batch_jit",
+    "MLiGDResult", "orig_strategy_dict", "solve_mligd",
+    "solve_mligd_batch_jit", "Topology", "build_topology", "HandoffBatch",
+    "HandoffEvent", "RandomWaypointMobility", "profile_chain_cnn",
+    "profile_of", "profile_transformer", "BASELINES", "run_baseline_batch",
+    "FleetState", "MCSAPlanner", "UserPlan",
 ]

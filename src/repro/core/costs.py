@@ -29,7 +29,8 @@ Paper-faithfulness notes
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+import hashlib
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +125,27 @@ class LayerProfile:
         w = np.concatenate([[self.in_bits], self.out_bits])
         return f_l, f_e, w
 
+    @property
+    def fingerprint(self) -> str:
+        """Content hash — the sound cache key for jitted solvers.  Keying
+        by ``id(profile)`` is unsound: ids are reused after gc, so a dead
+        profile's compiled solve (closing over ITS tables) could serve a
+        fresh profile with different workloads."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha1()
+            h.update(self.name.encode())
+            for arr in (self.flops, self.out_bits,
+                        (self.in_bits, self.result_bits)):
+                a = np.ascontiguousarray(np.asarray(arr, np.float64))
+                # length-prefix each field: without it, bytes sliding from
+                # flops into out_bits would collide
+                h.update(np.int64(a.size).tobytes())
+                h.update(a.tobytes())
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
 
 # ---------------------------------------------------------------------------
 # Differentiable cost terms.  dev/edge are dicts of scalars (or batched
@@ -205,6 +227,64 @@ def utility(dev, edge, f_l, f_e, w_bits, m_bits, B, r, *, offloaded=None):
     return U, (T, E, C)
 
 
+class DeviceFleet:
+    """Struct-of-arrays :class:`DeviceParams` for a fleet of X users.
+
+    The array-resident input the vectorized planner consumes: every field
+    of DEV_FIELDS is a (X,) float64 numpy array, so 100k+ users never
+    materialize 100k Python dataclasses.  Missing fields broadcast from the
+    ``DeviceParams`` defaults."""
+
+    __slots__ = ("arrays",)
+
+    def __init__(self, num_users: Optional[int] = None, **fields):
+        unknown = set(fields) - set(DEV_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown device fields: {sorted(unknown)}")
+        if num_users is None:
+            sizes = [np.ndim(v) and len(np.asarray(v)) for v in
+                     fields.values()]
+            sizes = [s for s in sizes if s]
+            if not sizes:
+                raise TypeError("DeviceFleet needs num_users or at least "
+                                "one array-valued field")
+            num_users = sizes[0]
+        defaults = DeviceParams()
+        self.arrays: Dict[str, np.ndarray] = {}
+        for k in DEV_FIELDS:
+            v = np.asarray(fields.get(k, getattr(defaults, k)), np.float64)
+            self.arrays[k] = np.ascontiguousarray(
+                np.broadcast_to(v, (num_users,)))
+
+    @classmethod
+    def from_params(cls, devs: Sequence[DeviceParams]) -> "DeviceFleet":
+        return cls(num_users=len(devs),
+                   **{k: np.asarray([getattr(d, k) for d in devs],
+                                    np.float64) for k in DEV_FIELDS})
+
+    def __len__(self) -> int:
+        return len(self.arrays["c_dev"])
+
+    def __getitem__(self, i: int) -> DeviceParams:
+        kw = {k: float(v[i]) for k, v in self.arrays.items()}
+        kw["hops"] = int(kw["hops"])
+        return DeviceParams(**kw)
+
+    def replace(self, **fields) -> "DeviceFleet":
+        arrays = dict(self.arrays)
+        for k, v in fields.items():
+            if k not in DEV_FIELDS:
+                raise TypeError(f"unknown device field: {k}")
+            arrays[k] = np.ascontiguousarray(np.broadcast_to(
+                np.asarray(v, np.float64), (len(self),)))
+        out = DeviceFleet.__new__(DeviceFleet)
+        out.arrays = arrays
+        return out
+
+
+Devices = Union[DeviceFleet, Sequence[DeviceParams]]
+
+
 def dev_dict(d: DeviceParams) -> dict:
     return {k: jnp.asarray(getattr(d, k), jnp.float32) for k in DEV_FIELDS}
 
@@ -213,11 +293,32 @@ def edge_dict(e: EdgeParams) -> dict:
     return {k: jnp.asarray(getattr(e, k), jnp.float32) for k in EDGE_FIELDS}
 
 
-def stack_devices(devs) -> dict:
+def stack_devices(devs: Devices) -> dict:
+    """(X,)-leading-axis device dict from a DeviceFleet (O(fields), no
+    per-user work) or a sequence of DeviceParams (legacy path)."""
+    if isinstance(devs, DeviceFleet):
+        return {k: jnp.asarray(v, jnp.float32)
+                for k, v in devs.arrays.items()}
     return {k: jnp.asarray([getattr(d, k) for d in devs], jnp.float32)
             for k in DEV_FIELDS}
 
 
+def gather_devices(devs: Devices, idx: np.ndarray) -> dict:
+    """Stacked device dict for the ``idx`` rows only — O(len(idx)), never
+    O(fleet): handoff steps must not pay for users who didn't move."""
+    if isinstance(devs, DeviceFleet):
+        return {k: jnp.asarray(v[idx], jnp.float32)
+                for k, v in devs.arrays.items()}
+    return stack_devices([devs[int(i)] for i in idx])
+
+
 def stack_edges(edges) -> dict:
     return {k: jnp.asarray([getattr(e, k) for e in edges], jnp.float32)
+            for k in EDGE_FIELDS}
+
+
+def stack_edges_np(edges) -> Dict[str, np.ndarray]:
+    """Host-resident (Z,) edge-parameter table — built once per topology,
+    gathered per user with fancy indexing (no per-user Python)."""
+    return {k: np.asarray([getattr(e, k) for e in edges], np.float64)
             for k in EDGE_FIELDS}

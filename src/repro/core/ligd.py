@@ -151,9 +151,10 @@ _PROFILE_CACHE: dict = {}
 
 def solve_ligd_batch_jit(profile: LayerProfile, devs, edge,
                          cfg: LiGDConfig = LiGDConfig()) -> LiGDResult:
-    """jit-cached batched solve (keyed by profile identity + cfg)."""
+    """jit-cached batched solve (keyed by profile CONTENT + cfg — id()
+    keys are unsound, see LayerProfile.fingerprint)."""
     edge_batched = jnp.ndim(next(iter(edge.values()))) > 0
-    key = (id(profile), cfg, edge_batched)
+    key = (profile.fingerprint, cfg, edge_batched)
     fn = _PROFILE_CACHE.get(key)
     if fn is None:
         in_axes = (0, 0 if edge_batched else None)

@@ -152,9 +152,10 @@ _CACHE: dict = {}
 def solve_mligd_batch_jit(profile: LayerProfile, devs, edge_new, origs,
                           hops_back, cfg: LiGDConfig = LiGDConfig()
                           ) -> MLiGDResult:
-    """vmap over users; edge_new may be shared or per-user batched."""
+    """vmap over users; edge_new may be shared or per-user batched.
+    Cache keyed by profile content, not id() (see LayerProfile.fingerprint)."""
     edge_batched = jnp.ndim(next(iter(edge_new.values()))) > 0
-    key = (id(profile), cfg, edge_batched)
+    key = (profile.fingerprint, cfg, edge_batched)
     fn = _CACHE.get(key)
     if fn is None:
         in_axes = (0, 0 if edge_batched else None, 0, 0)

@@ -1,13 +1,21 @@
-"""User mobility: random-waypoint traces + handoff detection.
+"""User mobility: random-waypoint traces + handoff detection, fully
+array-resident.
 
 The "model-mule" concept (paper §3): each mobile user carries the whole
 model; on entering a new edge server's coverage the MLi-GD decision is
 either re-split against the new server or relay back to the old one.
+
+State is struct-of-arrays (positions, waypoints, speeds, AP/server
+assignments as (X,) numpy arrays) and :meth:`RandomWaypointMobility.step`
+advances ALL users with vectorized numpy — one step of a 100k-user fleet
+is a handful of array ops, never a Python loop.  Handoffs come back as a
+:class:`HandoffBatch` of parallel arrays; iterating a batch yields legacy
+:class:`HandoffEvent` views for display/debug code.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Tuple
+from typing import Iterator, Sequence, Tuple
 
 import numpy as np
 
@@ -15,16 +23,9 @@ from .network import Topology
 
 
 @dataclasses.dataclass
-class UserState:
-    xy: np.ndarray               # (2,)
-    waypoint: np.ndarray         # (2,)
-    speed: float                 # m/s
-    ap: int
-    server: int
-
-
-@dataclasses.dataclass
 class HandoffEvent:
+    """Scalar view of one handoff (display/compat; the planner's solve
+    path consumes HandoffBatch arrays directly)."""
     user: int
     t: float
     old_server: int
@@ -34,50 +35,124 @@ class HandoffEvent:
     hops_back: int               # user's AP -> ORIGINAL server (H₂)
 
 
+@dataclasses.dataclass
+class HandoffBatch:
+    """All of one mobility step's edge-server handoffs as parallel arrays."""
+    t: float
+    user: np.ndarray             # (E,) int
+    old_server: np.ndarray       # (E,) int
+    new_server: np.ndarray       # (E,) int
+    new_ap: np.ndarray           # (E,) int
+    hops_new: np.ndarray         # (E,) int
+    hops_back: np.ndarray        # (E,) int
+
+    def __len__(self) -> int:
+        return len(self.user)
+
+    def __bool__(self) -> bool:
+        return len(self.user) > 0
+
+    def __iter__(self) -> Iterator[HandoffEvent]:
+        for i in range(len(self.user)):
+            yield HandoffEvent(
+                user=int(self.user[i]), t=self.t,
+                old_server=int(self.old_server[i]),
+                new_server=int(self.new_server[i]),
+                new_ap=int(self.new_ap[i]),
+                hops_new=int(self.hops_new[i]),
+                hops_back=int(self.hops_back[i]))
+
+    @classmethod
+    def empty(cls, t: float = 0.0) -> "HandoffBatch":
+        z = np.zeros(0, np.int64)
+        return cls(t=t, user=z, old_server=z, new_server=z, new_ap=z,
+                   hops_new=z, hops_back=z)
+
+    @classmethod
+    def from_events(cls, events: Sequence[HandoffEvent]) -> "HandoffBatch":
+        if not events:
+            return cls.empty()
+        if isinstance(events, HandoffBatch):
+            return events
+        return cls(
+            t=float(events[-1].t),
+            user=np.asarray([e.user for e in events], np.int64),
+            old_server=np.asarray([e.old_server for e in events], np.int64),
+            new_server=np.asarray([e.new_server for e in events], np.int64),
+            new_ap=np.asarray([e.new_ap for e in events], np.int64),
+            hops_new=np.asarray([e.hops_new for e in events], np.int64),
+            hops_back=np.asarray([e.hops_back for e in events], np.int64))
+
+    @classmethod
+    def concat(cls, batches: Sequence["HandoffBatch"]) -> "HandoffBatch":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return cls.empty()
+        cat = lambda name: np.concatenate(
+            [getattr(b, name) for b in batches])
+        return cls(t=batches[-1].t, user=cat("user"),
+                   old_server=cat("old_server"),
+                   new_server=cat("new_server"), new_ap=cat("new_ap"),
+                   hops_new=cat("hops_new"), hops_back=cat("hops_back"))
+
+
 class RandomWaypointMobility:
-    """Classic random-waypoint over the topology area."""
+    """Classic random-waypoint over the topology area, vectorized.
+
+    Public state (read-only from outside): ``xy`` (X, 2) positions,
+    ``ap`` / ``server`` (X,) current assignments.
+    """
 
     def __init__(self, topo: Topology, num_users: int, *,
                  speed_range: Tuple[float, float] = (1.0, 15.0),
                  seed: int = 0):
         self.topo = topo
         self.rng = np.random.default_rng(seed)
+        self.speed_range = speed_range
         area = topo.ap_xy.max(0) * 1.05
         self.area = area
-        self.users: List[UserState] = []
-        for _ in range(num_users):
-            xy = self.rng.uniform(0, 1, 2) * area
-            ap = int(topo.nearest_ap(xy))
-            self.users.append(UserState(
-                xy=xy, waypoint=self.rng.uniform(0, 1, 2) * area,
-                speed=float(self.rng.uniform(*speed_range)),
-                ap=ap, server=int(topo.ap_server[ap])))
+        self.xy = self.rng.uniform(0, 1, (num_users, 2)) * area
+        self.waypoint = self.rng.uniform(0, 1, (num_users, 2)) * area
+        self.speed = self.rng.uniform(*speed_range, num_users)
+        self.ap = np.asarray(topo.nearest_ap(self.xy))
+        self.server = np.asarray(topo.ap_server[self.ap])
+
+    @property
+    def num_users(self) -> int:
+        return len(self.xy)
 
     def positions(self) -> np.ndarray:
-        return np.stack([u.xy for u in self.users])
+        return self.xy
 
-    def step(self, dt: float, t: float) -> List[HandoffEvent]:
-        """Advance all users by dt seconds; return handoff events."""
-        events: List[HandoffEvent] = []
-        for i, u in enumerate(self.users):
-            to_wp = u.waypoint - u.xy
-            dist = np.linalg.norm(to_wp)
-            travel = u.speed * dt
-            if travel >= dist:
-                u.xy = u.waypoint.copy()
-                u.waypoint = self.rng.uniform(0, 1, 2) * self.area
-                u.speed = float(self.rng.uniform(1.0, 15.0))
-            else:
-                u.xy = u.xy + to_wp / dist * travel
-            new_ap = int(self.topo.nearest_ap(u.xy))
-            if new_ap != u.ap:
-                new_server = int(self.topo.ap_server[new_ap])
-                if new_server != u.server:
-                    events.append(HandoffEvent(
-                        user=i, t=t, old_server=u.server,
-                        new_server=new_server, new_ap=new_ap,
-                        hops_new=int(self.topo.hops[new_ap, new_server]),
-                        hops_back=int(self.topo.hops[new_ap, u.server])))
-                    u.server = new_server
-                u.ap = new_ap
-        return events
+    def step(self, dt: float, t: float) -> HandoffBatch:
+        """Advance all users by dt seconds; return the step's handoffs."""
+        to_wp = self.waypoint - self.xy
+        dist = np.linalg.norm(to_wp, axis=-1)
+        travel = self.speed * dt
+        arrived = travel >= dist
+        safe = np.maximum(dist, 1e-12)[:, None]
+        self.xy = np.where(arrived[:, None], self.waypoint,
+                           self.xy + to_wp / safe * travel[:, None])
+        n_arr = int(arrived.sum())
+        if n_arr:
+            self.waypoint[arrived] = (
+                self.rng.uniform(0, 1, (n_arr, 2)) * self.area)
+            self.speed[arrived] = self.rng.uniform(*self.speed_range, n_arr)
+
+        new_ap = np.asarray(self.topo.nearest_ap(self.xy))
+        new_server = np.asarray(self.topo.ap_server[new_ap])
+        moved = new_server != self.server
+        idx = np.nonzero(moved)[0]
+        batch = HandoffBatch(
+            t=t,
+            user=idx,
+            old_server=self.server[idx].astype(np.int64),
+            new_server=new_server[idx].astype(np.int64),
+            new_ap=new_ap[idx].astype(np.int64),
+            hops_new=np.asarray(
+                self.topo.hops[new_ap[idx], new_server[idx]], np.int64),
+            hops_back=np.asarray(
+                self.topo.hops[new_ap[idx], self.server[idx]], np.int64))
+        self.ap = new_ap
+        self.server = np.where(moved, new_server, self.server)
+        return batch

@@ -3,33 +3,47 @@ users, APs, and heterogeneous edge servers (the full system of Fig. 1).
 
 Responsibilities:
   * static planning — per-user (s, B, r) via batched Li-GD against each
-    user's serving edge server (grouped by server, solved vectorized);
+    user's serving edge server (per-user edge params gathered from a
+    per-topology table, solved in one vectorized call);
   * mobility — on handoff events, batched MLi-GD decisions (re-solve vs
-    relay-back), updating the user's strategy;
+    relay-back), updating the fleet's strategy table;
   * strategy-calculation-time feedback — measured solver time feeds the
     CBR term T_Ag/k of the *next* solve (Eq. 6/7's self-consistency).
+
+Plans live in :class:`FleetState`, a struct-of-arrays table (one (X,)
+array per quantity), so planning X users costs O(fields) Python plus one
+jitted solve — never O(X) interpreter work.  Handoff batches are padded
+to power-of-two sizes before the jitted MLi-GD solve so the jit cache
+holds at most log2(X_max) entries as event counts fluctuate step to step.
+
+Optionally the static solve shards users across devices with ``shard_map``
+(pass a ``repro.runtime.meshenv.MeshEnv``); each device runs the identical
+vmapped Li-GD on its slice of the fleet — the solves are independent, so
+no collectives are needed.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from .baselines import run_baseline_batch
-from .costs import (DEV_FIELDS, DeviceParams, EdgeParams, LayerProfile,
-                    edge_dict, stack_devices, stack_edges)
-from .ligd import LiGDConfig, LiGDResult, solve_ligd_batch_jit
-from .mligd import MLiGDResult, orig_strategy_dict, solve_mligd_batch_jit
-from .mobility import HandoffEvent
-from .network import Topology
+from .costs import (Devices, LayerProfile, gather_devices, rent_cost,
+                    stack_devices, stack_edges_np)
+from .ligd import LiGDConfig, LiGDResult, solve_ligd_batch, \
+    solve_ligd_batch_jit
+from .mligd import MLiGDResult, solve_mligd_batch_jit
+from .mobility import HandoffBatch, HandoffEvent
 
 
 @dataclasses.dataclass
 class UserPlan:
+    """Scalar view of one user's plan (display/compat — the solve path
+    never materializes these)."""
     server: int
     split: int
     B: float
@@ -41,8 +55,63 @@ class UserPlan:
     R: int = 0                    # last mobility decision
 
 
+@dataclasses.dataclass
+class FleetState:
+    """Array-resident plan table: one (X,) array per planned quantity."""
+    server: np.ndarray           # int64 — serving edge server
+    split: np.ndarray            # int64 — split point s*
+    B: np.ndarray                # float64 — bandwidth (Hz)
+    r: np.ndarray                # float64 — compute units
+    U: np.ndarray
+    T: np.ndarray
+    E: np.ndarray
+    C: np.ndarray
+    R: np.ndarray                # int64 — last mobility decision
+
+    @classmethod
+    def from_static(cls, servers: np.ndarray, res: LiGDResult
+                    ) -> "FleetState":
+        return cls(server=np.asarray(servers, np.int64),
+                   split=np.asarray(res.split, np.int64),
+                   B=np.asarray(res.B, np.float64),
+                   r=np.asarray(res.r, np.float64),
+                   U=np.asarray(res.U, np.float64),
+                   T=np.asarray(res.T, np.float64),
+                   E=np.asarray(res.E, np.float64),
+                   C=np.asarray(res.C, np.float64),
+                   R=np.zeros(len(np.atleast_1d(servers)), np.int64))
+
+    def __len__(self) -> int:
+        return len(self.server)
+
+    def __getitem__(self, i: int) -> UserPlan:
+        return UserPlan(server=int(self.server[i]), split=int(self.split[i]),
+                        B=float(self.B[i]), r=float(self.r[i]),
+                        U=float(self.U[i]), T=float(self.T[i]),
+                        E=float(self.E[i]), C=float(self.C[i]),
+                        R=int(self.R[i]))
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+
+def _pow2_bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor) — bounds distinct jit shapes
+    to log2(X_max) as per-step handoff counts fluctuate."""
+    return max(floor, 1 << (n - 1).bit_length())
+
+
+def _pad_axis0(tree, pad: int):
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]), tree)
+
+
 class MCSAPlanner:
-    def __init__(self, profile: LayerProfile, topo: Topology,
+    def __init__(self, profile: LayerProfile, topo,
                  cfg: LiGDConfig = LiGDConfig(),
                  per_iter_time: float = 5e-5):
         self.profile = profile
@@ -50,82 +119,147 @@ class MCSAPlanner:
         self.cfg = cfg
         self.per_iter_time = per_iter_time
         self.t_ag_estimate = 0.0
+        # (Z, field) edge table — gathered per user by server id.
+        self._edge_table = stack_edges_np(topo.edges)
+        self._sharded_static = {}
 
     # ------------------------------------------------------------------
-    def _edge_dicts_for(self, servers: np.ndarray) -> dict:
-        edges = [self.topo.edges[s] for s in servers]
-        return stack_edges(edges)
+    def _edges_for(self, servers: np.ndarray) -> dict:
+        """Per-user edge dict by gathering the per-topology table —
+        O(fields), not O(users)."""
+        servers = np.asarray(servers)
+        return {k: jnp.asarray(v[servers], jnp.float32)
+                for k, v in self._edge_table.items()}
 
-    def plan_static(self, devices: Sequence[DeviceParams],
-                    user_aps: np.ndarray) -> tuple:
-        """Solve every user against its serving server.  Returns
-        (LiGDResult batched, servers, planned list)."""
+    def _stacked_devices(self, devices: Devices, hops: np.ndarray) -> dict:
+        devs_s = dict(stack_devices(devices))
+        X = len(hops)
+        devs_s["hops"] = jnp.asarray(hops, jnp.float32)
+        devs_s["t_ag"] = jnp.full((X,), self.t_ag_estimate, jnp.float32)
+        return devs_s
+
+    # ------------------------------------------------------------------
+    def plan_static(self, devices: Devices, user_aps: np.ndarray,
+                    env=None) -> tuple:
+        """Solve every user against its serving server in one vectorized
+        call.  Returns (LiGDResult batched, servers, FleetState).
+
+        ``env``: optional MeshEnv — when SPMD and the fleet divides the
+        data-parallel size, users are sharded across devices with
+        shard_map (independent solves, no collectives)."""
+        user_aps = np.asarray(user_aps)
         servers = self.topo.ap_server[user_aps]
         hops = self.topo.hops[user_aps, servers]
-        devs = [dataclasses.replace(d, hops=int(h),
-                                    t_ag=self.t_ag_estimate)
-                for d, h in zip(devices, hops)]
-        devs_s = stack_devices(devs)
-        edges_s = self._edge_dicts_for(servers)
-        t0 = time.perf_counter()
-        res = solve_ligd_batch_jit(self.profile, devs_s, edges_s, self.cfg)
+        devs_s = self._stacked_devices(devices, hops)
+        edges_s = self._edges_for(servers)
+        res = self._solve_static(devs_s, edges_s, env)
         jax.block_until_ready(res.U)
-        wall = time.perf_counter() - t0
         # Eq. 6/7 feedback: observed per-user strategy time for future CBR.
         iters = float(np.mean(np.sum(np.asarray(res.iters_per_layer), -1)))
         self.t_ag_estimate = iters * self.per_iter_time
-        plans = [UserPlan(server=int(s), split=int(res.split[i]),
-                          B=float(res.B[i]), r=float(res.r[i]),
-                          U=float(res.U[i]), T=float(res.T[i]),
-                          E=float(res.E[i]), C=float(res.C[i]))
-                 for i, s in enumerate(servers)]
-        return res, servers, plans
+        return res, servers, FleetState.from_static(servers, res)
+
+    def _solve_static(self, devs_s, edges_s, env) -> LiGDResult:
+        X = devs_s["c_dev"].shape[0]
+        if env is not None and env.is_spmd and env.dp > 1 \
+                and X % env.dp == 0:
+            return self._solve_static_sharded(devs_s, edges_s, env)
+        return solve_ligd_batch_jit(self.profile, devs_s, edges_s, self.cfg)
+
+    def _solve_static_sharded(self, devs_s, edges_s, env) -> LiGDResult:
+        """Data-parallel Li-GD: users sharded over the mesh batch axes."""
+        from repro.runtime.meshenv import shard_map
+        key = (self.profile.fingerprint, self.cfg, env.mesh, env.batch())
+        fn = self._sharded_static.get(key)
+        if fn is None:
+            spec = P(env.batch())
+            profile, cfg = self.profile, self.cfg
+
+            def solve(d, e):
+                return solve_ligd_batch(profile, d, e, cfg)
+
+            fn = jax.jit(shard_map(solve, mesh=env.mesh,
+                                   in_specs=(spec, spec), out_specs=spec))
+            self._sharded_static[key] = fn
+        return fn(devs_s, edges_s)
 
     # ------------------------------------------------------------------
-    def on_handoffs(self, events: List[HandoffEvent],
-                    devices: Sequence[DeviceParams],
-                    plans: List[UserPlan]) -> List[MLiGDResult]:
-        """Batched MLi-GD over this step's handoff events; updates plans."""
-        if not events:
-            return []
-        devs, edges_new, origs, hops_back = [], [], [], []
-        for ev in events:
-            d = devices[ev.user]
-            devs.append(dataclasses.replace(
-                d, hops=ev.hops_new, t_ag=self.t_ag_estimate))
-            edges_new.append(self.topo.edges[ev.new_server])
-            plan = plans[ev.user]
-            orig_edge = edge_dict(self.topo.edges[plan.server])
-            prev = LiGDResult(
-                split=jnp.asarray(plan.split), B=jnp.asarray(plan.B),
-                r=jnp.asarray(plan.r), U=jnp.asarray(plan.U),
-                T=jnp.asarray(plan.T), E=jnp.asarray(plan.E),
-                C=jnp.asarray(plan.C), iters_per_layer=jnp.zeros(1),
-                U_per_layer=jnp.zeros(1), B_per_layer=jnp.zeros(1),
-                r_per_layer=jnp.zeros(1))
-            origs.append(orig_strategy_dict(self.profile, orig_edge, prev))
-            hops_back.append(float(ev.hops_back))
-        devs_s = stack_devices(devs)
-        edges_s = stack_edges([e for e in edges_new])
-        origs_s = jax.tree.map(lambda *xs: jnp.stack(xs), *origs)
-        res = solve_mligd_batch_jit(self.profile, devs_s, edges_s, origs_s,
-                                    jnp.asarray(hops_back, jnp.float32),
-                                    self.cfg)
-        for i, ev in enumerate(events):
-            take_back = bool(res.R[i])
-            plans[ev.user] = UserPlan(
-                server=plans[ev.user].server if take_back else ev.new_server,
-                split=int(res.split[i]), B=float(res.B[i]),
-                r=float(res.r[i]), U=float(res.U[i]), T=float(res.T[i]),
-                E=float(res.E[i]), C=float(res.C[i]), R=int(res.R[i]))
-        return [res]
+    def on_handoffs(self, events: Union[HandoffBatch,
+                                        Sequence[HandoffEvent]],
+                    devices: Devices, fleet: FleetState
+                    ) -> Optional[MLiGDResult]:
+        """One padded, jitted MLi-GD solve over ALL of this step's handoff
+        events; scatters the decisions back into ``fleet``.  Returns the
+        (unpadded) batched MLiGDResult, or None when there are no events.
+
+        Duplicate users within a batch (only possible when batches are
+        concatenated across steps): every event's frozen original strategy
+        is read from the PRE-CALL fleet state — exactly like the seed
+        loop, which built all origs before applying any update — and the
+        last event's decision wins per field.  A relay-back therefore
+        restores the pre-call server (the one its frozen strategy was
+        priced against), which is self-consistent where the seed's
+        sequential server bookkeeping could disagree with the orig it had
+        just solved with."""
+        batch = HandoffBatch.from_events(events) \
+            if not isinstance(events, HandoffBatch) else events
+        n = len(batch)
+        if n == 0:
+            return None
+        users = batch.user
+
+        dev_b = gather_devices(devices, users)
+        dev_b["hops"] = jnp.asarray(batch.hops_new, jnp.float32)
+        dev_b["t_ag"] = jnp.full((n,), self.t_ag_estimate, jnp.float32)
+        edges_new = self._edges_for(batch.new_server)
+
+        # Frozen original strategies, gathered straight from fleet arrays
+        # (the batched equivalent of mligd.orig_strategy_dict).
+        f_l_np, f_e_np, w_np = self.profile.prefix_tables()
+        s = fleet.split[users]
+        orig_r = jnp.asarray(fleet.r[users], jnp.float32)
+        orig_B = jnp.asarray(fleet.B[users], jnp.float32)
+        orig_servers = fleet.server[users]
+        edges_orig = self._edges_for(orig_servers)
+        origs = {
+            "split": jnp.asarray(s, jnp.int32),
+            "f_l": jnp.asarray(f_l_np[s], jnp.float32),
+            "f_e": jnp.asarray(f_e_np[s], jnp.float32),
+            "w": jnp.asarray(w_np[s], jnp.float32),
+            "r": orig_r,
+            "B": orig_B,
+            "rent": rent_cost(edges_orig, orig_r, orig_B),
+        }
+        hops_back = jnp.asarray(batch.hops_back, jnp.float32)
+
+        pad = _pow2_bucket(n) - n
+        res = solve_mligd_batch_jit(
+            self.profile,
+            _pad_axis0(dev_b, pad), _pad_axis0(edges_new, pad),
+            _pad_axis0(origs, pad), _pad_axis0(hops_back, pad), self.cfg)
+        if pad:
+            res = jax.tree.map(lambda a: a[:n], res)
+
+        take_back = np.asarray(res.R, bool)
+        fleet.server[users] = np.where(take_back, orig_servers,
+                                       batch.new_server)
+        fleet.split[users] = np.asarray(res.split, np.int64)
+        fleet.B[users] = np.asarray(res.B, np.float64)
+        fleet.r[users] = np.asarray(res.r, np.float64)
+        fleet.U[users] = np.asarray(res.U, np.float64)
+        fleet.T[users] = np.asarray(res.T, np.float64)
+        fleet.E[users] = np.asarray(res.E, np.float64)
+        fleet.C[users] = np.asarray(res.C, np.float64)
+        fleet.R[users] = np.asarray(res.R, np.int64)
+        return res
 
     # ------------------------------------------------------------------
-    def run_baseline(self, name: str, devices: Sequence[DeviceParams],
+    def run_baseline(self, name: str, devices: Devices,
                      user_aps: np.ndarray):
+        user_aps = np.asarray(user_aps)
         servers = self.topo.ap_server[user_aps]
         hops = self.topo.hops[user_aps, servers]
-        devs = [dataclasses.replace(d, hops=int(h))
-                for d, h in zip(devices, hops)]
-        return run_baseline_batch(name, self.profile, stack_devices(devs),
-                                  self._edge_dicts_for(servers))
+        devs_s = dict(stack_devices(devices))
+        devs_s["hops"] = jnp.asarray(hops, jnp.float32)
+        return run_baseline_batch(name, self.profile, devs_s,
+                                  self._edges_for(servers))

@@ -1,0 +1,18 @@
+"""Version compatibility for Pallas-TPU kernel parameters.
+
+jax renamed ``pltpu.TPUCompilerParams`` (<= 0.4.x / early 0.5.x) to
+``pltpu.CompilerParams`` (newer releases).  Every kernel builds its
+``compiler_params`` through :func:`tpu_compiler_params` so the six kernel
+subpackages stay agnostic of the installed jax version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build a Pallas TPU compiler-params object on any supported jax."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

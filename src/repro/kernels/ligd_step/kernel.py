@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 NF = 16
 LN2 = math.log(2.0)
 
@@ -115,7 +117,7 @@ def ligd_steps_tpu(feat, x0, *, edge_tuple, iters: int = 64,
             jax.ShapeDtypeStruct((X, 2), jnp.float32),
             jax.ShapeDtypeStruct((X, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="mcsa_ligd_step",

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.runtime.meshenv import MeshEnv
+from repro.runtime.meshenv import MeshEnv, shard_map
 from .layers import dense_init
 
 Params = dict
@@ -145,12 +145,11 @@ def apply_moe(cfg: ModelConfig, p: Params, env: MeshEnv, x: jnp.ndarray,
         y = jax.lax.psum(y, model)
         return y.reshape(b_loc, S_loc, d), aux.reshape(b_loc, S_loc)
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         f, mesh=env.mesh,
         in_specs=(P(batch, None, None), P(None, None),
                   P(model, None, None), P(model, None, None),
                   P(model, None, None)),
         out_specs=(P(batch, None, None), P(batch, None)),
-        check_vma=False,
     )(x, p["router"], p["wg"], p["wu"], p["wd"])
     return y, aux

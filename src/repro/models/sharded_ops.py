@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.runtime.meshenv import MeshEnv
+from repro.runtime.meshenv import MeshEnv, shard_map
 
 
 def padded_vocab(V: int, tp: int) -> int:
@@ -53,11 +53,10 @@ def embed_lookup(env: MeshEnv, table: jnp.ndarray, ids: jnp.ndarray
         out = jnp.where(ok[..., None], out, 0)
         return jax.lax.psum(out, model)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=env.mesh,
         in_specs=(P(model, None), P(batch, None)),
         out_specs=P(batch, None, None),
-        check_vma=False,
     )(table, ids)
 
 
@@ -107,11 +106,10 @@ def fused_unembed_xent(env: MeshEnv, h: jnp.ndarray, table: jnp.ndarray,
         return lse - ll
 
     tspec = P(model, None) if transpose_table else P(None, model)
-    return jax.shard_map(
+    return shard_map(
         f, mesh=env.mesh,
         in_specs=(P(batch, None, None), tspec, P(batch, None)),
         out_specs=P(batch, None),
-        check_vma=False,
     )(h, table, labels)
 
 
@@ -149,5 +147,5 @@ def sharded_argmax(env: MeshEnv, logits: jnp.ndarray) -> jnp.ndarray:
 
     in_spec = P(*([batch] + [None] * (logits.ndim - 2) + [model]))
     out_spec = P(*([batch] + [None] * (logits.ndim - 2)))
-    return jax.shard_map(f, mesh=env.mesh, in_specs=(in_spec,),
-                         out_specs=out_spec, check_vma=False)(logits)
+    return shard_map(f, mesh=env.mesh, in_specs=(in_spec,),
+                     out_specs=out_spec)(logits)

@@ -1,0 +1,93 @@
+"""Deterministic, dependency-free stand-in for the slice of the
+``hypothesis`` API this repo's tests use: ``@given``/``@settings`` and the
+``floats`` / ``integers`` / ``lists`` / ``sampled_from`` / ``booleans``
+strategies.
+
+``tests/conftest.py`` installs it into ``sys.modules`` ONLY when the real
+hypothesis is not importable, so the property tests still collect and run
+(each property checked on ``max_examples`` seeded-random draws) in
+environments where the test extra isn't installed.  With
+``pip install .[test]`` the real library wins and nothing here activates.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements._draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s._draw(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register fallback ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    if "hypothesis" in sys.modules:
+        return
+    st = types.ModuleType("hypothesis.strategies")
+    st.floats = floats
+    st.integers = integers
+    st.lists = lists
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -66,11 +66,13 @@ def test_collect_stats_on_real_module():
     mesh = jax.make_mesh((1,), ("x",))
     from jax.sharding import PartitionSpec as P
 
+    from repro.runtime.meshenv import shard_map
+
     def f(a):
         return jax.lax.psum(a, "x")
 
-    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("x"),),
-                              out_specs=P(), check_vma=False))
+    g = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("x"),),
+                          out_specs=P()))
     hlo = g.lower(jnp.ones((8, 8))).compile().as_text()
     stats = collect_stats(hlo, total_devices=1)
     assert isinstance(stats.total_bytes, int)

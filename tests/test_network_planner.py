@@ -38,15 +38,22 @@ def test_topology_invariants(seed, num_aps, num_servers):
 
 
 def test_mobility_generates_handoffs():
+    from repro.core.mobility import HandoffBatch
     topo = build_topology(16, 4, seed=0)
     mob = RandomWaypointMobility(topo, 12, seed=1, speed_range=(10., 30.))
-    events = []
-    for t in range(60):
-        events += mob.step(10.0, t * 10.0)
+    batches = [mob.step(10.0, t * 10.0) for t in range(60)]
+    events = HandoffBatch.concat(batches)
     assert len(events) > 0
+    # array invariants over the whole stream
+    assert np.all(events.new_server != events.old_server)
+    assert np.all(events.hops_new >= 0) and np.all(events.hops_back >= 0)
+    # mobility state stays array-resident and consistent
+    assert mob.xy.shape == (12, 2)
+    np.testing.assert_array_equal(mob.server, topo.ap_server[mob.ap])
+    # legacy per-event views still iterate
     for ev in events:
         assert ev.new_server != ev.old_server
-        assert ev.hops_new >= 0 and ev.hops_back >= 0
+        break
 
 
 def test_planner_static_and_handoff_cycle():
@@ -65,19 +72,18 @@ def test_planner_static_and_handoff_cycle():
     # planner CBR feedback: after one solve, t_ag estimate is positive
     assert planner.t_ag_estimate > 0
 
-    events = []
+    events = None
     for t in range(100):
-        events += mob.step(10.0, t * 10.0)
+        events = mob.step(10.0, t * 10.0)
         if events:
             break
     if events:
         planner.on_handoffs(events, devices, plans)
-        for ev in events:
-            p = plans[ev.user]
-            assert p.R in (0, 1)
-            # relay-back keeps the original server, re-split moves
-            if p.R == 0:
-                assert p.server == ev.new_server
+        assert np.all(np.isin(plans.R[events.user], (0, 1)))
+        # relay-back keeps the original server, re-split moves
+        resplit = plans.R[events.user] == 0
+        np.testing.assert_array_equal(plans.server[events.user][resplit],
+                                      events.new_server[resplit])
 
 
 def test_planner_mcsa_beats_baselines_on_utility():
