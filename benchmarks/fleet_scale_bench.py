@@ -1,7 +1,7 @@
 """Fleet-planner scale benchmark: array-resident FleetState vs the seed's
-per-user-object planner.
+per-user-object planner, and the fused vs autodiff solver backends.
 
-Two measurements:
+Three measurements:
 
   1. **10k-user head-to-head** — identical scenario (same topology,
      devices, mobility trace) planned by (a) the seed path: one Python
@@ -11,10 +11,17 @@ Two measurements:
      handoff batches, power-of-two-padded solves.  Both share the same
      jitted Li-GD/MLi-GD solvers — the delta IS the control plane.
 
-  2. **100k-user sustained mobility** — FleetState only: full waypoint
+  2. **solver backends** — the FleetState planner run twice over the same
+     trace with ``solver="autodiff"`` (the oracle) vs ``solver="fused"``
+     (whole-sweep masked solver, the default): the delta IS the solver.
+
+  3. **100k-user sustained mobility** — FleetState only: full waypoint
      steps + handoff replanning at a fleet size the seed path cannot
      finish in reasonable time (its per-user float() syncs alone are
      O(minutes)).
+
+CSV rows go to stdout; machine-readable results go to ``--out`` (default
+BENCH_fleet.json) so the perf trajectory is tracked across PRs.
 
 Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python benchmarks/fleet_scale_bench.py
 """
@@ -22,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 from typing import List, Sequence
 
@@ -161,12 +169,13 @@ def _run_seed(topo, prof, cfg, c_dev, steps: int, dt: float,
 
 
 def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
-        dt: float = 30.0) -> List[str]:
+        dt: float = 30.0, out: str = "BENCH_fleet.json") -> List[str]:
     rows = []
+    results = {"users": users, "big_users": big_users, "steps": steps}
     topo, prof, cfg, c_dev = _scenario(users)
 
-    # warm the shared Li-GD jit cache (same solver both paths) + one small
-    # MLi-GD compile so the head-to-head mostly measures the control plane.
+    # warm the shared Li-GD jit cache (same solver both paths) so the
+    # seed-vs-fleet head-to-head mostly measures the control plane.
     warm = DeviceFleet(c_dev=c_dev[:64])
     MCSAPlanner(prof, topo, cfg).plan_static(
         warm, np.zeros(64, np.int64))
@@ -187,6 +196,8 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
     rows.append(f"fleet_bench,{users},seed,total_s,{total_s:.3f}")
     rows.append(f"fleet_bench,{users},fleet,total_s,{total_f:.3f}")
     rows.append(f"fleet_bench,{users},fleet,speedup,{speedup:.2f}")
+    results["head_to_head"] = {"seed_s": total_s, "fleet_s": total_f,
+                               "speedup": speedup, "handoffs": ev_f}
     print(f"[10k head-to-head] {users} users, {steps} mobility steps, "
           f"{ev_f} handoffs")
     print(f"  seed : static {t_static_s:6.2f}s + steps {t_steps_s:6.2f}s "
@@ -195,14 +206,47 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
           f"= {total_f:6.2f}s")
     print(f"  speedup: {speedup:.1f}x")
 
+    # identical planner + trace, the two solver backends: the delta IS
+    # the fused whole-sweep solver (cfg defaults to solver="fused").
+    # Each backend runs the trace twice and the SECOND run is timed, so
+    # every jit cache (including each pow2 handoff bucket's MLi-GD
+    # compile — far costlier to trace for the autodiff scan+while graph)
+    # is warm and the comparison measures solver runtime only.
+    sol = {}
+    for name, c in (("fused", cfg),
+                    ("autodiff", dataclasses.replace(cfg,
+                                                     solver="autodiff"))):
+        _run_fleet(topo, prof, c, c_dev, steps, dt, mob_seed=1)     # warm
+        t_st, t_sp, ev_x, fleet_x = _run_fleet(
+            topo, prof, c, c_dev, steps, dt, mob_seed=1)
+        assert ev_x == ev_f
+        sol[name] = (t_st + t_sp, fleet_x)
+    np.testing.assert_allclose(sol["autodiff"][1].U, sol["fused"][1].U,
+                               rtol=1e-4)
+    total_fw, total_a = sol["fused"][0], sol["autodiff"][0]
+    sol_speedup = total_a / total_fw
+    rows.append(f"fleet_bench,{users},autodiff,total_s,{total_a:.3f}")
+    rows.append(f"fleet_bench,{users},fused,solver_speedup,"
+                f"{sol_speedup:.2f}")
+    results["solver"] = {"autodiff_s": total_a, "fused_s": total_fw,
+                         "speedup": sol_speedup}
+    print(f"[solver] same planner/trace (warm): autodiff {total_a:6.2f}s "
+          f"vs fused {total_fw:6.2f}s -> {sol_speedup:.1f}x")
+
     t_static_b, t_steps_b, ev_b, _ = _run_fleet(
         topo, prof, cfg, np.resize(c_dev, big_users), steps, dt, mob_seed=2)
     per_step = t_steps_b / steps
     rows.append(f"fleet_bench,{big_users},fleet,step_s,{per_step:.3f}")
     rows.append(f"fleet_bench,{big_users},fleet,users_per_step,{big_users}")
+    results["sustained"] = {"users": big_users, "static_s": t_static_b,
+                            "step_s": per_step, "handoffs": ev_b}
     print(f"[100k sustained] {big_users} users: static plan "
           f"{t_static_b:.2f}s, {per_step:.2f}s per mobility step "
           f"({ev_b} handoffs over {steps} steps)")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {out}")
     return rows
 
 
@@ -211,6 +255,7 @@ if __name__ == "__main__":
     ap.add_argument("--users", type=int, default=10_000)
     ap.add_argument("--big-users", type=int, default=100_000)
     ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args()
-    for r in run(args.users, args.big_users, args.steps):
+    for r in run(args.users, args.big_users, args.steps, out=args.out):
         print(r)

@@ -1,0 +1,125 @@
+"""Solver microbenchmark: fused whole-sweep vs autodiff control plane.
+
+Measures the two batched solvers behind ``LiGDConfig.solver`` on identical
+inputs at fleet scale — the planner's Corollary-3 hot spot (X·K̄·M GD
+solves per round):
+
+  * Li-GD   — ``solve_ligd_batch_jit``  (plan_static's solve)
+  * MLi-GD  — ``solve_mligd_batch_jit`` (on_handoffs' joint solve)
+
+Fixed shapes, warm jit caches, median of ``--reps`` (≥5) runs.  Results
+go to stdout as CSV rows and to ``--out`` (default BENCH_solver.json) as
+machine-readable JSON so the perf trajectory is tracked across PRs; the
+acceptance bar is fused ≥ 3x autodiff at 10k users on CPU.
+
+Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python benchmarks/solver_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.chain_cnns import nin
+from repro.core.costs import DeviceFleet, EdgeParams, edge_dict, \
+    stack_devices
+from repro.core.ligd import LiGDConfig, solve_ligd_batch_jit
+from repro.core.mligd import orig_strategy_dict, solve_mligd_batch_jit
+from repro.core.profile import profile_of
+
+
+def _fleet_inputs(users: int, seed: int = 0):
+    """A heterogeneous seeded fleet against one (shared) edge server —
+    the fixed-shape workload both solvers run verbatim."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 1.0, (3, users))
+    w /= w.sum(0)
+    devs = stack_devices(DeviceFleet(
+        c_dev=rng.uniform(2e9, 50e9, users),
+        p_tx=rng.uniform(0.2, 1.0, users),
+        k_rounds=rng.uniform(20.0, 200.0, users),
+        w_T=w[0], w_E=w[1], w_C=w[2],
+        hops=rng.integers(0, 6, users)))
+    edge = edge_dict(EdgeParams())
+    return devs, edge, rng
+
+
+def _median_time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())                      # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(users: int = 10_000, reps: int = 5, max_iters: int = 400,
+        out: str = "BENCH_solver.json") -> List[str]:
+    prof = profile_of(nin())
+    devs, edge, rng = _fleet_inputs(users)
+    cfg_f = LiGDConfig(max_iters=max_iters)          # solver="fused"
+    cfg_a = dataclasses.replace(cfg_f, solver="autodiff")
+
+    results = {"users": users, "reps": reps, "max_iters": max_iters,
+               "backend": jax.default_backend(), "solvers": {}}
+    rows = []
+
+    # ---- Li-GD (plan_static's solve) ----------------------------------
+    t_f = _median_time(
+        lambda: solve_ligd_batch_jit(prof, devs, edge, cfg_f).U, reps)
+    t_a = _median_time(
+        lambda: solve_ligd_batch_jit(prof, devs, edge, cfg_a).U, reps)
+    results["solvers"]["ligd"] = {
+        "fused_s": t_f, "autodiff_s": t_a, "speedup": t_a / t_f,
+        "fused_users_per_sec": users / t_f,
+        "autodiff_users_per_sec": users / t_a}
+
+    # ---- MLi-GD (on_handoffs' joint solve) -----------------------------
+    prev = solve_ligd_batch_jit(prof, devs, edge, cfg_f)
+    origs = orig_strategy_dict(prof, edge, prev)
+    hops_back = jnp.asarray(rng.integers(1, 8, users), jnp.float32)
+    t_f = _median_time(
+        lambda: solve_mligd_batch_jit(prof, devs, edge, origs, hops_back,
+                                      cfg_f).U, reps)
+    t_a = _median_time(
+        lambda: solve_mligd_batch_jit(prof, devs, edge, origs, hops_back,
+                                      cfg_a).U, reps)
+    results["solvers"]["mligd"] = {
+        "fused_s": t_f, "autodiff_s": t_a, "speedup": t_a / t_f,
+        "fused_users_per_sec": users / t_f,
+        "autodiff_users_per_sec": users / t_a}
+
+    for name, r in results["solvers"].items():
+        rows.append(f"solver_bench,{users},{name},fused_s,{r['fused_s']:.4f}")
+        rows.append(
+            f"solver_bench,{users},{name},autodiff_s,{r['autodiff_s']:.4f}")
+        rows.append(
+            f"solver_bench,{users},{name},speedup,{r['speedup']:.2f}")
+        print(f"[{name}] {users} users: autodiff {r['autodiff_s']*1e3:.1f}ms"
+              f"  fused {r['fused_s']*1e3:.1f}ms"
+              f"  -> {r['speedup']:.2f}x"
+              f"  ({r['fused_users_per_sec']:.0f} users/s)")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=10_000)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--max-iters", type=int, default=400)
+    ap.add_argument("--out", default="BENCH_solver.json")
+    args = ap.parse_args()
+    for r in run(args.users, args.reps, args.max_iters, args.out):
+        print(r)

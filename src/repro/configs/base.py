@@ -11,7 +11,7 @@ touches jax device state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer-type tags.  A model is a sequence of blocks; each block has exactly

@@ -19,7 +19,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .costs import LayerProfile, utility
 

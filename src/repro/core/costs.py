@@ -30,9 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -10,24 +10,29 @@ Implementation notes
 --------------------
 * Variables are optimized in normalized coordinates x ∈ [0,1]² with
   projection (the paper's box constraints B∈[B_min,B_max], r∈[r_min,r_max]).
-* Gradients are exact ``jax.grad`` of the Eq. (19) utility (the paper's
-  closed forms (21)/(22) are its special case for λ(r)=r, g(B)=B^γ; tests
-  check our autodiff against the paper's analytic ∂U/∂B form).
-* The layer loop is a ``lax.scan`` carrying the warm start; the inner GD is
-  a ``lax.while_loop`` with the paper's stopping rules (‖g‖<ε, |ΔU|<ε,
-  ‖Δx‖<ε, k>K_max).  Everything vmaps over users.
+* Two batched solver backends sit behind ``LiGDConfig.solver``:
+
+  - ``"fused"`` (default) — the whole-sweep masked-convergence solver in
+    ``repro.kernels.ligd_step``: closed-form gradients, per-lane early
+    exit, in-kernel argmin (Pallas on TPU, dense masked JAX elsewhere).
+  - ``"autodiff"`` — the oracle below: exact ``jax.grad`` of the Eq. (19)
+    utility (the paper's closed forms (21)/(22) are its special case for
+    λ(r)=r, g(B)=B^γ; tests check autodiff against the analytic ∂U/∂B),
+    a ``lax.scan`` over splits carrying the warm start, and a
+    ``lax.while_loop`` inner GD with the paper's stopping rules
+    (‖g‖<ε, |ΔU|<ε, ‖Δx‖<ε, k>K_max), vmapped over users.
+
+  ``solve_ligd`` (single user) always runs the autodiff oracle.
 * ``warm_start=False`` reproduces the baseline "repeat plain GD M times"
   that Corollary 4 compares against (benchmarks/ligd_convergence.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .costs import LayerProfile, utility
 
@@ -39,6 +44,12 @@ class LiGDConfig:
     max_iters: int = 400         # per-layer iteration cap
     init: Tuple[float, float] = (0.5, 0.5)   # cold-start (B, r) normalized
     warm_start: bool = True      # Li-GD warm start (False = plain GD ×M)
+    solver: str = "fused"        # batched backend: "fused" | "autodiff"
+    chunk: int = 1               # fused: GD steps between early-exit checks
+                                 # (1 is best on CPU — warm-started layers
+                                 # converge in ~1 step, so larger chunks
+                                 # mostly overshoot; raise on TPU to
+                                 # amortize the cross-lane exit reduction)
 
 
 class LiGDResult(NamedTuple):
@@ -75,34 +86,41 @@ def make_split_utility(dev, edge, f_l, f_e, w, m_bits):
 def _gd_solve(u_scalar: Callable, x0, cfg: LiGDConfig):
     """Projected GD with the paper's stopping rules.
 
-    u_scalar: x -> U.  Returns (x*, U*, iters)."""
+    u_scalar: x -> U.  Returns (x*, U*, iters).
+
+    The carry holds (x, U(x), ∇U(x)): each iteration steps with the
+    carried gradient and evaluates ``value_and_grad`` ONCE at the new
+    point — that value feeds the |ΔU| stopping rule now and is the
+    carried utility/gradient of the next iteration, so there is exactly
+    one utility evaluation per GD step (iterates are unchanged vs. the
+    old re-evaluating body; tests pin the trajectory)."""
     grad_fn = jax.value_and_grad(u_scalar)
 
     def cond(state):
-        x, u_prev, it, done = state
+        x, u, g, it, done = state
         return jnp.logical_and(~done, it < cfg.max_iters)
 
     def body(state):
-        x, u_prev, it, _ = state
-        u, g = grad_fn(x)
+        x, u_prev, g, it, _ = state
         x_new = jnp.clip(x - cfg.lr * g, 0.0, 1.0)
-        u_new = u_scalar(x_new)
+        u_new, g_new = grad_fn(x_new)
         done = jnp.logical_or(
             jnp.linalg.norm(g) < cfg.eps,
             jnp.logical_or(jnp.abs(u_new - u_prev) < cfg.eps,
                            jnp.max(jnp.abs(x_new - x)) < cfg.eps))
-        return (x_new, u_new, it + 1, done)
+        return (x_new, u_new, g_new, it + 1, done)
 
     x0 = jnp.asarray(x0, jnp.float32)
-    u0 = u_scalar(x0)
-    x, u, it, _ = jax.lax.while_loop(
-        cond, body, (x0, u0, jnp.asarray(0, jnp.int32), jnp.asarray(False)))
+    u0, g0 = grad_fn(x0)
+    x, u, _, it, _ = jax.lax.while_loop(
+        cond, body,
+        (x0, u0, g0, jnp.asarray(0, jnp.int32), jnp.asarray(False)))
     return x, u, it
 
 
 def solve_ligd(profile: LayerProfile, dev, edge,
                cfg: LiGDConfig = LiGDConfig()) -> LiGDResult:
-    """Solve one user's (s, B, r) — paper Algorithm 1.
+    """Solve one user's (s, B, r) — paper Algorithm 1 (autodiff oracle).
 
     dev/edge: dicts from costs.dev_dict / costs.edge_dict (leaves may carry
     a leading batch axis under vmap)."""
@@ -135,10 +153,52 @@ def solve_ligd(profile: LayerProfile, dev, edge,
                       B_per_layer=B_all, r_per_layer=r_all)
 
 
+def _solve_ligd_fused(profile: LayerProfile, devs, edge,
+                      cfg: LiGDConfig) -> LiGDResult:
+    """Batched fused whole-sweep solve (Pallas kernel on TPU, masked-JAX
+    ref elsewhere) — one launch for all users × all splits.
+
+    devs leaves are (X,); edge leaves are (X,) or shared scalars."""
+    # Imported lazily: repro.kernels imports repro.core.costs at module
+    # load, so a module-level import here would be circular.
+    from repro.kernels.ligd_step import (ligd_sweep, pack_sweep_features,
+                                         sweep_tables)
+    f_l_np, f_e_np, w_np = profile.prefix_tables()
+    f_l = jnp.asarray(f_l_np, jnp.float32)
+    f_e = jnp.asarray(f_e_np, jnp.float32)
+    w = jnp.asarray(w_np, jnp.float32)
+    m_bits = jnp.asarray(profile.result_bits, jnp.float32)
+
+    X = devs["c_dev"].shape[0]
+    feat = pack_sweep_features(devs, edge, m_bits, X)
+    x0 = jnp.broadcast_to(
+        jnp.asarray(cfg.init, jnp.float32)[:, None], (2, X))
+    res = ligd_sweep(feat, x0, sweep_tables(profile), lr=cfg.lr,
+                     eps=cfg.eps, max_iters=cfg.max_iters, chunk=cfg.chunk,
+                     warm_start=cfg.warm_start, init=cfg.init)
+
+    B_span = edge["B_max"] - edge["B_min"]
+    r_span = edge["r_max"] - edge["r_min"]
+    B, r = _denorm(edge, res.best_x)
+    u_fn = make_split_utility(devs, edge, f_l, f_e, w, m_bits)
+    _, (T, E, C) = u_fn(res.best_s, res.best_x)
+    return LiGDResult(
+        split=res.best_s, B=B, r=r, U=res.best_u, T=T, E=E, C=C,
+        iters_per_layer=res.iters_layers.T.astype(jnp.int32),
+        U_per_layer=res.u_layers.T,
+        B_per_layer=(edge["B_min"] + res.xB_layers * B_span).T,
+        r_per_layer=(edge["r_min"] + res.xr_layers * r_span).T)
+
+
 def solve_ligd_batch(profile: LayerProfile, devs, edge,
                      cfg: LiGDConfig = LiGDConfig()) -> LiGDResult:
-    """vmap over users: ``devs`` leaves have a leading X axis; ``edge`` may
-    be shared (scalars) or per-user (leading X axis)."""
+    """Batched solve over users: ``devs`` leaves have a leading X axis;
+    ``edge`` may be shared (scalars) or per-user (leading X axis).
+    Dispatches on ``cfg.solver`` (fused sweep vs. vmapped autodiff)."""
+    if cfg.solver == "fused":
+        return _solve_ligd_fused(profile, devs, edge, cfg)
+    if cfg.solver != "autodiff":
+        raise ValueError(f"unknown LiGDConfig.solver: {cfg.solver!r}")
     edge_batched = jnp.ndim(next(iter(edge.values()))) > 0
     in_axes = (0, 0 if edge_batched else None)
     fn = jax.vmap(lambda d, e: solve_ligd(profile, d, e, cfg),
@@ -157,8 +217,6 @@ def solve_ligd_batch_jit(profile: LayerProfile, devs, edge,
     key = (profile.fingerprint, cfg, edge_batched)
     fn = _PROFILE_CACHE.get(key)
     if fn is None:
-        in_axes = (0, 0 if edge_batched else None)
-        fn = jax.jit(jax.vmap(lambda d, e: solve_ligd(profile, d, e, cfg),
-                              in_axes=in_axes))
+        fn = jax.jit(lambda d, e: solve_ligd_batch(profile, d, e, cfg))
         _PROFILE_CACHE[key] = fn
     return fn(devs, edge)

@@ -15,18 +15,22 @@ Variables: x = (B_norm, r_norm, R, B_back_norm) ∈ [0,1]⁴, optimized jointly
 with the same warm-started layer loop as Li-GD (only U₁ depends on s; U₂'s
 split is frozen at the original strategy, paper §5: "the model segmentation
 strategy in the second term does not change").
+
+Like Li-GD, the batched solve dispatches on ``LiGDConfig.solver``: the
+default ``"fused"`` path runs the whole-sweep joint kernel from
+``repro.kernels.ligd_step`` (4-variable variant, closed-form gradients,
+per-lane convergence masking) and evaluates the two R vertices outside the
+kernel; ``"autodiff"`` keeps the vmapped scan+while oracle below.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .costs import LayerProfile, energy_compute, energy_transmit, rent_cost, \
-    shannon_rate, t_device, t_server, t_transmit, utility
+    t_device, t_server
 from .ligd import LiGDConfig, LiGDResult, _denorm, _gd_solve, \
     make_split_utility
 
@@ -70,7 +74,8 @@ def u_transmit_back(dev, edge_new, orig, m_bits, B_back, hops_back):
 
 def solve_mligd(profile: LayerProfile, dev, edge_new, orig, hops_back,
                 cfg: LiGDConfig = LiGDConfig()) -> MLiGDResult:
-    """Joint (s, B, r, R, B_back) solve for one user after a handoff.
+    """Joint (s, B, r, R, B_back) solve for one user after a handoff
+    (autodiff oracle).
 
     edge_new: the NEW server's parameters (dev['hops'] must already be the
     hop count to the new server).  hops_back: H₂ hops from the new AP back
@@ -128,6 +133,53 @@ def solve_mligd(profile: LayerProfile, dev, edge_new, orig, hops_back,
         iters_per_layer=iters)
 
 
+def _solve_mligd_fused(profile: LayerProfile, devs, edge_new, origs,
+                       hops_back, cfg: LiGDConfig) -> MLiGDResult:
+    """Batched fused joint sweep + the Corollary-7 vertex pick.
+
+    devs/origs leaves are (X,); edge_new leaves are (X,) or shared."""
+    # Lazy import: repro.kernels imports repro.core.costs at module load.
+    from repro.kernels.ligd_step import (mligd_sweep, pack_sweep_features,
+                                         sweep_tables)
+    f_l_np, f_e_np, w_np = profile.prefix_tables()
+    f_l = jnp.asarray(f_l_np, jnp.float32)
+    f_e = jnp.asarray(f_e_np, jnp.float32)
+    w = jnp.asarray(w_np, jnp.float32)
+    m_bits = jnp.asarray(profile.result_bits, jnp.float32)
+
+    X = devs["c_dev"].shape[0]
+    hops_back = jnp.asarray(hops_back, jnp.float32)
+    feat = pack_sweep_features(devs, edge_new, m_bits, X, orig=origs,
+                               hops_back=hops_back)
+    init4 = (*cfg.init, 0.5, 0.5)
+    x0 = jnp.broadcast_to(
+        jnp.asarray(init4, jnp.float32)[:, None], (4, X))
+    res = mligd_sweep(feat, x0, sweep_tables(profile), lr=cfg.lr,
+                      eps=cfg.eps, max_iters=cfg.max_iters, chunk=cfg.chunk,
+                      warm_start=cfg.warm_start, init=init4)
+
+    xB, xr, xR, xBb = res.best_x
+    u1_fn = make_split_utility(devs, edge_new, f_l, f_e, w, m_bits)
+    u1_star, (T1, E1, C1) = u1_fn(res.best_s, (xB, xr))
+    B_back = edge_new["B_min"] + xBb * (edge_new["B_max"]
+                                        - edge_new["B_min"])
+    u2_star, (T2, E2, C2) = u_transmit_back(devs, edge_new, origs, m_bits,
+                                            B_back, hops_back)
+    take_back = u2_star < u1_star
+    B1, r1 = _denorm(edge_new, (xB, xr))
+    return MLiGDResult(
+        R=take_back.astype(jnp.int32),
+        split=jnp.where(take_back, origs["split"], res.best_s),
+        B=jnp.where(take_back, B_back, B1),
+        r=jnp.where(take_back, origs["r"], r1),
+        U=jnp.minimum(u1_star, u2_star),
+        T=jnp.where(take_back, T2, T1),
+        E=jnp.where(take_back, E2, E1),
+        C=jnp.where(take_back, C2, C1),
+        U_recalc=u1_star, U_back=u2_star,
+        iters_per_layer=res.iters_layers.T.astype(jnp.int32))
+
+
 def orig_strategy_dict(profile: LayerProfile, edge_orig, res: LiGDResult):
     """Freeze a Li-GD solution into the ``orig`` dict MLi-GD consumes."""
     f_l_np, f_e_np, w_np = profile.prefix_tables()
@@ -146,21 +198,36 @@ def orig_strategy_dict(profile: LayerProfile, edge_orig, res: LiGDResult):
     }
 
 
+def solve_mligd_batch(profile: LayerProfile, devs, edge_new, origs,
+                      hops_back, cfg: LiGDConfig = LiGDConfig()
+                      ) -> MLiGDResult:
+    """Batched handoff solve; dispatches on ``cfg.solver``."""
+    if cfg.solver == "fused":
+        return _solve_mligd_fused(profile, devs, edge_new, origs,
+                                  hops_back, cfg)
+    if cfg.solver != "autodiff":
+        raise ValueError(f"unknown LiGDConfig.solver: {cfg.solver!r}")
+    edge_batched = jnp.ndim(next(iter(edge_new.values()))) > 0
+    in_axes = (0, 0 if edge_batched else None, 0, 0)
+    fn = jax.vmap(
+        lambda d, e, o, h: solve_mligd(profile, d, e, o, h, cfg),
+        in_axes=in_axes)
+    return fn(devs, edge_new, origs, hops_back)
+
+
 _CACHE: dict = {}
 
 
 def solve_mligd_batch_jit(profile: LayerProfile, devs, edge_new, origs,
                           hops_back, cfg: LiGDConfig = LiGDConfig()
                           ) -> MLiGDResult:
-    """vmap over users; edge_new may be shared or per-user batched.
+    """jit-cached batched solve; edge_new may be shared or per-user.
     Cache keyed by profile content, not id() (see LayerProfile.fingerprint)."""
     edge_batched = jnp.ndim(next(iter(edge_new.values()))) > 0
     key = (profile.fingerprint, cfg, edge_batched)
     fn = _CACHE.get(key)
     if fn is None:
-        in_axes = (0, 0 if edge_batched else None, 0, 0)
-        fn = jax.jit(jax.vmap(
-            lambda d, e, o, h: solve_mligd(profile, d, e, o, h, cfg),
-            in_axes=in_axes))
+        fn = jax.jit(lambda d, e, o, h: solve_mligd_batch(
+            profile, d, e, o, h, cfg))
         _CACHE[key] = fn
     return fn(devs, edge_new, origs, hops_back)

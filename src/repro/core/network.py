@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import numpy as np
 

@@ -10,6 +10,13 @@ Responsibilities:
   * strategy-calculation-time feedback — measured solver time feeds the
     CBR term T_Ag/k of the *next* solve (Eq. 6/7's self-consistency).
 
+Both solve paths dispatch on ``LiGDConfig.solver``: the default
+``"fused"`` routes the whole control plane through the fused whole-sweep
+solver in ``repro.kernels.ligd_step`` (Pallas kernel on TPU, masked-JAX
+ref on CPU/GPU; per-user edge rows mean heterogeneous servers still take
+ONE launch); ``solver="autodiff"`` restores the vmapped autodiff oracle.
+See the kernel package docstring for the selection rules.
+
 Plans live in :class:`FleetState`, a struct-of-arrays table (one (X,)
 array per quantity), so planning X users costs O(fields) Python plus one
 jitted solve — never O(X) interpreter work.  Handoff batches are padded
@@ -18,8 +25,8 @@ holds at most log2(X_max) entries as event counts fluctuate step to step.
 
 Optionally the static solve shards users across devices with ``shard_map``
 (pass a ``repro.runtime.meshenv.MeshEnv``); each device runs the identical
-vmapped Li-GD on its slice of the fleet — the solves are independent, so
-no collectives are needed.
+batched Li-GD (fused or autodiff per ``cfg.solver``) on its slice of the
+fleet — the solves are independent, so no collectives are needed.
 """
 from __future__ import annotations
 

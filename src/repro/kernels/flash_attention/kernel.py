@@ -18,7 +18,6 @@ VMEM working set per step (defaults qb=kb=512, hd=128, f32):
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

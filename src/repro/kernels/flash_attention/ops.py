@@ -4,7 +4,6 @@ model code uses."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import flash_attention_tpu
 from .ref import attention_ref

@@ -1,3 +1,45 @@
-from .ops import ligd_steps
-from .kernel import edge_tuple_of, ligd_steps_tpu, pack_features
-from .ref import ligd_steps_ref
+"""Batched Li-GD / MLi-GD solver kernels (paper hot-spot, Corollary 3).
+
+Solver selection — who runs what, and when
+------------------------------------------
+Three implementations solve the same per-user GD subproblem; the planner's
+``LiGDConfig.solver`` flag plus the runtime backend pick one:
+
+* **Pallas TPU fused sweep** (``kernel.sweep_tpu``) — chosen by
+  ``solver="fused"`` when ``jax.default_backend() == "tpu"`` (or
+  ``force_pallas=True``, which runs it in interpret mode for CPU tests).
+  One launch carries the whole M+1 split sweep in VMEM: unrolled
+  compile-time split tables, closed-form gradients, per-lane convergence
+  masking with chunked early exit, in-kernel argmin over splits.  Use it
+  when the fleet is large and the profile is fixed per planning round.
+
+* **Masked-JAX fused ref** (``ref.ligd_sweep_ref`` /
+  ``ref.mligd_sweep_ref``) — chosen by ``solver="fused"`` on every
+  non-TPU backend.  The same masked-convergence algorithm (identical step
+  arithmetic, ``lax.scan`` over the split tables instead of an unrolled
+  loop) without Pallas, so CPU/GPU get the fused semantics and
+  kernel-vs-ref parity is arithmetic identity.
+
+* **Autodiff oracle** (``repro.core.ligd.solve_ligd`` et al.) — chosen by
+  ``solver="autodiff"``.  Exact ``jax.grad`` of the Eq. (19) utility with
+  a vmapped ``lax.while_loop``; slow but definitionally faithful to the
+  paper's Algorithm 1/2.  It is the reference the fused paths are tested
+  against (exact split/R, 1e-4 on B/r/U) and should be used when
+  validating cost-model changes.
+
+``ligd_steps`` (single split point, K fixed GD steps) is the original
+minimal kernel, kept as an exemplar and for gradient cross-checks.
+"""
+from .ops import SweepResult, ligd_steps, ligd_sweep, mligd_sweep
+from .kernel import (edge_tuple_of, ligd_steps_tpu, ligd_sweep_tpu,
+                     mligd_sweep_tpu, pack_features, sweep_tpu)
+from .ref import (NF_SWEEP, SWEEP_FIELDS, ligd_steps_ref, ligd_sweep_ref,
+                  mligd_sweep_ref, pack_sweep_features, sweep_tables)
+
+__all__ = [
+    "SweepResult", "ligd_steps", "ligd_sweep", "mligd_sweep",
+    "edge_tuple_of", "ligd_steps_tpu", "ligd_sweep_tpu", "mligd_sweep_tpu",
+    "pack_features", "sweep_tpu", "NF_SWEEP", "SWEEP_FIELDS",
+    "ligd_steps_ref", "ligd_sweep_ref", "mligd_sweep_ref",
+    "pack_sweep_features", "sweep_tables",
+]

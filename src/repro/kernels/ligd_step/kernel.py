@@ -1,16 +1,32 @@
-"""Pallas-TPU batched Li-GD inner loop — the paper's compute hot-spot.
+"""Pallas-TPU batched Li-GD kernels — the paper's compute hot-spot.
 
 The MCSA planner at an edge server solves (B, r) for EVERY attached user ×
 EVERY candidate split layer (X·M GD solves, Corollary 3's X·K̄·M cost).
 Each solve is a tiny independent optimization — an embarrassingly-parallel
-VPU workload, not an MXU one.  The TPU adaptation tiles users into
-(8×128)-lane VMEM blocks and runs K projected-GD steps IN KERNEL with the
-closed-form gradients (the paper's Eqs. 21–22 for our λ(r)=r^a,
-g(B)=ρ_B(B/B0)^γ), so the X·K HBM round-trips of a naive
-one-step-per-launch loop collapse to a single read of the feature block
-and a single write of the solution.
+VPU workload, not an MXU one.
 
-Feature layout per user (NF = 16):
+Two generations of kernel live here:
+
+* ``ligd_steps_tpu`` — the original SINGLE-STEP-LOOP kernel: K fixed
+  projected-GD steps for one split point per launch, per-batch-constant
+  edge params.  Kept as the minimal exemplar and for its tests.
+
+* ``ligd_sweep_tpu`` / ``mligd_sweep_tpu`` — the FUSED WHOLE-SWEEP
+  kernels (the planner's hot path): one launch carries the entire M+1
+  split sweep per user in kernel — warm-starting split s+1 from split s's
+  optimum (the Li-GD trick), closed-form gradients, per-lane convergence
+  masking (chunked fixed-iteration steps + early-exit counters instead of
+  a lockstep while_loop), and a running in-kernel argmin over splits.
+  The MLi-GD variant optimizes the joint (B, r, R, B_back) objective of
+  Eq. 41–43.  Features are laid out (NF_SWEEP, X) — users on lanes — so
+  every per-user quantity is a full (1, xb) VPU vector; the per-split
+  prefix tables are compile-time constants (the split loop is unrolled),
+  and edge parameters are PER-USER feature rows, so one launch serves a
+  fleet attached to heterogeneous servers.  The step arithmetic is
+  imported from ``ref.py`` — the dense reference and the kernel run the
+  same ops, so parity is arithmetic identity.
+
+Single-step feature layout per user (NF = 16):
   0:f_l  1:f_e  2:w_bits  3:m_bits  4:offloaded  5:c_dev  6:xi·c²·φ
   7:p_tx  8:c1(=pαg/N0)  9:hops  10:k_rounds  11:t_ag  12:w_T  13:w_E
   14:w_C  15:x0_B (warm start)   [16:x0_r packed in a second array]
@@ -26,9 +42,9 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import tpu_compiler_params
+from .ref import NF_SWEEP, _frows, _init_x, _layer_solve
 
 NF = 16
 LN2 = math.log(2.0)
@@ -123,6 +139,101 @@ def ligd_steps_tpu(feat, x0, *, edge_tuple, iters: int = 64,
         name="mcsa_ligd_step",
     )(feat, x0)
     return x, u[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-sweep kernels.  The split loop is UNROLLED over the static
+# prefix tables (sweep_tables(profile)), so each split's (f_l, f_e, w,
+# offloaded) is a compile-time constant; per-user/per-edge parameters come
+# from the (NF_SWEEP, xb) feature block.  Step arithmetic is ref.py's.
+# ---------------------------------------------------------------------------
+def _sweep_kernel(feat_ref, x0_ref, u_ref, xB_ref, xr_ref, it_ref, best_ref,
+                  *, tables, lr, eps, max_iters, chunk, warm_start, init,
+                  joint):
+    feat = feat_ref[...].astype(jnp.float32)          # (NF_SWEEP, xb)
+    fr = _frows(feat)
+    nx = x0_ref.shape[0]
+    x = tuple(x0_ref[i:i + 1, :] for i in range(nx))
+
+    u_best = jnp.full_like(x[0], jnp.inf)
+    s_best = jnp.zeros_like(x[0])
+    x_best = x
+    us, xBs, xrs, its = [], [], [], []
+    for s, tab in enumerate(tables):
+        if not warm_start:
+            x = _init_x(fr, init)
+        x, u, it = _layer_solve(fr, x, tab, lr=lr, eps=eps,
+                                max_iters=max_iters, chunk=chunk, joint=joint)
+        us.append(u)
+        xBs.append(x[0])
+        xrs.append(x[1])
+        its.append(it)
+        better = u < u_best                            # strict: first min
+        u_best = jnp.where(better, u, u_best)
+        s_best = jnp.where(better, jnp.float32(s), s_best)
+        x_best = tuple(jnp.where(better, a, b) for a, b in zip(x, x_best))
+
+    u_ref[...] = jnp.concatenate(us, 0)
+    xB_ref[...] = jnp.concatenate(xBs, 0)
+    xr_ref[...] = jnp.concatenate(xrs, 0)
+    it_ref[...] = jnp.concatenate(its, 0)
+    best_ref[...] = jnp.concatenate([s_best, u_best, *x_best], 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "tables", "lr", "eps", "max_iters", "chunk", "warm_start", "init",
+    "joint", "user_block", "interpret"))
+def sweep_tpu(feat, x0, *, tables, lr=0.15, eps=1e-5, max_iters=400,
+              chunk=16, warm_start=True, init=(0.5, 0.5), joint=False,
+              user_block=2048, interpret=False):
+    """Fused whole-sweep solve.  feat: (NF_SWEEP, X); x0: (K, X) with
+    K = 2 (Li-GD) or 4 (MLi-GD joint).  Returns per-layer (M1, X) arrays
+    (U, xB, xr, iters) plus a (2+K, X) best block
+    [s*, U*, x*_components...] from the in-kernel argmin."""
+    X = feat.shape[1]
+    K = x0.shape[0]
+    M1 = len(tables)
+    xb = min(user_block, max(X, 8))
+    nb = pl.cdiv(X, xb)
+    # Pad a ragged final block with replicas of lane 0: garbage pad lanes
+    # would never satisfy a stopping rule (NaN comparisons are False) and
+    # pin that block's masked loop at max_iters; a real lane's replica
+    # converges with it.
+    Xp = nb * xb
+    if Xp != X:
+        feat = jnp.concatenate(
+            [feat, jnp.broadcast_to(feat[:, :1], (feat.shape[0], Xp - X))],
+            axis=1)
+        x0 = jnp.concatenate(
+            [x0, jnp.broadcast_to(x0[:, :1], (K, Xp - X))], axis=1)
+    kernel = functools.partial(
+        _sweep_kernel, tables=tables, lr=lr, eps=eps, max_iters=max_iters,
+        chunk=chunk, warm_start=warm_start, init=init, joint=joint)
+    lane_spec = lambda rows: pl.BlockSpec((rows, xb), lambda i: (0, i))
+    u, xB, xr, it, best = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[lane_spec(NF_SWEEP), lane_spec(K)],
+        out_specs=[lane_spec(M1), lane_spec(M1), lane_spec(M1),
+                   lane_spec(M1), lane_spec(2 + K)],
+        out_shape=[jax.ShapeDtypeStruct((M1, Xp), jnp.float32)] * 4
+        + [jax.ShapeDtypeStruct((2 + K, Xp), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+        name="mcsa_mligd_sweep" if joint else "mcsa_ligd_sweep",
+    )(feat, x0)
+    if Xp != X:
+        u, xB, xr, it, best = (a[:, :X] for a in (u, xB, xr, it, best))
+    return u, xB, xr, it, best
+
+
+def ligd_sweep_tpu(feat, x0, *, tables, **kw):
+    return sweep_tpu(feat, x0, tables=tables, joint=False, **kw)
+
+
+def mligd_sweep_tpu(feat, x0, *, tables, init=(0.5, 0.5, 0.5, 0.5), **kw):
+    return sweep_tpu(feat, x0, tables=tables, joint=True, init=init, **kw)
 
 
 def pack_features(f_l, f_e, w, m, offl, dev: dict) -> jnp.ndarray:

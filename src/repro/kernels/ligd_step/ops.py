@@ -1,10 +1,14 @@
-"""Public wrapper for the batched Li-GD step kernel."""
+"""Public wrappers for the batched Li-GD kernels (single-step + fused
+whole-sweep).  See the package docstring for how a path gets picked."""
 from __future__ import annotations
 
-import jax
+from typing import NamedTuple
 
-from .kernel import edge_tuple_of, ligd_steps_tpu, pack_features
-from .ref import ligd_steps_ref
+import jax
+import jax.numpy as jnp
+
+from .kernel import edge_tuple_of, ligd_steps_tpu, sweep_tpu
+from .ref import ligd_steps_ref, ligd_sweep_ref, mligd_sweep_ref
 
 
 def ligd_steps(feat, x0, edge: dict, *, iters: int = 64, lr: float = 0.15,
@@ -14,3 +18,54 @@ def ligd_steps(feat, x0, edge: dict, *, iters: int = 64, lr: float = 0.15,
                               iters=iters, lr=lr,
                               interpret=jax.default_backend() != "tpu")
     return ligd_steps_ref(feat, x0, edge, iters=iters, lr=lr)
+
+
+class SweepResult(NamedTuple):
+    """Whole-sweep solve, layer-major: per-layer arrays are (M1, X)."""
+    u_layers: jnp.ndarray        # joint utility per split
+    xB_layers: jnp.ndarray       # normalized B per split
+    xr_layers: jnp.ndarray       # normalized r per split
+    iters_layers: jnp.ndarray    # per-lane GD iterations per split
+    best_s: jnp.ndarray          # (X,) int32 — in-kernel argmin over splits
+    best_x: tuple                # K× (X,) normalized optimum at best_s
+    best_u: jnp.ndarray          # (X,)
+
+
+def _sweep(feat, x0, tables, *, joint, lr, eps, max_iters, chunk,
+           warm_start, init, force_pallas=False, interpret=None,
+           user_block=2048) -> SweepResult:
+    use_pallas = force_pallas or jax.default_backend() == "tpu"
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        u, xB, xr, it, best = sweep_tpu(
+            feat, x0, tables=tables, lr=lr, eps=eps, max_iters=max_iters,
+            chunk=chunk, warm_start=warm_start, init=init, joint=joint,
+            user_block=user_block, interpret=interpret)
+        best_s, best_u = best[0], best[1]
+        best_x = tuple(best[2 + i] for i in range(x0.shape[0]))
+    else:
+        ref = mligd_sweep_ref if joint else ligd_sweep_ref
+        u, (xB, xr, *_rest), it, best_s, best_x, best_u = ref(
+            feat, x0, tables, lr=lr, eps=eps, max_iters=max_iters,
+            chunk=chunk, warm_start=warm_start, init=init)
+    return SweepResult(u, xB, xr, it, best_s.astype(jnp.int32),
+                       best_x, best_u)
+
+
+def ligd_sweep(feat, x0, tables, *, lr=0.15, eps=1e-5, max_iters=400,
+               chunk=16, warm_start=True, init=(0.5, 0.5),
+               **kw) -> SweepResult:
+    """Fused whole-sweep Li-GD: Pallas on TPU, masked-JAX ref elsewhere."""
+    return _sweep(feat, x0, tables, joint=False, lr=lr, eps=eps,
+                  max_iters=max_iters, chunk=chunk, warm_start=warm_start,
+                  init=init, **kw)
+
+
+def mligd_sweep(feat, x0, tables, *, lr=0.15, eps=1e-5, max_iters=400,
+                chunk=16, warm_start=True, init=(0.5, 0.5, 0.5, 0.5),
+                **kw) -> SweepResult:
+    """Fused whole-sweep MLi-GD joint (B, r, R, B_back) solve."""
+    return _sweep(feat, x0, tables, joint=True, lr=lr, eps=eps,
+                  max_iters=max_iters, chunk=chunk, warm_start=warm_start,
+                  init=init, **kw)

@@ -1,17 +1,315 @@
-"""Oracle for the Li-GD step kernel: autodiff gradient of the Eq. (19)
-utility (repro.core.costs.utility) + the same projected-GD loop.
+"""Li-GD step/sweep reference paths.
 
-This doubles as the check that the kernel's closed-form gradients match
-the paper's analytic forms (Eqs. 21–22 generalized to λ(r)=r^a, convex g).
+Two distinct roles live here:
+
+1. ``ligd_steps_ref`` — the AUTODIFF oracle for the single-step kernel:
+   exact ``jax.grad`` of the Eq. (19) utility (repro.core.costs.utility)
+   plus the same projected-GD loop.  This doubles as the check that the
+   kernels' closed-form gradients match the paper's analytic forms
+   (Eqs. 21–22 generalized to λ(r)=r^a, convex g).
+
+2. The FUSED WHOLE-SWEEP reference (``ligd_sweep_ref`` /
+   ``mligd_sweep_ref``) — the pure-JAX twin of the Pallas sweep kernels in
+   ``kernel.py``: the entire M+1 split sweep (warm-started layer loop,
+   closed-form gradients, per-lane convergence masking with chunked
+   fixed-iteration steps and early-exit counters, running argmin over
+   splits) on dense ``(NF, X)`` feature matrices.  CPU/GPU backends run
+   THIS code; the TPU kernel runs the very same step functions inside
+   ``pl.pallas_call``, so kernel-vs-ref parity is arithmetic identity.
+
+The masked iteration is idempotent after convergence (frozen lanes never
+move), so results are independent of the chunk size — only the early-exit
+granularity changes.  Per-lane trajectories replicate the autodiff
+``_gd_solve`` stopping rules exactly (‖g‖<ε, |ΔU|<ε, ‖Δx‖_∞<ε, k≥K_max),
+which is what the fused-vs-autodiff parity tests in tests/test_ligd.py
+rely on.
 """
 from __future__ import annotations
+
+import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.costs import utility
 
+LN2 = math.log(2.0)
 
+# ---------------------------------------------------------------------------
+# Fused-sweep feature layout: one ROW per feature, users on the trailing
+# (lane) axis so every row is a full VPU vector on TPU.  Rows 23..28 are
+# only populated for the MLi-GD joint solve (frozen original strategy).
+# ---------------------------------------------------------------------------
+SWEEP_FIELDS = (
+    "c_dev", "epf", "p_tx", "c1", "hops", "k", "t_ag", "wT", "wE", "wC",
+    "c_min", "rho_min", "lam_a", "rho_B", "gamma_B", "B0", "B_bh", "N0",
+    "B_min", "B_max", "r_min", "r_max", "m",
+    "f_l_o", "f_e_o", "w_o", "r_o", "rent_o", "hops_bk",
+)
+NF_SWEEP = 32                     # rows, padded to a power of two
+
+
+def sweep_tables(profile) -> tuple:
+    """Static per-split prefix tables ((f_l, f_e, w, offloaded) per s) —
+    compile-time constants of the sweep (hashable, baked into the kernel)."""
+    f_l, f_e, w = profile.prefix_tables()
+    return tuple(
+        (float(f_l[s]), float(f_e[s]), float(w[s]),
+         1.0 if float(f_e[s]) > 0 else 0.0)
+        for s in range(len(f_l)))
+
+
+def pack_sweep_features(dev: dict, edge: dict, m_bits, num_users: int,
+                        orig: dict = None, hops_back=None) -> jnp.ndarray:
+    """(NF_SWEEP, X) f32 feature matrix from batched device/edge dicts.
+
+    ``dev``/``edge`` leaves may be (X,) arrays or scalars (shared edge);
+    everything is broadcast to per-user rows.  ``orig``/``hops_back``
+    populate the MLi-GD rows (frozen original strategy of Eq. 41–43)."""
+    X = num_users
+
+    def row(v):
+        return jnp.broadcast_to(jnp.asarray(v, jnp.float32), (X,))
+
+    epf = dev["xi"] * dev["c_dev"] ** 2 * dev["phi"]     # ξc²φ J/FLOP
+    c1 = dev["p_tx"] * dev["alpha"] * dev["g_fade"]      # pαg
+    rows = [dev["c_dev"], epf, dev["p_tx"], c1, dev["hops"],
+            dev["k_rounds"], dev["t_ag"], dev["w_T"], dev["w_E"], dev["w_C"],
+            edge["c_min"], edge["rho_min"], edge["lam_a"], edge["rho_B"],
+            edge["gamma_B"], edge["B0"], edge["B_backhaul"], edge["N0"],
+            edge["B_min"], edge["B_max"], edge["r_min"], edge["r_max"],
+            m_bits]
+    if orig is not None:
+        rows += [orig["f_l"], orig["f_e"], orig["w"], orig["r"],
+                 orig["rent"], hops_back]
+    rows = [row(v) for v in rows]
+    while len(rows) < NF_SWEEP:
+        rows.append(jnp.zeros((X,), jnp.float32))
+    return jnp.stack(rows, 0)
+
+
+def _frows(feat):
+    """Name -> (1, X) row view of the feature matrix."""
+    return {name: feat[i:i + 1, :] for i, name in enumerate(SWEEP_FIELDS)}
+
+
+# ---------------------------------------------------------------------------
+# Closed-form utility + gradients in normalized coordinates (the paper's
+# Eqs. 21–22 generalized to λ(r)=r^a, g(B)=ρ_B(B/B0)^γ), with PER-USER edge
+# parameters so one launch serves users attached to heterogeneous servers.
+# ---------------------------------------------------------------------------
+def _u1_ug(fr, f_l, f_e, w, offl):
+    """(U, grad) closure over x = (xB, xr) for one split point.
+
+    f_l/f_e/w/offl are either static floats (kernel: unrolled split loop)
+    or traced scalars (ref: lax.scan over the split tables).  Everything
+    that doesn't depend on (xB, xr) — per-user constants and per-split
+    coefficient groups — is evaluated HERE, once per layer, so the GD loop
+    body carries only the x-dependent arithmetic.  Transcendentals are
+    expressed as exp2/log2 (XLA's vectorized expansions; ~2x cheaper on
+    CPU than libm pow/log1p per element) and r^(-a-1) is folded into
+    1/(λ(r)·r), leaving 3 log2 + 2 exp2 per GD step."""
+    B_span = fr["B_max"] - fr["B_min"]
+    r_span = fr["r_max"] - fr["r_min"]
+    q = fr["c1"] / fr["N0"]                        # pαg/N0
+    wm = w + fr["m"]
+    inv_k = 1.0 / fr["k"]
+    u_const = (fr["wT"] * (f_l / fr["c_dev"] + fr["t_ag"] * inv_k)
+               + fr["wE"] * fr["epf"] * f_l)      # x-independent utility
+    tT = fr["wT"] * offl                           # coefficient groups
+    cT_relay = tT * fr["hops"] * wm / fr["B_bh"]
+    cT_srv = tT * f_e / fr["c_min"]
+    cT_up = tT * wm
+    cE = fr["wE"] * offl * fr["p_tx"] * wm
+    cC_r = fr["wC"] * offl * fr["rho_min"] * inv_k
+    cC_B = fr["wC"] * offl * fr["rho_B"] * inv_k
+    inv_B0 = 1.0 / fr["B0"]
+
+    def ug(x):
+        xB, xr = x
+        B = fr["B_min"] + xB * B_span
+        r = fr["r_min"] + xr * r_span
+        lam = jnp.exp2(fr["lam_a"] * jnp.log2(r))  # λ(r) = r^a
+        L = jnp.log2(1.0 + q / B)                  # log2(1 + pαg/(B·N0))
+        tau = B * L
+        pow_B = jnp.exp2(fr["gamma_B"] * jnp.log2(B * inv_B0))
+        inv_lam = 1.0 / lam
+
+        U = (u_const + cT_srv * inv_lam + cT_up / B + cT_relay
+             + cE / tau + cC_r * r + cC_B * pow_B)
+
+        # dτ/dB = L - q / (ln2 · (B + q))
+        dtau = L - q / (LN2 * (B + q))
+        dU_dB = (cT_up * (-1.0 / (B * B))
+                 + cE * (-dtau / (tau * tau))
+                 + cC_B * fr["gamma_B"] * pow_B / B)
+        # d(r^-a)/dr = -a·r^(-a-1) = -a / (λ(r)·r)
+        dU_dr = cT_srv * (-fr["lam_a"]) * inv_lam / r + cC_r
+        return U, (dU_dB * B_span, dU_dr * r_span)
+    return ug
+
+
+def _u2_ug(fr):
+    """(U₂, dU₂/dxB_back) closure (Eq. 41–43 relay-back vertex).
+
+    Only the relay transmission through the new AP varies — the original
+    split/server terms (rows f_l_o/f_e_o/w_o/r_o/rent_o) are frozen, so
+    the whole original-strategy cost collapses into one constant here."""
+    B_span = fr["B_max"] - fr["B_min"]
+    q = fr["c1"] / fr["N0"]
+    wm = fr["w_o"] + fr["m"]
+    inv_k = 1.0 / fr["k"]
+    lam_o = jnp.exp2(fr["lam_a"] * jnp.log2(fr["r_o"]))
+    u_const = (fr["wT"] * (fr["f_l_o"] / fr["c_dev"]
+                           + fr["f_e_o"] / (lam_o * fr["c_min"])
+                           + fr["hops_bk"] * wm / fr["B_bh"])
+               + fr["wE"] * fr["epf"] * fr["f_l_o"]
+               + fr["wC"] * fr["rent_o"] * inv_k)
+    cT = fr["wT"] * wm
+    cE = fr["wE"] * fr["p_tx"] * wm
+    cC_B = fr["wC"] * fr["rho_B"] * inv_k
+    inv_B0 = 1.0 / fr["B0"]
+
+    def ug(xBb):
+        Bb = fr["B_min"] + xBb * B_span
+        L = jnp.log2(1.0 + q / Bb)
+        tau = Bb * L
+        pow_B = jnp.exp2(fr["gamma_B"] * jnp.log2(Bb * inv_B0))
+        U = u_const + cT / Bb + cE / tau + cC_B * pow_B
+        dtau = L - q / (LN2 * (Bb + q))
+        dU_dBb = (cT * (-1.0 / (Bb * Bb))
+                  + cE * (-dtau / (tau * tau))
+                  + cC_B * fr["gamma_B"] * pow_B / Bb)
+        return U, dU_dBb * B_span
+    return ug
+
+
+def _joint_ug(fr, f_l, f_e, w, offl):
+    """(U, grad) closure over x = (xB, xr, R, xB_back): the MLi-GD joint
+    objective U = (1-R)·U₁ + R·U₂, affine in R (Corollary 7)."""
+    u1 = _u1_ug(fr, f_l, f_e, w, offl)
+    u2 = _u2_ug(fr)
+
+    def ug(x):
+        xB, xr, R, xBb = x
+        U1, (g1B, g1r) = u1((xB, xr))
+        U2, g2Bb = u2(xBb)
+        U = (1.0 - R) * U1 + R * U2
+        return U, ((1.0 - R) * g1B, (1.0 - R) * g1r, U2 - U1, R * g2Bb)
+    return ug
+
+
+# ---------------------------------------------------------------------------
+# Masked chunked projected GD — replaces the lockstep vmapped while_loop.
+# ---------------------------------------------------------------------------
+def _masked_chunked_gd(ug_fn, x, *, lr, eps, max_iters, chunk):
+    """Projected GD with the paper's stopping rules, one lane per user.
+
+    Lanes freeze as soon as THEIR stopping rule fires (per-lane iteration
+    counters, not the slowest-lane lockstep of a vmapped while_loop); the
+    loop early-exits at chunk granularity once every lane is frozen.
+    Returns (x, U(x), iters) with per-lane iteration counts."""
+    u, g = ug_fn(x)
+    it = jnp.zeros_like(u)
+    done = jnp.zeros(u.shape, bool)
+    mi = jnp.float32(max_iters)
+
+    def step(_, st):
+        x, u, g, it, done = st
+        active = jnp.logical_and(jnp.logical_not(done), it < mi)
+        x_new = tuple(jnp.clip(xi - lr * gi, 0.0, 1.0)
+                      for xi, gi in zip(x, g))
+        u_new, g_new = ug_fn(x_new)
+        gnorm = jnp.sqrt(sum(gi * gi for gi in g))
+        dx = functools.reduce(
+            jnp.maximum, [jnp.abs(a - b) for a, b in zip(x_new, x)])
+        stop = ((gnorm < eps) | (jnp.abs(u_new - u) < eps) | (dx < eps))
+        x = tuple(jnp.where(active, a, b) for a, b in zip(x_new, x))
+        u = jnp.where(active, u_new, u)
+        g = tuple(jnp.where(active, a, b) for a, b in zip(g_new, g))
+        done = jnp.where(active, stop, done)
+        it = it + active.astype(it.dtype)
+        return (x, u, g, it, done)
+
+    def chunk_body(st):
+        return jax.lax.fori_loop(0, chunk, step, st, unroll=True)
+
+    def cond(st):
+        _, _, _, it, done = st
+        return jnp.any(jnp.logical_and(jnp.logical_not(done), it < mi))
+
+    x, u, _, it, _ = jax.lax.while_loop(cond, chunk_body, (x, u, g, it, done))
+    return x, u, it
+
+
+def _layer_solve(fr, x, tab, *, lr, eps, max_iters, chunk, joint):
+    """One split point's GD solve; ``tab`` = (f_l, f_e, w, offl)."""
+    ug = (_joint_ug if joint else _u1_ug)(fr, tab[0], tab[1], tab[2], tab[3])
+    return _masked_chunked_gd(ug, x, lr=lr, eps=eps, max_iters=max_iters,
+                              chunk=chunk)
+
+
+def _init_x(fr, init):
+    return tuple(jnp.full_like(fr["c_dev"], v) for v in init)
+
+
+# ---------------------------------------------------------------------------
+# Whole-sweep reference solvers (pure JAX — the CPU/GPU fused path).
+# ---------------------------------------------------------------------------
+def _sweep_ref(feat, x0, tables, *, lr, eps, max_iters, chunk, warm_start,
+               init, joint):
+    """Warm-started M+1 split sweep with a running (first-min) argmin.
+
+    Returns (u_layers, x_layers tuple, it_layers, best_s, best_x, best_u);
+    per-layer arrays are (M1, X), best_* are (X,)-shaped."""
+    fr = _frows(feat)
+    x0 = tuple(x0[i:i + 1, :] for i in range(x0.shape[0]))
+    tab_arr = jnp.asarray(tables, jnp.float32)          # (M1, 4)
+
+    def layer(carry, inp):
+        tab, s = inp
+        x, u_b, s_b, x_b = carry
+        x_start = x if warm_start else _init_x(fr, init)
+        x, u, it = _layer_solve(fr, x_start, (tab[0], tab[1], tab[2], tab[3]),
+                                lr=lr, eps=eps, max_iters=max_iters,
+                                chunk=chunk, joint=joint)
+        better = u < u_b                                 # strict: first min
+        u_b = jnp.where(better, u, u_b)
+        s_b = jnp.where(better, s, s_b)
+        x_b = tuple(jnp.where(better, a, b) for a, b in zip(x, x_b))
+        return (x, u_b, s_b, x_b), (u, jnp.stack(x, 0), it)
+
+    u_b0 = jnp.full_like(x0[0], jnp.inf)
+    s_b0 = jnp.zeros_like(x0[0])
+    (_, u_b, s_b, x_b), (u_l, x_l, it_l) = jax.lax.scan(
+        layer, (x0, u_b0, s_b0, x0),
+        (tab_arr, jnp.arange(len(tables), dtype=jnp.float32)))
+    squeeze = lambda a: a[:, 0, :]                       # (M1, 1, X) -> (M1, X)
+    x_layers = tuple(x_l[:, i, 0, :] for i in range(len(x0)))
+    return (squeeze(u_l), x_layers, squeeze(it_l),
+            s_b[0], tuple(xc[0] for xc in x_b), u_b[0])
+
+
+def ligd_sweep_ref(feat, x0, tables, *, lr=0.15, eps=1e-5, max_iters=400,
+                   chunk=16, warm_start=True, init=(0.5, 0.5)):
+    """Fused Li-GD sweep, pure JAX.  feat: (NF_SWEEP, X); x0: (2, X)."""
+    return _sweep_ref(feat, x0, tables, lr=lr, eps=eps, max_iters=max_iters,
+                      chunk=chunk, warm_start=warm_start, init=init,
+                      joint=False)
+
+
+def mligd_sweep_ref(feat, x0, tables, *, lr=0.15, eps=1e-5, max_iters=400,
+                    chunk=16, warm_start=True, init=(0.5, 0.5, 0.5, 0.5)):
+    """Fused MLi-GD joint sweep over x = (B, r, R, B_back); x0: (4, X)."""
+    return _sweep_ref(feat, x0, tables, lr=lr, eps=eps, max_iters=max_iters,
+                      chunk=chunk, warm_start=warm_start, init=init,
+                      joint=True)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff oracle for the single-step kernel (unchanged contract).
+# ---------------------------------------------------------------------------
 def ligd_steps_ref(feat, x0, edge: dict, *, iters: int = 64, lr: float = 0.15):
     """Same contract as kernel.ligd_steps_tpu, via jax.grad + vmap."""
     def u_of(f, x):

@@ -31,7 +31,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 from repro.configs import (ALL_CELLS, ARCH_IDS, get_cell, get_config,
                            supports_cell)

@@ -21,7 +21,7 @@ included; MoE counts routed experts only).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeCell
 from .hlo_stats import CollectiveStats

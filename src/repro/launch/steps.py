@@ -19,7 +19,6 @@ frontends' precomputed embeddings, decode token/pos/caches).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -28,11 +27,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeCell, supports_cell
 from repro.models import transformer as tfm
-from repro.models.sharded_ops import padded_vocab
 from repro.optim import adamw
 from repro.runtime.meshenv import MeshEnv
-from repro.runtime.train import (TrainConfig, batch_specs, make_train_step,
-                                 opt_state_specs)
+from repro.runtime.train import TrainConfig, make_train_step, \
+    opt_state_specs
 
 # Encoder source length used for decode cells of enc-dec archs (the decoder
 # KV cache carries the cell's seq_len; the cross-attention memory is fixed).

@@ -22,8 +22,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_host_mesh

@@ -27,8 +27,7 @@ same contract with explicit VMEM tiling and is validated against
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,13 @@ Sharding conventions (TP size 16 on the production meshes):
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, RWKV6,
-                                ModelConfig)
+from repro.configs.base import ModelConfig
 from repro.runtime.meshenv import MeshEnv
 
 Params = dict

@@ -22,7 +22,6 @@ The same ``_moe_local`` core runs single-device (CPU tests) with
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Tuple
 

@@ -7,7 +7,7 @@ computed in f32 and cast back.  State sharding is decided by the caller
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

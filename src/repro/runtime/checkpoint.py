@@ -22,7 +22,7 @@ import dataclasses
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,12 +17,10 @@ tests/test_compression.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 BLOCK = 256
 

@@ -13,7 +13,6 @@ tests/test_data.py with simulated slow hosts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

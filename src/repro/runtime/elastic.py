@@ -11,7 +11,6 @@ fewer data rows from the surviving devices.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

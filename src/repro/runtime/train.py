@@ -14,8 +14,7 @@ Sharding strategy (on the (pod, data, model) production meshes):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

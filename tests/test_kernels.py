@@ -163,3 +163,79 @@ def test_ligd_step_kernel_matches_autodiff_oracle():
     xs_r, us_r = ligd_steps_ref(feat, x0, edge, iters=48)
     np.testing.assert_allclose(xs_k, xs_r, atol=1e-5)
     np.testing.assert_allclose(us_k, us_r, atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-sweep Li-GD / MLi-GD kernels (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+def _sweep_inputs(joint: bool, X: int = 96):
+    from repro.configs.chain_cnns import nin
+    from repro.core.costs import DeviceFleet, EdgeParams, edge_dict, \
+        stack_devices
+    from repro.core.profile import profile_of
+    from repro.kernels.ligd_step import pack_sweep_features, sweep_tables
+    prof = profile_of(nin())
+    rng = np.random.default_rng(2)
+    devs = stack_devices(DeviceFleet(c_dev=rng.uniform(3e9, 60e9, X),
+                                     w_T=rng.uniform(0.2, 0.5, X)))
+    edge = edge_dict(EdgeParams())
+    m = jnp.asarray(prof.result_bits, jnp.float32)
+    orig = hops_back = None
+    if joint:
+        orig = {"f_l": jnp.asarray(rng.uniform(5e8, 2e9, X), jnp.float32),
+                "f_e": jnp.asarray(rng.uniform(1e9, 4e9, X), jnp.float32),
+                "w": jnp.asarray(rng.uniform(1e5, 4e6, X), jnp.float32),
+                "r": jnp.asarray(rng.uniform(1.0, 16.0, X), jnp.float32),
+                "rent": jnp.asarray(rng.uniform(1e-4, 5e-3, X),
+                                    jnp.float32)}
+        hops_back = jnp.asarray(rng.integers(1, 8, X), jnp.float32)
+    feat = pack_sweep_features(devs, edge, m, X, orig=orig,
+                               hops_back=hops_back)
+    K = 4 if joint else 2
+    x0 = jnp.broadcast_to(jnp.full((K, 1), 0.5, jnp.float32), (K, X))
+    return feat, x0, sweep_tables(prof)
+
+
+@pytest.mark.parametrize("joint", [False, True])
+def test_fused_sweep_kernel_matches_masked_ref(joint):
+    """Pallas sweep kernel (interpret mode) vs the dense masked-JAX ref:
+    same step arithmetic, so results must match exactly — including the
+    per-lane iteration counters and the in-kernel argmin, across a ragged
+    final user block."""
+    from repro.kernels.ligd_step import (ligd_sweep_ref, mligd_sweep_ref,
+                                         sweep_tpu)
+    feat, x0, tables = _sweep_inputs(joint)
+    kw = dict(lr=0.15, eps=1e-5, max_iters=60, chunk=4)
+    init = (0.5,) * x0.shape[0]
+    ref = mligd_sweep_ref if joint else ligd_sweep_ref
+    u_r, x_r, it_r, bs_r, bx_r, bu_r = ref(feat, x0, tables, init=init, **kw)
+    u_k, xB_k, xr_k, it_k, best_k = sweep_tpu(
+        feat, x0, tables=tables, joint=joint, init=init,
+        interpret=True, user_block=64, **kw)             # 96 = 64 + ragged 32
+    np.testing.assert_allclose(u_k, u_r, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(it_k), np.asarray(it_r))
+    np.testing.assert_array_equal(np.asarray(best_k[0]), np.asarray(bs_r))
+    np.testing.assert_allclose(best_k[1], bu_r, rtol=1e-6)
+    np.testing.assert_allclose(xB_k, x_r[0], atol=1e-6)
+    np.testing.assert_allclose(xr_k, x_r[1], atol=1e-6)
+    for i in range(x0.shape[0]):
+        np.testing.assert_allclose(best_k[2 + i], bx_r[i], atol=1e-6)
+
+
+def test_fused_sweep_chunk_invariant():
+    """Masked iteration is idempotent after convergence: results must not
+    depend on the early-exit chunk granularity.  (Tolerances are ~1 ulp:
+    different chunk counts give XLA different fusion boundaries, which
+    may contract FMAs differently — the ALGORITHM is chunk-invariant.)"""
+    from repro.kernels.ligd_step import ligd_sweep_ref
+    feat, x0, tables = _sweep_inputs(joint=False)
+    kw = dict(lr=0.15, eps=1e-5, max_iters=60)
+    u1, x1, it1, bs1, bx1, bu1 = ligd_sweep_ref(feat, x0, tables,
+                                                chunk=1, **kw)
+    u5, x5, it5, bs5, bx5, bu5 = ligd_sweep_ref(feat, x0, tables,
+                                                chunk=5, **kw)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u5), rtol=1e-6)
+    assert np.max(np.abs(np.asarray(it1) - np.asarray(it5))) <= 1
+    np.testing.assert_array_equal(np.asarray(bs1), np.asarray(bs5))
+    for a, b in zip(x1, x5):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

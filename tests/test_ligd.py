@@ -1,5 +1,6 @@
 """Li-GD (Algorithm 1): optimality vs dense grid search, warm-start
-speedup (Corollary 4), constraint satisfaction."""
+speedup (Corollary 4), constraint satisfaction, and fused-vs-autodiff
+solver parity."""
 import dataclasses
 
 import jax
@@ -9,10 +10,35 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.chain_cnns import nin, vgg16, yolov2
-from repro.core.costs import (DeviceParams, EdgeParams, dev_dict, edge_dict,
-                              stack_devices, utility)
-from repro.core.ligd import LiGDConfig, solve_ligd, solve_ligd_batch_jit
+from repro.core.costs import (DeviceFleet, DeviceParams, EdgeParams,
+                              dev_dict, edge_dict, stack_devices,
+                              stack_edges, utility)
+from repro.core.ligd import (LiGDConfig, _gd_solve, make_split_utility,
+                             solve_ligd, solve_ligd_batch_jit)
 from repro.core.profile import profile_of
+
+
+def _random_fleet(rng, X):
+    """Heterogeneous seeded fleet: the parity surface the fused solver
+    must cover (speeds, radio, objective weights, hop counts)."""
+    w = rng.uniform(0.1, 1.0, (3, X))
+    w /= w.sum(0)
+    return stack_devices(DeviceFleet(
+        c_dev=rng.uniform(2e9, 100e9, X),
+        p_tx=rng.uniform(0.2, 1.0, X),
+        alpha=rng.uniform(3e-11, 3e-10, X),
+        k_rounds=rng.uniform(20.0, 200.0, X),
+        w_T=w[0], w_E=w[1], w_C=w[2],
+        hops=rng.integers(0, 6, X)))
+
+
+def _random_edges(rng, X):
+    """Per-user gather from a pool of heterogeneous servers."""
+    pool = [EdgeParams(),
+            EdgeParams(c_min=8e9, rho_min=1e-3, r_max=8.0),
+            EdgeParams(c_min=200e9, B_max=4e7, gamma_B=1.5)]
+    idx = rng.integers(0, len(pool), X)
+    return {k: v[idx] for k, v in stack_edges(pool).items()}
 
 
 def _grid_best(profile, dev, edge, nB=40, nr=40):
@@ -117,6 +143,103 @@ def test_ligd_beats_midpoint_everywhere(c_dev, w_T, w_E):
                       jnp.asarray(B_mid), jnp.asarray(r_mid))[0])
         for s in range(len(f_l)))
     assert float(res.U) <= U_mid * 1.005 + 1e-9
+
+
+@pytest.mark.parametrize("warm_start", [True, False])
+def test_fused_matches_autodiff_oracle(warm_start):
+    """The fused whole-sweep solver must reproduce the autodiff oracle:
+    split EXACTLY, (B, r, U) to 1e-4, across randomized device/edge
+    params (heterogeneous per-user servers in one batch)."""
+    profile = profile_of(nin())
+    rng = np.random.default_rng(7)
+    X = 48
+    devs = _random_fleet(rng, X)
+    edges = _random_edges(rng, X)
+    cfg_f = LiGDConfig(max_iters=150, warm_start=warm_start)
+    cfg_a = dataclasses.replace(cfg_f, solver="autodiff")
+    rf = solve_ligd_batch_jit(profile, devs, edges, cfg_f)
+    ra = solve_ligd_batch_jit(profile, devs, edges, cfg_a)
+    np.testing.assert_array_equal(np.asarray(rf.split),
+                                  np.asarray(ra.split))
+    for f in ("B", "r", "U"):
+        np.testing.assert_allclose(np.asarray(getattr(rf, f)),
+                                   np.asarray(getattr(ra, f)), rtol=1e-4)
+    # the masked per-lane counters replicate the while_loop stopping rules
+    # (±1: the fused path's reassociated closed-form arithmetic may cross
+    # an ε threshold one step earlier/later on long cold-started runs)
+    assert np.max(np.abs(np.asarray(rf.iters_per_layer, np.int64)
+                         - np.asarray(ra.iters_per_layer, np.int64))) <= 1
+
+
+def test_fused_matches_autodiff_shared_edge_vgg():
+    """Shared-edge (scalar) broadcast path + a deeper profile."""
+    profile = profile_of(vgg16())
+    rng = np.random.default_rng(11)
+    devs = _random_fleet(rng, 12)
+    edge = edge_dict(EdgeParams())
+    rf = solve_ligd_batch_jit(profile, devs, edge, LiGDConfig(max_iters=80))
+    ra = solve_ligd_batch_jit(profile, devs, edge,
+                              LiGDConfig(max_iters=80, solver="autodiff"))
+    np.testing.assert_array_equal(np.asarray(rf.split),
+                                  np.asarray(ra.split))
+    for f in ("B", "r", "U"):
+        np.testing.assert_allclose(np.asarray(getattr(rf, f)),
+                                   np.asarray(getattr(ra, f)), rtol=1e-4)
+
+
+def test_fused_rejects_unknown_solver():
+    profile = profile_of(nin())
+    devs = stack_devices([DeviceParams()])
+    with pytest.raises(ValueError, match="unknown LiGDConfig.solver"):
+        solve_ligd_batch_jit(profile, devs, edge_dict(EdgeParams()),
+                             LiGDConfig(solver="newton"))
+
+
+def test_gd_solve_single_eval_trajectory_unchanged():
+    """The one-eval-per-step _gd_solve (value_and_grad carried across
+    iterations) must walk the EXACT iterate trajectory of the old body
+    that re-evaluated the utility at every new point."""
+    def gd_solve_two_eval(u_scalar, x0, cfg):
+        grad_fn = jax.value_and_grad(u_scalar)
+
+        def cond(state):
+            x, u_prev, it, done = state
+            return jnp.logical_and(~done, it < cfg.max_iters)
+
+        def body(state):
+            x, u_prev, it, _ = state
+            u, g = grad_fn(x)
+            x_new = jnp.clip(x - cfg.lr * g, 0.0, 1.0)
+            u_new = u_scalar(x_new)
+            done = jnp.logical_or(
+                jnp.linalg.norm(g) < cfg.eps,
+                jnp.logical_or(jnp.abs(u_new - u_prev) < cfg.eps,
+                               jnp.max(jnp.abs(x_new - x)) < cfg.eps))
+            return (x_new, u_new, it + 1, done)
+
+        x0 = jnp.asarray(x0, jnp.float32)
+        u0 = u_scalar(x0)
+        return jax.lax.while_loop(
+            cond, body,
+            (x0, u0, jnp.asarray(0, jnp.int32), jnp.asarray(False)))[:3]
+
+    profile = profile_of(nin())
+    dev = dev_dict(DeviceParams())
+    edge = edge_dict(EdgeParams())
+    f_l, f_e, w = (jnp.asarray(a, jnp.float32)
+                   for a in profile.prefix_tables())
+    m = jnp.asarray(profile.result_bits, jnp.float32)
+    u_fn = make_split_utility(dev, edge, f_l, f_e, w, m)
+    cfg = LiGDConfig(max_iters=300)
+    for s in (0, profile.num_layers // 2, profile.num_layers):
+        u_scalar = lambda x: u_fn(jnp.asarray(s), x)[0]
+        for x0 in ((0.5, 0.5), (0.05, 0.9)):
+            x_new, u_new, it_new = _gd_solve(u_scalar, x0, cfg)
+            x_old, u_old, it_old = gd_solve_two_eval(u_scalar, x0, cfg)
+            np.testing.assert_array_equal(np.asarray(x_new),
+                                          np.asarray(x_old))
+            assert float(u_new) == float(u_old)
+            assert int(it_new) == int(it_old)
 
 
 def test_split_tradeoff_moves_with_device_speed():

@@ -1,5 +1,6 @@
 """MLi-GD (Algorithm 2): relaxation exactness (Corollary 7), the
-re-split vs relay-back decision, and batch consistency."""
+re-split vs relay-back decision, batch consistency, and fused-vs-autodiff
+solver parity on both R vertices."""
 import dataclasses
 
 import jax
@@ -79,6 +80,43 @@ def test_u_back_increases_with_hops():
     u8, _ = u_transmit_back(dev, edge_new, orig, m, B,
                             jnp.asarray(8.0, jnp.float32))
     assert float(u8) > float(u2)
+
+
+@pytest.mark.parametrize("new_edge,hops_back,vertex", [
+    (EdgeParams(c_min=2e9, rho_min=5e-3, r_max=4.0), 1.0, 1),   # relay back
+    (EdgeParams(c_min=500e9, rho_min=1e-5, r_max=64.0), 10.0, 0),  # re-solve
+])
+def test_fused_mligd_matches_autodiff_both_vertices(new_edge, hops_back,
+                                                    vertex):
+    """The fused joint sweep must agree with the autodiff oracle on BOTH
+    Corollary-7 vertices: R/split exactly, (B, r, U) to 1e-4, over a
+    seeded randomized fleet."""
+    profile = profile_of(nin())
+    rng = np.random.default_rng(5)
+    X = 12
+    devs_p = [DeviceParams(c_dev=float(c))
+              for c in rng.uniform(3e9, 60e9, X)]
+    edge_orig = edge_dict(EdgeParams())
+    origs, hops = [], []
+    for d in devs_p:
+        prev = solve_ligd(profile, dev_dict(d), edge_orig)
+        origs.append(orig_strategy_dict(profile, edge_orig, prev))
+        hops.append(hops_back)
+    origs_s = jax.tree.map(lambda *xs: jnp.stack(xs), *origs)
+    args = (stack_devices(devs_p), edge_dict(new_edge), origs_s,
+            jnp.asarray(hops, jnp.float32))
+    cfg_f = LiGDConfig(max_iters=150)
+    cfg_a = dataclasses.replace(cfg_f, solver="autodiff")
+    rf = solve_mligd_batch_jit(profile, *args, cfg_f)
+    ra = solve_mligd_batch_jit(profile, *args, cfg_a)
+    # the crafted scenario actually exercises the intended vertex
+    assert (np.asarray(ra.R) == vertex).all()
+    np.testing.assert_array_equal(np.asarray(rf.R), np.asarray(ra.R))
+    np.testing.assert_array_equal(np.asarray(rf.split),
+                                  np.asarray(ra.split))
+    for f in ("B", "r", "U", "U_recalc", "U_back", "T", "E", "C"):
+        np.testing.assert_allclose(np.asarray(getattr(rf, f)),
+                                   np.asarray(getattr(ra, f)), rtol=1e-4)
 
 
 def test_mligd_batch_matches_single():
