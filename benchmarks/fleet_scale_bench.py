@@ -1,7 +1,8 @@
 """Fleet-planner scale benchmark: array-resident FleetState vs the seed's
-per-user-object planner, and the fused vs autodiff solver backends.
+per-user-object planner, the fused vs autodiff solver backends, and the
+admission-control / async-replanning control-plane extensions.
 
-Three measurements:
+Five measurements:
 
   1. **10k-user head-to-head** — identical scenario (same topology,
      devices, mobility trace) planned by (a) the seed path: one Python
@@ -19,6 +20,20 @@ Three measurements:
      steps + handoff replanning at a fleet size the seed path cannot
      finish in reasonable time (its per-user float() syncs alone are
      O(minutes)).
+
+  4. **admission control** — static planning with K=3 candidate servers
+     per user (one fused X·K-row solve + water-filling admission),
+     uncapacitated and with per-server compute budgets sized to ~80% of
+     the uncapacitated first-choice demand, vs the K=1 baseline plan:
+     the deltas are the candidate-sweep cost and the greedy's cost; the
+     json records spill/rejection counts and peak budget utilization
+     (must stay <= 1.0 by construction).
+
+  5. **async replanning overlap** — the sustained-mobility loop run
+     twice, ``sync=True`` (block on every handoff solve) vs
+     ``sync=False`` (solve overlaps the next mobility step, decisions
+     applied one step late): ``overlap_win`` is the steps-loop speedup
+     from hiding the MLi-GD solve behind the waypoint numpy work.
 
 CSV rows go to stdout; machine-readable results go to ``--out`` (default
 BENCH_fleet.json) so the perf trajectory is tracked across PRs.
@@ -126,7 +141,7 @@ def _scenario(users: int, seed: int = 0):
 
 
 def _run_fleet(topo, prof, cfg, c_dev, steps: int, dt: float,
-               mob_seed: int) -> tuple:
+               mob_seed: int, sync: bool = True) -> tuple:
     planner = MCSAPlanner(prof, topo, cfg)
     devices = DeviceFleet(c_dev=c_dev)
     mob = RandomWaypointMobility(topo, len(c_dev), seed=mob_seed,
@@ -140,10 +155,15 @@ def _run_fleet(topo, prof, cfg, c_dev, steps: int, dt: float,
         t0 = time.perf_counter()
         batch = mob.step(dt, k * dt)
         if batch:
-            res = planner.on_handoffs(batch, devices, fleet)
-            jax.block_until_ready(res.U)
+            res = planner.on_handoffs(batch, devices, fleet, sync=sync)
+            if sync:
+                jax.block_until_ready(res.U)
         t_steps += time.perf_counter() - t0
         n_events += len(batch)
+    # async: the last in-flight solve still has to land in the table
+    t0 = time.perf_counter()
+    planner.drain(fleet)
+    t_steps += time.perf_counter() - t0
     return t_static, t_steps, n_events, fleet
 
 
@@ -243,6 +263,71 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
     print(f"[100k sustained] {big_users} users: static plan "
           f"{t_static_b:.2f}s, {per_step:.2f}s per mobility step "
           f"({ev_b} handoffs over {steps} steps)")
+
+    # ---- admission control: K=3 candidate solve + water-filling greedy
+    K = 3
+    devices = DeviceFleet(c_dev=c_dev)
+    aps = topo.nearest_ap(
+        RandomWaypointMobility(topo, users, seed=1).positions())
+
+    def timed_plan(planner):
+        planner.plan_static(devices, aps)                       # warm
+        t0 = time.perf_counter()
+        planner.plan_static(devices, aps)
+        return time.perf_counter() - t0
+
+    t_k1 = timed_plan(MCSAPlanner(prof, topo, cfg))
+    p_unc = MCSAPlanner(prof, topo, cfg, candidates_k=K)
+    t_k3 = timed_plan(p_unc)
+    rep_unc = p_unc.last_admission
+    # budgets at 80% of the uncapacitated demand spread evenly: the
+    # popular servers must spill, the fleet stays mostly admissible
+    cap = rep_unc.r_load.sum() / topo.num_servers * 0.8
+    topo_cap = build_topology(25, 4, seed=0, r_capacity=cap)
+    p_cap = MCSAPlanner(prof, topo_cap, cfg, candidates_k=K)
+    t_cap = timed_plan(p_cap)
+    rep = p_cap.last_admission
+    max_util = float(rep.r_load.max() / cap)
+    assert max_util <= 1.0 + 1e-9, "admission exceeded a server budget"
+    spilled = int(((rep.spills > 0) & ~rep.rejected).sum())
+    rejected = int(rep.rejected.sum())
+    rows.append(f"fleet_bench,{users},admission,plan_k1_s,{t_k1:.3f}")
+    rows.append(f"fleet_bench,{users},admission,plan_k{K}_s,{t_k3:.3f}")
+    rows.append(f"fleet_bench,{users},admission,plan_capped_s,{t_cap:.3f}")
+    rows.append(f"fleet_bench,{users},admission,spilled,{spilled}")
+    rows.append(f"fleet_bench,{users},admission,max_r_util,{max_util:.3f}")
+    results["admission"] = {
+        "users": users, "k": K, "r_capacity": cap,
+        "plan_k1_s": t_k1, "plan_k3_s": t_k3, "plan_capped_s": t_cap,
+        "spilled": spilled, "rejected": rejected, "max_r_util": max_util,
+        "users_per_server": rep.users_per_server.tolist()}
+    print(f"[admission] {users} users, K={K}: plan K=1 {t_k1:.2f}s, "
+          f"K={K} {t_k3:.2f}s, K={K}+budgets {t_cap:.2f}s; "
+          f"{spilled} spilled, {rejected} rejected, "
+          f"peak util {max_util:.2f}")
+
+    # ---- async replanning: hide the MLi-GD solve behind mobility numpy
+    big_dev = np.resize(c_dev, big_users)
+    _run_fleet(topo, prof, cfg, big_dev, steps, dt, mob_seed=2,
+               sync=False)                                       # warm
+    _, t_sync, ev_o, fleet_sync = _run_fleet(
+        topo, prof, cfg, big_dev, steps, dt, mob_seed=2, sync=True)
+    _, t_async, ev_o2, fleet_async = _run_fleet(
+        topo, prof, cfg, big_dev, steps, dt, mob_seed=2, sync=False)
+    assert ev_o == ev_o2
+    np.testing.assert_array_equal(fleet_sync.server, fleet_async.server)
+    np.testing.assert_allclose(fleet_sync.U, fleet_async.U, rtol=1e-6)
+    overlap_win = t_sync / t_async
+    rows.append(f"fleet_bench,{big_users},async,sync_steps_s,{t_sync:.3f}")
+    rows.append(f"fleet_bench,{big_users},async,async_steps_s,"
+                f"{t_async:.3f}")
+    rows.append(f"fleet_bench,{big_users},async,overlap_win,"
+                f"{overlap_win:.2f}")
+    results["async_overlap"] = {"users": big_users, "steps": steps,
+                                "sync_s": t_sync, "async_s": t_async,
+                                "overlap_win": overlap_win}
+    print(f"[async] {big_users} users, {steps} steps: sync {t_sync:.2f}s "
+          f"vs async {t_async:.2f}s -> {overlap_win:.2f}x overlap win")
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)

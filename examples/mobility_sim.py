@@ -8,8 +8,18 @@ plan updates are vectorized end-to-end, so ``--users 100000`` is a flag
 away (each minute costs one padded MLi-GD solve over that minute's
 handoffs, not a Python loop over vehicles).
 
+Control-plane extras (docs/ARCHITECTURE.md):
+  --candidates K        admit each vehicle to the best of its K nearest
+                        servers (water-filling under budgets)
+  --server-capacity R   per-server compute budget (units) — forces
+                        spills/rejections when tight
+  --async-replanning    overlap each minute's MLi-GD solve with the next
+                        mobility step (decisions land one minute late)
+
 Run:  PYTHONPATH=src python examples/mobility_sim.py [--minutes 30]
       PYTHONPATH=src python examples/mobility_sim.py --users 100000
+      PYTHONPATH=src python examples/mobility_sim.py \\
+          --candidates 3 --server-capacity 200 --async-replanning
 """
 import argparse
 
@@ -30,11 +40,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=int, default=30)
     ap.add_argument("--users", type=int, default=10)
+    ap.add_argument("--candidates", type=int, default=1,
+                    help="candidate servers per vehicle (K)")
+    ap.add_argument("--server-capacity", type=float, default=None,
+                    help="per-server compute budget in units "
+                         "(default: uncapacitated)")
+    ap.add_argument("--async-replanning", action="store_true",
+                    help="overlap handoff solves with the next step")
     args = ap.parse_args()
 
-    topo = build_topology(25, 3, seed=0)
+    topo = build_topology(25, 3, seed=0, r_capacity=args.server_capacity)
     profile = profile_of(yolov2())
-    planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=250))
+    planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=250),
+                          candidates_k=args.candidates,
+                          async_replanning=args.async_replanning)
     rng = np.random.default_rng(0)
     devices = DeviceFleet(c_dev=rng.uniform(3e9, 6e9, args.users))
     mob = RandomWaypointMobility(topo, args.users, seed=1,
@@ -44,6 +63,15 @@ def main():
     _, _, fleet = planner.plan_static(devices, aps)
     print(f"{args.users} vehicles, {topo.num_aps} APs, "
           f"{topo.num_servers} edge servers; YOLOv2 inference stream")
+    rep = planner.last_admission
+    if rep is not None:
+        spilled = int(((rep.spills > 0) & ~rep.rejected).sum())
+        print(f"admission: K={args.candidates}, "
+              f"users/server {rep.users_per_server.tolist()}, "
+              f"{spilled} spilled, {int(rep.rejected.sum())} device-only"
+              + (f", r-load {np.round(rep.r_load, 1).tolist()}"
+                 f" / budget {args.server_capacity}"
+                 if args.server_capacity else ""))
 
     resplits = relays = 0
     lat_log = []
@@ -51,6 +79,13 @@ def main():
         events = mob.step(60.0, minute * 60.0)
         if events:
             res = planner.on_handoffs(events, devices, fleet)
+            if args.async_replanning:
+                # forcing res here would kill the overlap — the decisions
+                # land at the next minute's call (or the final drain)
+                print(f"  [{minute:3d} min] {len(events)} handoffs "
+                      f"(solve in flight)")
+                lat_log.append(fleet.T.mean())
+                continue
             R = np.asarray(res.R)
             relays += int(R.sum())
             resplits += int(len(R) - R.sum())
@@ -66,8 +101,14 @@ def main():
                       f"T={fleet.T[ev.user] * 1e3:.1f} ms)")
         lat_log.append(fleet.T.mean())
 
-    print(f"\n{args.minutes} min simulated: {resplits} re-splits, "
-          f"{relays} relay-backs")
+    planner.drain(fleet)
+    if args.async_replanning:
+        relays = int((fleet.R == 1).sum())
+        print(f"\n{args.minutes} min simulated (async): "
+              f"{relays} vehicles ended on a relay-back plan")
+    else:
+        print(f"\n{args.minutes} min simulated: {resplits} re-splits, "
+              f"{relays} relay-backs")
     print(f"fleet mean latency: {np.mean(lat_log) * 1e3:.1f} ms "
           f"(worst minute {np.max(lat_log) * 1e3:.1f} ms)")
 

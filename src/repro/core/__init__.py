@@ -1,6 +1,9 @@
 """MCSA core — the paper's contribution: cost models (Eqs. 1–17), the
 Li-GD and MLi-GD solvers (Algorithms 1–2), network topology, mobility,
-baselines, and the planner tying them together."""
+baselines, and the planner tying them together, plus the multi-server
+admission control layered on top (see docs/ARCHITECTURE.md for how the
+pieces compose)."""
+from .admission import AdmissionReport, admit_waterfill
 from .costs import (DeviceFleet, DeviceParams, EdgeParams, LayerProfile,
                     dev_dict, edge_dict, stack_devices, stack_edges,
                     utility)
@@ -14,6 +17,7 @@ from .baselines import BASELINES, run_baseline_batch
 from .planner import FleetState, MCSAPlanner, UserPlan
 
 __all__ = [
+    "AdmissionReport", "admit_waterfill",
     "DeviceFleet", "DeviceParams", "EdgeParams", "LayerProfile",
     "dev_dict", "edge_dict", "stack_devices", "stack_edges", "utility",
     "LiGDConfig", "LiGDResult", "solve_ligd", "solve_ligd_batch_jit",

@@ -25,6 +25,9 @@ Implementation notes
   ``solve_ligd`` (single user) always runs the autodiff oracle.
 * ``warm_start=False`` reproduces the baseline "repeat plain GD M times"
   that Corollary 4 compares against (benchmarks/ligd_convergence.py).
+* Batched solves treat rows as anonymous (device, edge) pairs — the
+  planner feeds (user, candidate)-tiled rows through them for admission
+  control (docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 

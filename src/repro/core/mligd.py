@@ -21,6 +21,12 @@ default ``"fused"`` path runs the whole-sweep joint kernel from
 ``repro.kernels.ligd_step`` (4-variable variant, closed-form gradients,
 per-lane convergence masking) and evaluates the two R vertices outside the
 kernel; ``"autodiff"`` keeps the vmapped scan+while oracle below.
+
+Batch rows are (device, new-edge, frozen-orig) triples with no identity
+of their own, so the planner's candidate-aware replanning tiles one
+handoff event into K rows — one per candidate server of the new AP, edge
+and hop leaves gathered per row — and reduces with an argmin over U
+afterwards; see MCSAPlanner.on_handoffs and docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 

@@ -11,6 +11,13 @@ advances ALL users with vectorized numpy — one step of a 100k-user fleet
 is a handful of array ops, never a Python loop.  Handoffs come back as a
 :class:`HandoffBatch` of parallel arrays; iterating a batch yields legacy
 :class:`HandoffEvent` views for display/debug code.
+
+Handoff detection compares against the NEAREST server per AP
+(``topo.ap_server``), independent of which candidate the planner's
+admission control actually admitted a user to — coverage is a radio
+property, admission a resource one.  The planner re-resolves the serving
+server on each event (candidate-aware when ``candidates_k > 1``); see
+docs/ARCHITECTURE.md for the step-by-step dataflow.
 """
 from __future__ import annotations
 
@@ -25,26 +32,45 @@ from .network import Topology
 @dataclasses.dataclass
 class HandoffEvent:
     """Scalar view of one handoff (display/compat; the planner's solve
-    path consumes HandoffBatch arrays directly)."""
+    path consumes HandoffBatch arrays directly).
+
+    Fields
+    ------
+    user       : fleet row index of the user that moved (indexes
+                 DeviceFleet / FleetState arrays)
+    t          : simulation time of the step that detected the handoff (s)
+    old_server : server the user was NEAREST to before the step (the
+                 coverage it left, not necessarily the admitted server)
+    new_server : nearest server after the step — MLi-GD's re-split target
+    new_ap     : AP the user is now associated with
+    hops_new   : backhaul hops new_ap -> new_server (H₁ of Eq. 18)
+    hops_back  : backhaul hops new_ap -> the ORIGINAL server (H₂ of
+                 Eq. 41 — the relay-back path length)
+    """
     user: int
     t: float
     old_server: int
     new_server: int
     new_ap: int
-    hops_new: int                # user's AP -> new server
-    hops_back: int               # user's AP -> ORIGINAL server (H₂)
+    hops_new: int
+    hops_back: int
 
 
 @dataclasses.dataclass
 class HandoffBatch:
-    """All of one mobility step's edge-server handoffs as parallel arrays."""
+    """All of one mobility step's edge-server handoffs as parallel (E,)
+    arrays — the planner's native input.  Field semantics match
+    :class:`HandoffEvent` one-to-one; ``user`` rows index the fleet
+    arrays, and duplicate users only appear when batches from several
+    steps are concatenated (see MCSAPlanner.on_handoffs for the
+    last-event-wins contract)."""
     t: float
-    user: np.ndarray             # (E,) int
-    old_server: np.ndarray       # (E,) int
-    new_server: np.ndarray       # (E,) int
-    new_ap: np.ndarray           # (E,) int
-    hops_new: np.ndarray         # (E,) int
-    hops_back: np.ndarray        # (E,) int
+    user: np.ndarray             # (E,) int — fleet row per event
+    old_server: np.ndarray       # (E,) int — pre-step nearest server
+    new_server: np.ndarray       # (E,) int — post-step nearest server
+    new_ap: np.ndarray           # (E,) int — post-step AP association
+    hops_new: np.ndarray         # (E,) int — new_ap -> new_server hops
+    hops_back: np.ndarray        # (E,) int — new_ap -> original server (H₂)
 
     def __len__(self) -> int:
         return len(self.user)

@@ -6,6 +6,14 @@ offloads to one server, reached over multi-hop AP relays; users attach to
 their nearest AP.  Hop counts H_i come from BFS shortest paths (the paper
 invokes Dijkstra on the unweighted AP graph — identical result).
 
+Beyond the paper's one-server-per-AP assumption, each AP also exposes a
+hop-ordered CANDIDATE SET of the K nearest servers (:meth:`Topology.
+candidates`) and each server may carry a compute / bandwidth budget
+(``r_capacity`` / ``B_capacity``).  The planner's admission control
+(``repro.core.admission``) spills users to their next candidate when a
+server saturates; see docs/ARCHITECTURE.md ("Admission control") for the
+full control-plane dataflow.
+
 Pure numpy — topology is static control-plane state, not jitted compute.
 """
 from __future__ import annotations
@@ -28,6 +36,10 @@ class Topology:
     hops: np.ndarray             # (N, Z) AP->server hop counts
     edges: List[EdgeParams]      # per-server parameters (heterogeneous!)
     ap_radius: float             # user association radius
+    r_capacity: Optional[np.ndarray] = None   # (Z,) compute-unit budget per
+                                 # server (None = uncapacitated)
+    B_capacity: Optional[np.ndarray] = None   # (Z,) uplink-bandwidth budget
+                                 # per server in Hz (None = uncapacitated)
 
     @property
     def num_aps(self) -> int:
@@ -37,11 +49,26 @@ class Topology:
     def num_servers(self) -> int:
         return len(self.server_aps)
 
+    @property
+    def capacitated(self) -> bool:
+        """True when any per-server budget is set (admission control on)."""
+        return self.r_capacity is not None or self.B_capacity is not None
+
     # ------------------------------------------------------------------
     def nearest_ap(self, xy: np.ndarray) -> np.ndarray:
         """xy: (..., 2) user positions -> AP index."""
         d = np.linalg.norm(xy[..., None, :] - self.ap_xy, axis=-1)
         return np.argmin(d, axis=-1)
+
+    def candidates(self, k: int) -> np.ndarray:
+        """(N, min(k, Z)) candidate servers per AP, nearest-first.
+
+        Column 0 always equals ``ap_server`` (both take the FIRST
+        hop-minimal server: ``candidates(1)`` reproduces the paper's
+        one-server-per-AP model bit-for-bit).  Ties on hop count break
+        deterministically toward the lower server id (stable sort)."""
+        k = max(1, min(int(k), self.num_servers))
+        return np.argsort(self.hops, axis=1, kind="stable")[:, :k]
 
     def serving_server(self, ap: np.ndarray) -> np.ndarray:
         return self.ap_server[ap]
@@ -74,13 +101,18 @@ def build_topology(num_aps: int = 16, num_servers: int = 4, *,
                    area: float = 2000.0, link_radius: Optional[float] = None,
                    seed: int = 0,
                    edge_params: Optional[Sequence[EdgeParams]] = None,
-                   heterogeneity: float = 0.5) -> Topology:
+                   heterogeneity: float = 0.5,
+                   r_capacity=None, B_capacity=None) -> Topology:
     """Random-geometric AP graph + greedy server placement.
 
     Server placement greedily minimizes the max AP→server hop distance —
     a k-center heuristic standing in for the paper's [24] submodular
     placement.  Per-server compute heterogeneity (±``heterogeneity``)
     models the paper's "heterogeneity of edge servers".
+
+    ``r_capacity`` / ``B_capacity``: optional per-server budgets (compute
+    units / uplink Hz) enabling the planner's admission control; a scalar
+    broadcasts to every server, a sequence gives per-server budgets.
     """
     rng = np.random.default_rng(seed)
     grid = int(np.ceil(np.sqrt(num_aps)))
@@ -122,6 +154,13 @@ def build_topology(num_aps: int = 16, num_servers: int = 4, *,
                 rho_min=2e-4 / max(f, 0.25),
                 r_max=float(rng.choice([16, 32, 48])),
             ))
+    def _cap(v):
+        if v is None:
+            return None
+        return np.ascontiguousarray(np.broadcast_to(
+            np.asarray(v, np.float64), (num_servers,)))
+
     return Topology(ap_xy=ap_xy, adj=adj, server_aps=server_aps,
                     ap_server=ap_server, hops=hops,
-                    edges=list(edge_params), ap_radius=step)
+                    edges=list(edge_params), ap_radius=step,
+                    r_capacity=_cap(r_capacity), B_capacity=_cap(B_capacity))

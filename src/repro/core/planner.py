@@ -27,6 +27,25 @@ Optionally the static solve shards users across devices with ``shard_map``
 (pass a ``repro.runtime.meshenv.MeshEnv``); each device runs the identical
 batched Li-GD (fused or autodiff per ``cfg.solver``) on its slice of the
 fleet — the solves are independent, so no collectives are needed.
+
+Two control-plane extensions on top of the paper's model (see
+docs/ARCHITECTURE.md for the dataflow):
+
+* **Admission control** — with ``candidates_k > 1`` (or a capacitated
+  topology) the static plan solves Li-GD once per (user, candidate)
+  pair — one fused launch over X·K rows, per-row edge params — and a
+  deterministic water-filling greedy (``repro.core.admission``) admits
+  each user to its cheapest candidate under the per-server compute /
+  bandwidth budgets, spilling to the next candidate on saturation and
+  falling back to device-only execution when every candidate is full.
+
+* **Async replanning** — ``on_handoffs(..., sync=False)`` (or
+  ``async_replanning=True`` at construction) dispatches the padded
+  MLi-GD solve WITHOUT forcing it, so the next mobility step overlaps
+  the solve (JAX async dispatch); the decisions are scattered into the
+  fleet table one step late — at the next ``on_handoffs`` call or an
+  explicit :meth:`MCSAPlanner.drain`.  ``sync=True`` preserves the
+  original blocking semantics exactly.
 """
 from __future__ import annotations
 
@@ -38,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .admission import AdmissionReport, admit_waterfill
 from .baselines import run_baseline_batch
 from .costs import (Devices, LayerProfile, gather_devices, rent_cost,
                     stack_devices, stack_edges_np)
@@ -64,16 +84,39 @@ class UserPlan:
 
 @dataclasses.dataclass
 class FleetState:
-    """Array-resident plan table: one (X,) array per planned quantity."""
-    server: np.ndarray           # int64 — serving edge server
-    split: np.ndarray            # int64 — split point s*
-    B: np.ndarray                # float64 — bandwidth (Hz)
-    r: np.ndarray                # float64 — compute units
+    """Array-resident plan table: one (X,) numpy array per planned
+    quantity, row x = user x's current strategy.
+
+    Columns
+    -------
+    server : int64   — serving edge server id (admission choice; for a
+                       device-only fallback plan this is the nearest
+                       candidate, kept for re-association)
+    split  : int64   — split point s* ∈ [0, M]; s = M means device-only
+                       (no offload, no rent)
+    B      : float64 — allocated uplink bandwidth at the serving AP (Hz);
+                       admission-control plans zero it at s = M (the
+                       legacy K=1 path keeps the solver's last iterate
+                       there — U/T/E/C never depend on it at s = M)
+    r      : float64 — rented edge compute units; zeroed at s = M by
+                       admission-control plans, like B
+    U      : float64 — utility ω_T·T + ω_E·E + ω_C·CBR_C at the optimum
+    T      : float64 — end-to-end inference delay (s)
+    E      : float64 — device energy per inference (J)
+    C      : float64 — renting cost per round ($)
+    R      : int64   — last MLi-GD mobility decision (0 = re-split at the
+                       new server, 1 = relay back to the original); 0
+                       after a static plan
+    """
+    server: np.ndarray
+    split: np.ndarray
+    B: np.ndarray
+    r: np.ndarray
     U: np.ndarray
     T: np.ndarray
     E: np.ndarray
     C: np.ndarray
-    R: np.ndarray                # int64 — last mobility decision
+    R: np.ndarray
 
     @classmethod
     def from_static(cls, servers: np.ndarray, res: LiGDResult
@@ -117,15 +160,48 @@ def _pad_axis0(tree, pad: int):
             [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]), tree)
 
 
+@dataclasses.dataclass
+class _PendingReplan:
+    """A dispatched-but-unapplied MLi-GD solve (async replanning).
+
+    ``res`` leaves are un-forced jax arrays — the solve may still be in
+    flight on the backend; forcing happens in _apply_pending."""
+    res: MLiGDResult
+    users: np.ndarray            # (E,) fleet rows the decisions scatter to
+    orig_servers: np.ndarray     # (E,) pre-solve servers (relay-back target)
+    new_server: object           # (E,) effective new server (jax or numpy)
+
+
 class MCSAPlanner:
+    """MCSA control plane for one fleet (see the module docstring and
+    docs/ARCHITECTURE.md).
+
+    Parameters
+    ----------
+    profile       : the model's per-layer LayerProfile
+    topo          : Topology (optionally capacitated)
+    cfg           : LiGDConfig — solver backend + GD hyper-parameters
+    per_iter_time : seconds per GD iteration, feeds the T_Ag CBR estimate
+    candidates_k  : candidate-set size K for admission control; 1 (the
+                    default) is the paper's one-server-per-AP model
+    async_replanning : default ``sync`` polarity of :meth:`on_handoffs`
+                    (False = today's blocking semantics)
+    """
+
     def __init__(self, profile: LayerProfile, topo,
                  cfg: LiGDConfig = LiGDConfig(),
-                 per_iter_time: float = 5e-5):
+                 per_iter_time: float = 5e-5,
+                 candidates_k: int = 1,
+                 async_replanning: bool = False):
         self.profile = profile
         self.topo = topo
         self.cfg = cfg
         self.per_iter_time = per_iter_time
+        self.candidates_k = max(1, int(candidates_k))
+        self.async_replanning = async_replanning
         self.t_ag_estimate = 0.0
+        self.last_admission: Optional[AdmissionReport] = None
+        self._pending: Optional[_PendingReplan] = None
         # (Z, field) edge table — gathered per user by server id.
         self._edge_table = stack_edges_np(topo.edges)
         self._sharded_static = {}
@@ -147,24 +223,125 @@ class MCSAPlanner:
 
     # ------------------------------------------------------------------
     def plan_static(self, devices: Devices, user_aps: np.ndarray,
-                    env=None) -> tuple:
-        """Solve every user against its serving server in one vectorized
-        call.  Returns (LiGDResult batched, servers, FleetState).
+                    env=None, candidates_k: Optional[int] = None) -> tuple:
+        """Plan every user in one vectorized call.
 
-        ``env``: optional MeshEnv — when SPMD and the fleet divides the
-        data-parallel size, users are sharded across devices with
-        shard_map (independent solves, no collectives)."""
+        Arguments
+        ---------
+        devices  : DeviceFleet (or sequence of DeviceParams), X users
+        user_aps : (X,) int — each user's associated AP
+        env      : optional MeshEnv — when SPMD and the solve batch
+                   divides the data-parallel size, users are sharded
+                   across devices with shard_map (independent solves, no
+                   collectives)
+        candidates_k : per-call override of the planner's candidate-set
+                   size K
+
+        Returns ``(res, servers, fleet)``: a batched LiGDResult with (X,)
+        leaves (per-layer fields are (X, M+1)), the (X,) admitted server
+        ids, and the scattered :class:`FleetState`.
+
+        With K = 1 on an uncapacitated topology this is the paper's
+        one-server-per-AP plan.  Otherwise Li-GD is solved once per
+        (user, candidate) — a single fused launch over X·K rows — and the
+        water-filling greedy of ``repro.core.admission`` assigns servers
+        under the per-server budgets; the outcome is stored in
+        ``self.last_admission``.  Any in-flight async replan is dropped
+        (a fresh static plan supersedes it).
+        """
+        self._pending = None
+        K = self.candidates_k if candidates_k is None else max(
+            1, int(candidates_k))
+        K = min(K, self.topo.num_servers)
         user_aps = np.asarray(user_aps)
-        servers = self.topo.ap_server[user_aps]
-        hops = self.topo.hops[user_aps, servers]
-        devs_s = self._stacked_devices(devices, hops)
-        edges_s = self._edges_for(servers)
-        res = self._solve_static(devs_s, edges_s, env)
-        jax.block_until_ready(res.U)
+        if K == 1 and not self.topo.capacitated:
+            self.last_admission = None
+            servers = self.topo.ap_server[user_aps]
+            hops = self.topo.hops[user_aps, servers]
+            devs_s = self._stacked_devices(devices, hops)
+            edges_s = self._edges_for(servers)
+            res = self._solve_static(devs_s, edges_s, env)
+            jax.block_until_ready(res.U)
+            self._update_t_ag(res)
+            return res, servers, FleetState.from_static(servers, res)
+        return self._plan_admission(devices, user_aps, K, env)
+
+    def _update_t_ag(self, res: LiGDResult) -> None:
         # Eq. 6/7 feedback: observed per-user strategy time for future CBR.
         iters = float(np.mean(np.sum(np.asarray(res.iters_per_layer), -1)))
         self.t_ag_estimate = iters * self.per_iter_time
-        return res, servers, FleetState.from_static(servers, res)
+
+    def _plan_admission(self, devices: Devices, user_aps: np.ndarray,
+                        K: int, env) -> tuple:
+        """Candidate-set static plan: one Li-GD solve per (user, candidate)
+        row — user-major tiling, row x·K+k is user x's k-th candidate —
+        then water-filling admission under the per-server budgets."""
+        topo = self.topo
+        X = len(user_aps)
+        cand = topo.candidates(K)[user_aps]                     # (X, K)
+        K = cand.shape[1]
+        hops = topo.hops[user_aps[:, None], cand]               # (X, K)
+        t_ag_used = self.t_ag_estimate
+        dev_rows = gather_devices(devices, np.repeat(np.arange(X), K))
+        dev_rows["hops"] = jnp.asarray(hops.reshape(-1), jnp.float32)
+        dev_rows["t_ag"] = jnp.full((X * K,), t_ag_used, jnp.float32)
+        edge_rows = self._edges_for(cand.reshape(-1))
+        res = self._solve_static(dev_rows, edge_rows, env)
+        jax.block_until_ready(res.U)
+        self._update_t_ag(res)
+
+        # a candidate whose solved optimum is device-only (s = M) rents
+        # nothing — its demand on the server is zero, whatever (B, r)
+        # values the GD iterate happened to stop at
+        offl = (np.asarray(res.split).reshape(X, K)
+                < self.profile.num_layers)
+        report = admit_waterfill(
+            cand, np.asarray(res.U, np.float64).reshape(X, K),
+            np.asarray(res.r, np.float64).reshape(X, K) * offl,
+            np.asarray(res.B, np.float64).reshape(X, K) * offl,
+            topo.num_servers, topo.r_capacity, topo.B_capacity)
+        self.last_admission = report
+
+        # gather each user's admitted row out of the (X*K,) solve
+        flat = np.arange(X) * K + np.where(report.rejected, 0, report.choice)
+        res_sel = jax.tree.map(lambda a: np.asarray(a)[flat], res)
+        dev_only = np.asarray(res_sel.split) >= self.profile.num_layers
+        if dev_only.any():
+            # keep the plan table honest: device-only rows hold no
+            # resources (U/T/E/C are already offload-free at s = M)
+            B = np.array(res_sel.B)
+            r = np.array(res_sel.r)
+            B[dev_only] = 0.0
+            r[dev_only] = 0.0
+            res_sel = res_sel._replace(B=B, r=r)
+        if report.rejected.any():
+            res_sel = self._device_only_fallback(
+                res_sel, devices, report.rejected, t_ag_used)
+        return res_sel, report.server, FleetState.from_static(
+            report.server, res_sel)
+
+    def _device_only_fallback(self, res: LiGDResult, devices: Devices,
+                              rejected: np.ndarray, t_ag: float
+                              ) -> LiGDResult:
+        """Overwrite rejected users' rows with the device-only plan
+        (s = M): nothing is offloaded, so no bandwidth/compute is rented
+        and the admission budgets are untouched."""
+        idx = np.nonzero(rejected)[0]
+        d = {k: np.asarray(v, np.float64)
+             for k, v in gather_devices(devices, idx).items()}
+        f_l_M = float(self.profile.prefix_tables()[0][-1])
+        T = f_l_M / d["c_dev"] + t_ag / d["k_rounds"]
+        E = d["xi"] * d["c_dev"] ** 2 * d["phi"] * f_l_M
+        U = d["w_T"] * T + d["w_E"] * E
+        out = {f: np.array(getattr(res, f)) for f in res._fields}
+        out["split"][idx] = self.profile.num_layers
+        out["B"][idx] = 0.0
+        out["r"][idx] = 0.0
+        out["U"][idx] = U
+        out["T"][idx] = T
+        out["E"][idx] = E
+        out["C"][idx] = 0.0
+        return LiGDResult(**out)
 
     def _solve_static(self, devs_s, edges_s, env) -> LiGDResult:
         X = devs_s["c_dev"].shape[0]
@@ -193,11 +370,33 @@ class MCSAPlanner:
     # ------------------------------------------------------------------
     def on_handoffs(self, events: Union[HandoffBatch,
                                         Sequence[HandoffEvent]],
-                    devices: Devices, fleet: FleetState
+                    devices: Devices, fleet: FleetState,
+                    sync: Optional[bool] = None
                     ) -> Optional[MLiGDResult]:
         """One padded, jitted MLi-GD solve over ALL of this step's handoff
-        events; scatters the decisions back into ``fleet``.  Returns the
-        (unpadded) batched MLiGDResult, or None when there are no events.
+        events.  Returns the (unpadded) batched MLiGDResult with (E,)
+        leaves, or None when there are no events.
+
+        Arguments
+        ---------
+        events  : HandoffBatch (or sequence of HandoffEvent views), E
+                  events; ``user`` indexes rows of ``fleet``
+        devices : the SAME fleet ``plan_static`` planned (row-aligned)
+        fleet   : FleetState to scatter decisions into
+        sync    : None (default) follows the planner's
+                  ``async_replanning`` flag; True blocks and scatters
+                  before returning (the original semantics); False
+                  dispatches the solve and defers the scatter to the next
+                  ``on_handoffs``/:meth:`drain` call, so the caller's
+                  next mobility step overlaps the solve (one-step-stale
+                  plan application)
+
+        With ``candidates_k > 1`` the re-solve is evaluated per (event,
+        candidate-of-the-new-AP) — E·K rows through the same padded
+        solve — and the argmin-utility candidate wins (ties toward the
+        nearer candidate).  Handoff replanning is capacity-blind: budgets
+        are enforced at the next static replan (docs/ARCHITECTURE.md
+        discusses the trade-off).
 
         Duplicate users within a batch (only possible when batches are
         concatenated across steps): every event's frozen original strategy
@@ -208,26 +407,47 @@ class MCSAPlanner:
         priced against), which is self-consistent where the seed's
         sequential server bookkeeping could disagree with the orig it had
         just solved with."""
+        if sync is None:
+            sync = not self.async_replanning
+        self._apply_pending(fleet)
         batch = HandoffBatch.from_events(events) \
             if not isinstance(events, HandoffBatch) else events
         n = len(batch)
         if n == 0:
             return None
         users = batch.user
+        K = min(self.candidates_k, self.topo.num_servers)
 
-        dev_b = gather_devices(devices, users)
-        dev_b["hops"] = jnp.asarray(batch.hops_new, jnp.float32)
-        dev_b["t_ag"] = jnp.full((n,), self.t_ag_estimate, jnp.float32)
-        edges_new = self._edges_for(batch.new_server)
+        if K > 1:
+            cand = self.topo.candidates(K)[batch.new_ap]         # (n, K)
+            hops_new = self.topo.hops[batch.new_ap[:, None], cand]
+            rows = np.repeat(np.arange(n), K)
+            new_server_rows = cand.reshape(-1)
+            hops_new_rows = hops_new.reshape(-1)
+        else:
+            rows = np.arange(n)
+            new_server_rows = batch.new_server
+            hops_new_rows = batch.hops_new
+
+        dev_b = gather_devices(devices, users[rows])
+        dev_b["hops"] = jnp.asarray(hops_new_rows, jnp.float32)
+        dev_b["t_ag"] = jnp.full((n * K,), self.t_ag_estimate, jnp.float32)
+        edges_new = self._edges_for(new_server_rows)
 
         # Frozen original strategies, gathered straight from fleet arrays
         # (the batched equivalent of mligd.orig_strategy_dict).
         f_l_np, f_e_np, w_np = self.profile.prefix_tables()
-        s = fleet.split[users]
-        orig_r = jnp.asarray(fleet.r[users], jnp.float32)
-        orig_B = jnp.asarray(fleet.B[users], jnp.float32)
+        s = fleet.split[users][rows]
+        # device-only plans carry r = 0: their rent must price the true
+        # r (zero — nothing rented), but U₂'s f_e_o/(λ(r_o)·c_min) term
+        # would hit 0/0 (f_e = 0 at s = M), so λ sees a unit stand-in
+        # that the zero f_e multiplies away
+        r_raw = fleet.r[users][rows]
+        orig_r_true = jnp.asarray(r_raw, jnp.float32)
+        orig_r = jnp.asarray(np.where(r_raw > 0, r_raw, 1.0), jnp.float32)
+        orig_B = jnp.asarray(fleet.B[users][rows], jnp.float32)
         orig_servers = fleet.server[users]
-        edges_orig = self._edges_for(orig_servers)
+        edges_orig = self._edges_for(orig_servers[rows])
         origs = {
             "split": jnp.asarray(s, jnp.int32),
             "f_l": jnp.asarray(f_l_np[s], jnp.float32),
@@ -235,21 +455,52 @@ class MCSAPlanner:
             "w": jnp.asarray(w_np[s], jnp.float32),
             "r": orig_r,
             "B": orig_B,
-            "rent": rent_cost(edges_orig, orig_r, orig_B),
+            "rent": rent_cost(edges_orig, orig_r_true, orig_B),
         }
-        hops_back = jnp.asarray(batch.hops_back, jnp.float32)
+        hops_back = jnp.asarray(batch.hops_back[rows], jnp.float32)
 
-        pad = _pow2_bucket(n) - n
+        pad = _pow2_bucket(n * K) - n * K
         res = solve_mligd_batch_jit(
             self.profile,
             _pad_axis0(dev_b, pad), _pad_axis0(edges_new, pad),
             _pad_axis0(origs, pad), _pad_axis0(hops_back, pad), self.cfg)
         if pad:
-            res = jax.tree.map(lambda a: a[:n], res)
+            res = jax.tree.map(lambda a: a[:n * K], res)
 
+        if K > 1:
+            # argmin-U candidate per event (jnp, so the reduction rides
+            # the async dispatch — nothing is forced here)
+            best_k = jnp.argmin(res.U.reshape(n, K), axis=1)
+            take = lambda a: a.reshape(n, K, *a.shape[1:])[
+                jnp.arange(n), best_k]
+            res = jax.tree.map(take, res)
+            new_server = jnp.take_along_axis(
+                jnp.asarray(cand), best_k[:, None], axis=1)[:, 0]
+        else:
+            new_server = batch.new_server
+
+        self._pending = _PendingReplan(res=res, users=users,
+                                       orig_servers=orig_servers,
+                                       new_server=new_server)
+        if sync:
+            self._apply_pending(fleet)
+        return res
+
+    def drain(self, fleet: FleetState) -> Optional[MLiGDResult]:
+        """Force and scatter the in-flight async replan, if any.  Call
+        once after the mobility loop (or before reading ``fleet`` between
+        steps) to bring the plan table fully up to date.  Returns the
+        applied MLiGDResult, or None when nothing was pending."""
+        return self._apply_pending(fleet)
+
+    def _apply_pending(self, fleet: FleetState) -> Optional[MLiGDResult]:
+        p, self._pending = self._pending, None
+        if p is None:
+            return None
+        res, users = p.res, p.users
         take_back = np.asarray(res.R, bool)
-        fleet.server[users] = np.where(take_back, orig_servers,
-                                       batch.new_server)
+        fleet.server[users] = np.where(take_back, p.orig_servers,
+                                       np.asarray(p.new_server))
         fleet.split[users] = np.asarray(res.split, np.int64)
         fleet.B[users] = np.asarray(res.B, np.float64)
         fleet.r[users] = np.asarray(res.r, np.float64)

@@ -29,6 +29,12 @@ Three implementations solve the same per-user GD subproblem; the planner's
 
 ``ligd_steps`` (single split point, K fixed GD steps) is the original
 minimal kernel, kept as an exemplar and for gradient cross-checks.
+
+Batch rows are opaque to every path above: a row is "one (device, edge)
+pair", so the planner's multi-server admission control feeds (user,
+candidate)-tiled batches — user-major, row x·K+k — through the same
+solvers with no kernel changes (see docs/ARCHITECTURE.md for the
+control-plane dataflow and the pow2 padding contract).
 """
 from .ops import SweepResult, ligd_steps, ligd_sweep, mligd_sweep
 from .kernel import (edge_tuple_of, ligd_steps_tpu, ligd_sweep_tpu,

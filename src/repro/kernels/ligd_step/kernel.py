@@ -22,9 +22,12 @@ Two generations of kernel live here:
   every per-user quantity is a full (1, xb) VPU vector; the per-split
   prefix tables are compile-time constants (the split loop is unrolled),
   and edge parameters are PER-USER feature rows, so one launch serves a
-  fleet attached to heterogeneous servers.  The step arithmetic is
-  imported from ``ref.py`` — the dense reference and the kernel run the
-  same ops, so parity is arithmetic identity.
+  fleet attached to heterogeneous servers.  The per-row edge layout is
+  also what makes the planner's (user, candidate) admission batching a
+  pure gather: X·K rows with candidate-gathered edge columns go through
+  the SAME kernel unchanged (docs/ARCHITECTURE.md, "Admission control").
+  The step arithmetic is imported from ``ref.py`` — the dense reference
+  and the kernel run the same ops, so parity is arithmetic identity.
 
 Single-step feature layout per user (NF = 16):
   0:f_l  1:f_e  2:w_bits  3:m_bits  4:offloaded  5:c_dev  6:xi·c²·φ

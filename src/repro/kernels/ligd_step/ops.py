@@ -1,5 +1,10 @@
 """Public wrappers for the batched Li-GD kernels (single-step + fused
-whole-sweep).  See the package docstring for how a path gets picked."""
+whole-sweep).  See the package docstring for how a path gets picked, and
+docs/ARCHITECTURE.md for where the sweep sits in the control plane.
+
+The batch axis is row-semantics-free: callers may tile it per (user,
+candidate) — the planner's admission control does exactly that — as long
+as every feature row (device AND edge) is gathered per batch row."""
 from __future__ import annotations
 
 from typing import NamedTuple

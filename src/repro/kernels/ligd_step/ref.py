@@ -66,7 +66,12 @@ def pack_sweep_features(dev: dict, edge: dict, m_bits, num_users: int,
 
     ``dev``/``edge`` leaves may be (X,) arrays or scalars (shared edge);
     everything is broadcast to per-user rows.  ``orig``/``hops_back``
-    populate the MLi-GD rows (frozen original strategy of Eq. 41–43)."""
+    populate the MLi-GD rows (frozen original strategy of Eq. 41–43).
+
+    A "user" here is just a batch lane: the planner's admission control
+    packs (user, candidate)-tiled dicts — the device leaves repeated K
+    times, the edge leaves gathered per candidate — and the sweep solves
+    all X·K subproblems in the one launch."""
     X = num_users
 
     def row(v):

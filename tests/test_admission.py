@@ -1,0 +1,282 @@
+"""Admission control + async replanning: the candidate-set planner must
+degrade gracefully to the paper's one-server model (K=1 bit-for-bit),
+never exceed per-server budgets, spill deterministically, and the async
+handoff path must equal sync once drained."""
+import numpy as np
+import pytest
+
+from repro.configs.chain_cnns import nin
+from repro.core.admission import admit_waterfill
+from repro.core.costs import DeviceFleet
+from repro.core.ligd import LiGDConfig
+from repro.core.mobility import RandomWaypointMobility
+from repro.core.network import build_topology
+from repro.core.planner import MCSAPlanner
+from repro.core.profile import profile_of
+
+CFG = LiGDConfig(max_iters=60)
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_of(nin())
+
+
+def _fleet(n):
+    return DeviceFleet(c_dev=np.linspace(3e9, 8e9, n))
+
+
+# ---------------------------------------------------------------------------
+# admit_waterfill unit behavior (pure numpy, no solver)
+# ---------------------------------------------------------------------------
+def test_waterfill_budgets_never_exceeded():
+    rng = np.random.default_rng(0)
+    X, K, Z = 200, 3, 4
+    cand = np.stack([rng.permutation(Z)[:K] for _ in range(X)])
+    U = rng.uniform(1.0, 2.0, (X, K))
+    r_dem = rng.uniform(0.5, 4.0, (X, K))
+    B_dem = rng.uniform(1e6, 8e6, (X, K))
+    r_cap = np.full(Z, 40.0)
+    B_cap = np.full(Z, 9e7)
+    rep = admit_waterfill(cand, U, r_dem, B_dem, Z, r_cap, B_cap)
+    assert np.all(rep.r_load <= r_cap + 1e-9)
+    assert np.all(rep.B_load <= B_cap + 1e-9)
+    # loads are exactly the sum of admitted demands
+    adm = ~rep.rejected
+    for z in range(Z):
+        on_z = adm & (rep.server == z)
+        np.testing.assert_allclose(
+            rep.r_load[z],
+            r_dem[on_z, rep.choice[on_z]].sum() if on_z.any() else 0.0)
+
+
+def test_waterfill_uncapacitated_is_argmin():
+    rng = np.random.default_rng(1)
+    X, K, Z = 64, 3, 5
+    cand = np.stack([rng.permutation(Z)[:K] for _ in range(X)])
+    U = rng.uniform(1.0, 2.0, (X, K))
+    rep = admit_waterfill(cand, U, np.ones((X, K)), np.ones((X, K)), Z)
+    np.testing.assert_array_equal(rep.choice, np.argmin(U, axis=1))
+    assert not rep.rejected.any() and np.all(rep.spills == 0)
+
+
+def test_waterfill_saturation_spills_to_second_candidate():
+    # two users want server 0 (capacity: one user); the pricier user must
+    # spill to its 2nd candidate, server 1
+    cand = np.asarray([[0, 1], [0, 1]])
+    U = np.asarray([[1.0, 5.0], [2.0, 5.0]])     # both prefer server 0
+    r_dem = np.ones((2, 2))
+    B_dem = np.zeros((2, 2))
+    rep = admit_waterfill(cand, U, r_dem, B_dem, 2,
+                          r_capacity=np.asarray([1.0, 10.0]))
+    assert rep.server.tolist() == [0, 1]          # cheapest user wins 0
+    assert rep.spills.tolist() == [0, 1]
+    assert not rep.rejected.any()
+
+
+def test_waterfill_rejects_to_device_only_when_all_full():
+    cand = np.asarray([[0, 1]])
+    U = np.asarray([[1.0, 2.0]])
+    rep = admit_waterfill(cand, U, np.asarray([[5.0, 5.0]]),
+                          np.zeros((1, 2)), 2,
+                          r_capacity=np.asarray([1.0, 1.0]))
+    assert rep.rejected.all() and rep.choice[0] == -1
+    assert rep.server[0] == 0                     # keeps nearest candidate
+    assert rep.r_load.sum() == 0.0
+
+
+def test_waterfill_deterministic_tie_break():
+    # identical utilities and demands everywhere: ties break by candidate
+    # rank (column 0 = nearer server), then by user id within a server
+    cand = np.tile(np.asarray([[0, 1]]), (4, 1))
+    U = np.ones((4, 2))
+    r_dem = np.ones((4, 2))
+    rep1 = admit_waterfill(cand, U, r_dem, np.zeros((4, 2)), 2,
+                           r_capacity=np.asarray([2.0, 10.0]))
+    rep2 = admit_waterfill(cand, U, r_dem, np.zeros((4, 2)), 2,
+                           r_capacity=np.asarray([2.0, 10.0]))
+    # users 0,1 (lowest ids) win the scarce server 0; 2,3 spill to 1
+    assert rep1.server.tolist() == [0, 0, 1, 1]
+    np.testing.assert_array_equal(rep1.server, rep2.server)
+    np.testing.assert_array_equal(rep1.choice, rep2.choice)
+
+
+# ---------------------------------------------------------------------------
+# planner integration
+# ---------------------------------------------------------------------------
+def test_k1_uncapacitated_reproduces_single_server_bit_for_bit(prof):
+    topo = build_topology(16, 3, seed=0)
+    devs = _fleet(12)
+    aps = np.arange(12) % topo.num_aps
+    res1, srv1, fl1 = MCSAPlanner(prof, topo, CFG).plan_static(devs, aps)
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=1)
+    res2, srv2, fl2 = planner._plan_admission(devs, np.asarray(aps), 1,
+                                              None)
+    np.testing.assert_array_equal(np.asarray(srv1), srv2)
+    for f in ("split", "B", "r", "U", "T", "E", "C"):
+        np.testing.assert_array_equal(np.asarray(getattr(res1, f)),
+                                      np.asarray(getattr(res2, f)))
+        np.testing.assert_array_equal(np.asarray(getattr(fl1, f)),
+                                      np.asarray(getattr(fl2, f)))
+    assert not planner.last_admission.rejected.any()
+
+
+def test_candidate_column0_matches_ap_server(prof):
+    for seed in range(4):
+        topo = build_topology(16, 4, seed=seed)
+        np.testing.assert_array_equal(topo.candidates(3)[:, 0],
+                                      topo.ap_server)
+
+
+def test_capacity_forces_spill_and_budgets_hold(prof):
+    devs = _fleet(16)
+    aps = np.arange(16) % 16
+    # size the budget from the uncapacitated demand so the first-choice
+    # server saturates but the fleet stays admissible overall
+    p0 = MCSAPlanner(prof, build_topology(16, 3, seed=0), CFG,
+                     candidates_k=3)
+    p0.plan_static(devs, aps)
+    cap = p0.last_admission.r_load.sum() / 3 * 0.8
+    topo = build_topology(16, 3, seed=0, r_capacity=cap)
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+    _, servers, fleet = planner.plan_static(devs, aps)
+    rep = planner.last_admission
+    assert np.all(rep.r_load <= cap + 1e-9)
+    assert (rep.spills > 0).any()                 # somebody spilled
+    assert not rep.rejected.all()                 # ...but not everybody
+    # spilled-but-admitted users really sit away from their first
+    # preference (the argmin-U candidate they were bumped from)
+    sp = (~rep.rejected) & (rep.spills > 0)
+    assert sp.any()
+    first_pref = rep.candidates[np.arange(len(rep.server)),
+                                np.argmin(rep.U, axis=1)]
+    assert np.all(rep.server[sp] != first_pref[sp])
+    # rejected users (if any) became device-only: s = M, nothing rented
+    rej = np.nonzero(rep.rejected)[0]
+    assert np.all(fleet.split[rej] == prof.num_layers)
+    assert np.all(fleet.r[rej] == 0.0) and np.all(fleet.B[rej] == 0.0)
+    assert np.all(fleet.C[rej] == 0.0)
+
+
+def test_device_only_optimum_consumes_no_budget(prof):
+    """Users whose solved optimum is already device-only (terrible
+    channel -> s = M) must not charge the server budgets, spill, or be
+    rejected — and their plan rows must hold no resources."""
+    topo = build_topology(16, 2, seed=0, r_capacity=20.0)
+    devs = DeviceFleet(c_dev=np.full(8, 5e9),
+                       alpha=np.full(8, 1e-16))     # hopeless uplink
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=2)
+    _, servers, fleet = planner.plan_static(devs, np.arange(8) % 16)
+    rep = planner.last_admission
+    assert np.all(fleet.split == prof.num_layers)
+    assert rep.r_load.sum() == 0.0 and rep.B_load.sum() == 0.0
+    assert not rep.rejected.any() and np.all(rep.spills == 0)
+    np.testing.assert_array_equal(fleet.B, 0.0)
+    np.testing.assert_array_equal(fleet.r, 0.0)
+    # ...and a later handoff stays NaN-free despite the r = 0 origs
+    mob = RandomWaypointMobility(topo, 8, seed=5, speed_range=(20., 40.))
+    for t in range(300):
+        batch = mob.step(10.0, t * 10.0)
+        if batch:
+            res = planner.on_handoffs(batch, devs, fleet)
+            assert np.all(np.isfinite(np.asarray(res.U)))
+            break
+    assert np.all(np.isfinite(fleet.U))
+
+
+def test_plan_admission_deterministic_across_runs(prof):
+    topo = build_topology(16, 3, seed=0, r_capacity=50.0)
+    devs = _fleet(12)
+    aps = np.arange(12) % topo.num_aps
+    outs = []
+    for _ in range(2):
+        planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+        _, servers, fleet = planner.plan_static(devs, aps)
+        outs.append((servers.copy(), fleet.split.copy(), fleet.U.copy()))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    np.testing.assert_array_equal(outs[0][2], outs[1][2])
+
+
+def _run_trace(prof, topo, sync, steps=40, k=1):
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=k,
+                          async_replanning=not sync)
+    devs = DeviceFleet(
+        c_dev=np.random.default_rng(0).uniform(3e9, 8e9, 32))
+    mob = RandomWaypointMobility(topo, 32, seed=3, speed_range=(10., 30.))
+    _, _, fleet = planner.plan_static(devs,
+                                      topo.nearest_ap(mob.positions()))
+    events = 0
+    for t in range(steps):
+        batch = mob.step(10.0, t * 10.0)
+        if batch:
+            res = planner.on_handoffs(batch, devs, fleet)
+            events += len(batch)
+            assert res is not None
+    planner.drain(fleet)
+    assert planner._pending is None
+    return fleet, events
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_async_on_handoffs_equals_sync_after_drain(prof, k):
+    topo = build_topology(16, 4, seed=0)
+    fleet_sync, ev_s = _run_trace(prof, topo, sync=True, k=k)
+    fleet_async, ev_a = _run_trace(prof, topo, sync=False, k=k)
+    assert ev_s == ev_a and ev_s > 0
+    for f in ("server", "split", "B", "r", "U", "T", "E", "C", "R"):
+        np.testing.assert_array_equal(getattr(fleet_sync, f),
+                                      getattr(fleet_async, f), err_msg=f)
+
+
+def test_async_fleet_is_one_step_stale_until_drained(prof):
+    topo = build_topology(16, 4, seed=0)
+    planner = MCSAPlanner(prof, topo, CFG, async_replanning=True)
+    devs = DeviceFleet(
+        c_dev=np.random.default_rng(0).uniform(3e9, 8e9, 32))
+    mob = RandomWaypointMobility(topo, 32, seed=3, speed_range=(10., 30.))
+    _, _, fleet = planner.plan_static(devs,
+                                      topo.nearest_ap(mob.positions()))
+    batch = None
+    for t in range(200):
+        batch = mob.step(10.0, t * 10.0)
+        if batch:
+            break
+    assert batch
+    before = fleet.split[batch.user].copy(), fleet.U[batch.user].copy()
+    planner.on_handoffs(batch, devs, fleet)
+    # not yet applied: the fleet rows are untouched...
+    np.testing.assert_array_equal(fleet.split[batch.user], before[0])
+    np.testing.assert_array_equal(fleet.U[batch.user], before[1])
+    assert planner._pending is not None
+    # ...until the drain step scatters the solved decisions
+    res = planner.drain(fleet)
+    assert res is not None
+    np.testing.assert_array_equal(fleet.R[batch.user],
+                                  np.asarray(res.R, np.int64))
+    assert planner.drain(fleet) is None           # idempotent
+
+
+def test_candidate_aware_handoff_never_worse_than_nearest(prof):
+    """K>1 replanning minimizes over a superset of K=1's single target,
+    so each re-split decision's utility can only improve."""
+    topo = build_topology(16, 3, seed=0)
+    devs = DeviceFleet(
+        c_dev=np.random.default_rng(0).uniform(3e9, 8e9, 32))
+
+    def run(k):
+        planner = MCSAPlanner(prof, topo, CFG, candidates_k=k)
+        mob = RandomWaypointMobility(topo, 32, seed=3,
+                                     speed_range=(10., 30.))
+        # identical static plan for both runs (K only varies the replan)
+        _, _, fleet = planner.plan_static(
+            devs, topo.nearest_ap(mob.positions()), candidates_k=1)
+        for t in range(60):
+            batch = mob.step(10.0, t * 10.0)
+            if batch:
+                return np.asarray(
+                    planner.on_handoffs(batch, devs, fleet).U)
+        raise AssertionError("no handoff in 60 steps")
+
+    u1, u3 = run(1), run(3)
+    assert np.all(u3 <= u1 + 1e-5)

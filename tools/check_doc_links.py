@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Fail CI on broken intra-repo documentation links.
+
+Scans every tracked ``*.md`` file for markdown links/images and verifies
+that relative targets exist on disk (anchors are stripped; external
+``http(s):``/``mailto:`` targets are skipped).  Also verifies the
+``docs/...`` path references that module docstrings use as cross-links.
+
+Run:  python tools/check_doc_links.py  (from the repo root or anywhere)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+MD_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+# docstring cross-links like "docs/ARCHITECTURE.md" or
+# "see docs/ARCHITECTURE.md (...)" inside python sources
+PY_DOC_REF = re.compile(r"\bdocs/[A-Za-z0-9_.-]+\.md\b")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_files(suffix: str):
+    for p in sorted(ROOT.rglob(f"*{suffix}")):
+        if any(part.startswith(".") or part in ("experiments", "build")
+               for part in p.relative_to(ROOT).parts[:-1]):
+            continue
+        yield p
+
+
+def check_markdown() -> list:
+    errors = []
+    for md in iter_files(".md"):
+        for m in MD_LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_docstring_refs() -> list:
+    errors = []
+    for py in iter_files(".py"):
+        for m in PY_DOC_REF.finditer(py.read_text(encoding="utf-8")):
+            if not (ROOT / m.group(0)).exists():
+                errors.append(f"{py.relative_to(ROOT)}: dangling doc "
+                              f"reference -> {m.group(0)}")
+    return errors
+
+
+def main() -> int:
+    errors = check_markdown() + check_docstring_refs()
+    for e in errors:
+        print(f"BROKEN: {e}")
+    if errors:
+        print(f"{len(errors)} broken doc link(s)")
+        return 1
+    print("doc links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
