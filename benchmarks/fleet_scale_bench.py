@@ -1,8 +1,14 @@
 """Fleet-planner scale benchmark: array-resident FleetState vs the seed's
-per-user-object planner, the fused vs autodiff solver backends, and the
-admission-control / async-replanning control-plane extensions.
+per-user-object planner, the fused vs autodiff solver backends, the
+admission-control / async-replanning control-plane extensions, and a
+scenario-matrix smoke over every registered ``repro.api`` preset.
 
-Five measurements:
+Every mobility loop here is owned by ``repro.api.Session`` — the bench
+declares worlds (Scenario overrides + prebuilt components) and reads
+``session.timings``; even the seed planner under measurement is driven
+through Session behind a thin Policy adapter.
+
+Six measurements:
 
   1. **10k-user head-to-head** — identical scenario (same topology,
      devices, mobility trace) planned by (a) the seed path: one Python
@@ -30,10 +36,15 @@ Five measurements:
      (must stay <= 1.0 by construction).
 
   5. **async replanning overlap** — the sustained-mobility loop run
-     twice, ``sync=True`` (block on every handoff solve) vs
-     ``sync=False`` (solve overlaps the next mobility step, decisions
-     applied one step late): ``overlap_win`` is the steps-loop speedup
-     from hiding the MLi-GD solve behind the waypoint numpy work.
+     twice, sync (block on every handoff solve) vs async (solve overlaps
+     the next mobility step, decisions applied one step late):
+     ``overlap_win`` is the steps-loop speedup from hiding the MLi-GD
+     solve behind the waypoint numpy work.
+
+  6. **scenario matrix** — every registered Scenario preset, capped to
+     ``--matrix-users`` users, planned + stepped once through Session:
+     a smoke that each named world stays plannable, with per-preset
+     plan/step timings in the ``scenario_matrix`` track.
 
 CSV rows go to stdout; machine-readable results go to ``--out`` (default
 BENCH_fleet.json) so the perf trajectory is tracked across PRs.
@@ -52,12 +63,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Scenario, Session, get_scenario, list_scenarios
 from repro.configs.chain_cnns import nin
 from repro.core.costs import (DeviceFleet, DeviceParams, LayerProfile,
                               edge_dict, stack_devices, stack_edges)
 from repro.core.ligd import LiGDConfig, LiGDResult, solve_ligd_batch_jit
 from repro.core.mligd import orig_strategy_dict, solve_mligd_batch_jit
-from repro.core.mobility import HandoffEvent, RandomWaypointMobility
+from repro.core.mobility import RandomWaypointMobility
 from repro.core.network import build_topology
 from repro.core.planner import MCSAPlanner, UserPlan
 from repro.core.profile import profile_of
@@ -65,7 +77,8 @@ from repro.core.profile import profile_of
 
 # ---------------------------------------------------------------------------
 # The seed planner's control plane (PR1 state), kept verbatim as the
-# baseline under measurement.
+# baseline under measurement — wearing the repro.api Policy protocol
+# (plan / on_handoffs / drain) so Session can drive it like any policy.
 # ---------------------------------------------------------------------------
 class SeedPlanner:
     def __init__(self, profile: LayerProfile, topo, cfg: LiGDConfig,
@@ -73,6 +86,10 @@ class SeedPlanner:
         self.profile, self.topo, self.cfg = profile, topo, cfg
         self.per_iter_time = per_iter_time
         self.t_ag_estimate = 0.0
+
+    def plan(self, devices: Sequence[DeviceParams],
+             user_aps: np.ndarray) -> List[UserPlan]:
+        return self.plan_static(devices, np.asarray(user_aps))[2]
 
     def plan_static(self, devices: Sequence[DeviceParams],
                     user_aps: np.ndarray):
@@ -93,9 +110,9 @@ class SeedPlanner:
                  for i, s in enumerate(servers)]
         return res, servers, plans
 
-    def on_handoffs(self, events: List[HandoffEvent],
-                    devices: Sequence[DeviceParams],
+    def on_handoffs(self, events, devices: Sequence[DeviceParams],
                     plans: List[UserPlan]):
+        events = list(events)
         if not events:
             return []
         devs, edges_new, origs, hops_back = [], [], [], []
@@ -130,6 +147,9 @@ class SeedPlanner:
                 E=float(res.E[i]), C=float(res.C[i]), R=int(res.R[i]))
         return [res]
 
+    def drain(self, plans):
+        return None                     # the seed path is synchronous
+
 
 def _scenario(users: int, seed: int = 0):
     topo = build_topology(25, 4, seed=seed)
@@ -140,56 +160,41 @@ def _scenario(users: int, seed: int = 0):
     return topo, prof, cfg, c_dev
 
 
+def _bench_scenario(cfg, users: int, steps: int, dt: float, mob_seed: int,
+                    sync: bool) -> Scenario:
+    """The bench's world as a Scenario — components (topology, devices)
+    are prebuilt once and injected into each Session."""
+    return Scenario(name="fleet_bench", num_users=users, ligd=cfg,
+                    mobility_seed=mob_seed, speed_range=(10.0, 30.0),
+                    steps=steps, dt=dt, async_replanning=not sync)
+
+
 def _run_fleet(topo, prof, cfg, c_dev, steps: int, dt: float,
                mob_seed: int, sync: bool = True) -> tuple:
-    planner = MCSAPlanner(prof, topo, cfg)
-    devices = DeviceFleet(c_dev=c_dev)
-    mob = RandomWaypointMobility(topo, len(c_dev), seed=mob_seed,
-                                 speed_range=(10.0, 30.0))
-    t0 = time.perf_counter()
-    _, _, fleet = planner.plan_static(devices,
-                                      topo.nearest_ap(mob.positions()))
-    t_static = time.perf_counter() - t0
-    t_steps, n_events = 0.0, 0
-    for k in range(steps):
-        t0 = time.perf_counter()
-        batch = mob.step(dt, k * dt)
-        if batch:
-            res = planner.on_handoffs(batch, devices, fleet, sync=sync)
-            if sync:
-                jax.block_until_ready(res.U)
-        t_steps += time.perf_counter() - t0
-        n_events += len(batch)
-    # async: the last in-flight solve still has to land in the table
-    t0 = time.perf_counter()
-    planner.drain(fleet)
-    t_steps += time.perf_counter() - t0
-    return t_static, t_steps, n_events, fleet
+    sc = _bench_scenario(cfg, len(c_dev), steps, dt, mob_seed, sync)
+    sess = Session(sc, topo=topo, profile=prof,
+                   devices=DeviceFleet(c_dev=c_dev))
+    sess.run(steps)                     # drains the last in-flight solve
+    return (sess.timings["plan_s"],
+            sess.timings["steps_s"] + sess.timings["drain_s"],
+            sess.total_handoffs, sess.fleet)
 
 
 def _run_seed(topo, prof, cfg, c_dev, steps: int, dt: float,
               mob_seed: int) -> tuple:
-    planner = SeedPlanner(prof, topo, cfg)
-    devices = [DeviceParams(c_dev=float(c)) for c in c_dev]
-    mob = RandomWaypointMobility(topo, len(c_dev), seed=mob_seed,
-                                 speed_range=(10.0, 30.0))
-    t0 = time.perf_counter()
-    _, _, plans = planner.plan_static(
-        devices, np.asarray(topo.nearest_ap(mob.positions())))
-    t_static = time.perf_counter() - t0
-    t_steps, n_events = 0.0, 0
-    for k in range(steps):
-        t0 = time.perf_counter()
-        events = list(mob.step(dt, k * dt))
-        if events:
-            planner.on_handoffs(events, devices, plans)
-        t_steps += time.perf_counter() - t0
-        n_events += len(events)
-    return t_static, t_steps, n_events, plans
+    sc = _bench_scenario(cfg, len(c_dev), steps, dt, mob_seed, sync=True)
+    sess = Session(sc, policy=SeedPlanner(prof, topo, cfg), topo=topo,
+                   profile=prof,
+                   devices=[DeviceParams(c_dev=float(c)) for c in c_dev])
+    sess.run(steps)
+    return (sess.timings["plan_s"],
+            sess.timings["steps_s"] + sess.timings["drain_s"],
+            sess.total_handoffs, sess.fleet)
 
 
 def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
-        dt: float = 30.0, out: str = "BENCH_fleet.json") -> List[str]:
+        dt: float = 30.0, matrix_users: int = 128,
+        out: str = "BENCH_fleet.json") -> List[str]:
     rows = []
     results = {"users": users, "big_users": big_users, "steps": steps}
     topo, prof, cfg, c_dev = _scenario(users)
@@ -328,6 +333,28 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
                                 "overlap_win": overlap_win}
     print(f"[async] {big_users} users, {steps} steps: sync {t_sync:.2f}s "
           f"vs async {t_async:.2f}s -> {overlap_win:.2f}x overlap win")
+
+    # ---- scenario matrix: every registered preset plans + steps once
+    matrix = {}
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        sc = sc.replace(num_users=min(sc.num_users, matrix_users), steps=1)
+        sess = Session(sc)
+        sess.run(1)
+        assert np.isfinite(sess.fleet.U).all(), f"{name}: non-finite plan"
+        matrix[name] = {
+            "users": sc.num_users,
+            "plan_s": sess.timings["plan_s"],
+            "step_s": sess.timings["steps_s"] + sess.timings["drain_s"],
+            "handoffs": int(sess.total_handoffs)}
+        rows.append(f"fleet_bench,{sc.num_users},scenario_{name},plan_s,"
+                    f"{matrix[name]['plan_s']:.3f}")
+        print(f"[scenario {name}] {sc.num_users} users: plan "
+              f"{matrix[name]['plan_s']:.2f}s, step "
+              f"{matrix[name]['step_s']:.2f}s, "
+              f"{matrix[name]['handoffs']} handoffs")
+    results["scenario_matrix"] = matrix
+
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)
@@ -340,7 +367,10 @@ if __name__ == "__main__":
     ap.add_argument("--users", type=int, default=10_000)
     ap.add_argument("--big-users", type=int, default=100_000)
     ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--matrix-users", type=int, default=128,
+                    help="user cap for the scenario-matrix smoke")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args()
-    for r in run(args.users, args.big_users, args.steps, out=args.out):
+    for r in run(args.users, args.big_users, args.steps,
+                 matrix_users=args.matrix_users, out=args.out):
         print(r)

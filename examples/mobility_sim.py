@@ -3,10 +3,13 @@ while driving through the AP grid — live MLi-GD decisions + running
 per-strategy cost accounting (the paper's Figs. 9-14 scenario, animated
 as text).
 
-The whole loop is array-resident: mobility steps, handoff batches, and
-plan updates are vectorized end-to-end, so ``--users 100000`` is a flag
-away (each minute costs one padded MLi-GD solve over that minute's
-handoffs, not a Python loop over vehicles).
+Everything rides the ``repro.api`` surface: the world is the
+``paper_fig1`` Scenario preset (CLI flags override its fields) and the
+whole mobility → handoff → replan loop is owned by ``Session`` — this
+file only prints what each step reports.  The loop is array-resident
+end-to-end, so ``--users 100000`` is a flag away (each minute costs one
+padded MLi-GD solve over that minute's handoffs, not a Python loop over
+vehicles).
 
 Control-plane extras (docs/ARCHITECTURE.md):
   --candidates K        admit each vehicle to the best of its K nearest
@@ -25,13 +28,7 @@ import argparse
 
 import numpy as np
 
-from repro.configs.chain_cnns import yolov2
-from repro.core.costs import DeviceFleet
-from repro.core.ligd import LiGDConfig
-from repro.core.mobility import RandomWaypointMobility
-from repro.core.network import build_topology
-from repro.core.planner import MCSAPlanner
-from repro.core.profile import profile_of
+from repro.api import Session, get_scenario
 
 MAX_EVENT_PRINTS = 8
 
@@ -49,68 +46,58 @@ def main():
                     help="overlap handoff solves with the next step")
     args = ap.parse_args()
 
-    topo = build_topology(25, 3, seed=0, r_capacity=args.server_capacity)
-    profile = profile_of(yolov2())
-    planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=250),
-                          candidates_k=args.candidates,
-                          async_replanning=args.async_replanning)
-    rng = np.random.default_rng(0)
-    devices = DeviceFleet(c_dev=rng.uniform(3e9, 6e9, args.users))
-    mob = RandomWaypointMobility(topo, args.users, seed=1,
-                                 speed_range=(8.0, 25.0))   # vehicles
-
-    aps = topo.nearest_ap(mob.positions())
-    _, _, fleet = planner.plan_static(devices, aps)
-    print(f"{args.users} vehicles, {topo.num_aps} APs, "
-          f"{topo.num_servers} edge servers; YOLOv2 inference stream")
-    rep = planner.last_admission
-    if rep is not None:
-        spilled = int(((rep.spills > 0) & ~rep.rejected).sum())
+    scenario = get_scenario("paper_fig1").replace(
+        steps=args.minutes, num_users=args.users,
+        candidates_k=args.candidates, r_capacity=args.server_capacity,
+        async_replanning=args.async_replanning)
+    sess = Session(scenario)
+    print(f"{args.users} vehicles, {sess.topo.num_aps} APs, "
+          f"{sess.topo.num_servers} edge servers; YOLOv2 inference stream")
+    if sess.admission is not None:
+        rep = sess.admission
         print(f"admission: K={args.candidates}, "
-              f"users/server {rep.users_per_server.tolist()}, "
-              f"{spilled} spilled, {int(rep.rejected.sum())} device-only"
-              + (f", r-load {np.round(rep.r_load, 1).tolist()}"
+              f"users/server {rep['users_per_server']}, "
+              f"{rep['spilled']} spilled, {rep['rejected']} device-only"
+              + (f", r-load {np.round(rep['r_load'], 1).tolist()}"
                  f" / budget {args.server_capacity}"
                  if args.server_capacity else ""))
 
-    resplits = relays = 0
-    lat_log = []
+    fleet = sess.fleet
     for minute in range(args.minutes):
-        events = mob.step(60.0, minute * 60.0)
-        if events:
-            res = planner.on_handoffs(events, devices, fleet)
-            if args.async_replanning:
-                # forcing res here would kill the overlap — the decisions
-                # land at the next minute's call (or the final drain)
-                print(f"  [{minute:3d} min] {len(events)} handoffs "
+        rep = sess.step()
+        if rep.in_flight:
+            # the solve overlaps the next minute's mobility — decisions
+            # land at the next event-bearing step (or the final drain)
+            if rep.events:
+                print(f"  [{minute:3d} min] {len(rep.events)} handoffs "
                       f"(solve in flight)")
-                lat_log.append(fleet.T.mean())
-                continue
-            R = np.asarray(res.R)
-            relays += int(R.sum())
-            resplits += int(len(R) - R.sum())
-            for i, ev in enumerate(events):
-                if i >= MAX_EVENT_PRINTS:
-                    print(f"  [{minute:3d} min] ... "
-                          f"{len(events) - MAX_EVENT_PRINTS} more handoffs")
-                    break
-                print(f"  [{minute:3d} min] vehicle {ev.user}: server "
-                      f"{ev.old_server}->{ev.new_server} "
-                      f"{'relay-back' if R[i] else 're-split'} "
-                      f"(split={int(fleet.split[ev.user])}, "
-                      f"T={fleet.T[ev.user] * 1e3:.1f} ms)")
-        lat_log.append(fleet.T.mean())
+            continue
+        if rep.result is None:
+            continue
+        R = np.asarray(rep.result.R)
+        for i, ev in enumerate(rep.events):
+            if i >= MAX_EVENT_PRINTS:
+                print(f"  [{minute:3d} min] ... "
+                      f"{len(rep.events) - MAX_EVENT_PRINTS} more handoffs")
+                break
+            print(f"  [{minute:3d} min] vehicle {ev.user}: server "
+                  f"{ev.old_server}->{ev.new_server} "
+                  f"{'relay-back' if R[i] else 're-split'} "
+                  f"(split={int(fleet.split[ev.user])}, "
+                  f"T={fleet.T[ev.user] * 1e3:.1f} ms)")
 
-    planner.drain(fleet)
+    sess.drain()
+    m = sess.metrics()
     if args.async_replanning:
         relays = int((fleet.R == 1).sum())
         print(f"\n{args.minutes} min simulated (async): "
               f"{relays} vehicles ended on a relay-back plan")
     else:
-        print(f"\n{args.minutes} min simulated: {resplits} re-splits, "
-              f"{relays} relay-backs")
-    print(f"fleet mean latency: {np.mean(lat_log) * 1e3:.1f} ms "
-          f"(worst minute {np.max(lat_log) * 1e3:.1f} ms)")
+        print(f"\n{args.minutes} min simulated: "
+              f"{int(m.resplits.sum())} re-splits, "
+              f"{int(m.relays.sum())} relay-backs")
+    print(f"fleet mean latency: {np.mean(m.mean_T) * 1e3:.1f} ms "
+          f"(worst minute {np.max(m.mean_T) * 1e3:.1f} ms)")
 
 
 if __name__ == "__main__":

@@ -1,72 +1,69 @@
-"""Quickstart: the paper's MCSA pipeline end-to-end in ~60 seconds on CPU.
+"""Quickstart: the paper's MCSA pipeline end-to-end in ~60 seconds on CPU,
+through the ``repro.api`` front door.
 
-  1. build an edge network (N APs, Z < N edge servers, multi-hop);
-  2. profile a DNN (VGG16's per-layer FLOPs / activation sizes);
-  3. run Li-GD: jointly pick each user's split point s, bandwidth B and
-     edge-compute units r (paper Algorithm 1);
-  4. compare against Device-Only / Edge-Only / Neurosurgeon / DNN-Surgery;
-  5. move the users; on an edge-server handoff run MLi-GD (Algorithm 2):
-     re-split against the new server vs relay traffic back.
+  1. declare the world as a Scenario (16 APs, 4 edge servers, VGG16
+     profile, 6 users) — no hand-wiring of topology/profile/mobility;
+  2. Session + the default MCSA policy run Li-GD: jointly pick each
+     user's split point s, bandwidth B and edge-compute units r (paper
+     Algorithm 1);
+  3. swap in the baseline policies (Device-Only / Edge-Only /
+     greedy-nearest Neurosurgeon / DNN-Surgery / Cloud) on the IDENTICAL
+     world — one line each;
+  4. step the session; on an edge-server handoff the policy runs MLi-GD
+     (Algorithm 2): re-split against the new server vs relay traffic back.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.configs.chain_cnns import vgg16
-from repro.core.costs import DeviceParams
+from repro.api import Scenario, Session
 from repro.core.ligd import LiGDConfig
-from repro.core.mobility import RandomWaypointMobility
-from repro.core.network import build_topology
-from repro.core.planner import MCSAPlanner
-from repro.core.profile import profile_of
+
+# 1. the world, declaratively (serializable: print(scenario.to_dict()))
+scenario = Scenario(
+    name="quickstart", num_aps=16, num_servers=4, topo_seed=0,
+    model="vgg16", num_users=6, device_seed=0,
+    speed_range=(5.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=300), steps=360, dt=10.0)
 
 
 def main():
-    # 1. network: 16 APs, 4 edge servers, fiber backhaul, multi-hop relays
-    topo = build_topology(num_aps=16, num_servers=4, seed=0)
+    # 2. Session builds topology/profile/fleet and plans with MCSA
+    sess = Session(scenario)
+    topo, profile = sess.topo, sess.profile
     print(f"topology: {topo.num_aps} APs, {topo.num_servers} servers, "
           f"max hops {int(topo.hops.min(1).max())}")
-
-    # 2. model profile (the f_l / f_e / w_s tables of paper Eq. 18)
-    profile = profile_of(vgg16())
     print(f"model: {profile.name}, {profile.num_layers} layers, "
           f"{profile.flops.sum() / 1e9:.2f} GFLOPs")
 
-    # 3. users + Li-GD plan
-    rng = np.random.default_rng(0)
-    devices = [DeviceParams(c_dev=float(rng.uniform(3e9, 6e9)))
-               for _ in range(6)]
-    planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=300))
-    mob = RandomWaypointMobility(topo, len(devices), seed=1,
-                                 speed_range=(5.0, 25.0))
-    aps = topo.nearest_ap(mob.positions())
-    res, servers, plans = planner.plan_static(devices, aps)
     print("\n== Li-GD plan (per user) ==")
-    for i, p in enumerate(plans):
+    for i, p in enumerate(sess.fleet):
         print(f"  user{i}: server {p.server}  split s={p.split:2d}  "
               f"B={p.B / 1e6:5.2f} MHz  r={p.r:4.1f}  "
               f"T={p.T * 1e3:6.1f} ms  E={p.E * 1e3:6.1f} mJ")
 
-    # 4. baselines
-    print("\n== baselines (mean over users) ==")
-    for name in ("device_only", "edge_only", "neurosurgeon", "dnn_surgery"):
-        b = planner.run_baseline(name, devices, aps)
-        print(f"  {name:13s} T={float(np.mean(b.T)) * 1e3:7.1f} ms  "
+    # 3. policy swap: the IDENTICAL world (topology/profile/devices
+    #    injected from the mcsa session, positions re-seeded) planned by
+    #    each baseline
+    print("\n== baselines (mean over users, identical world) ==")
+    for name in ("device_only", "edge_only", "greedy_nearest",
+                 "dnn_surgery", "cloud"):
+        b = Session(scenario, policy=name, topo=topo, profile=profile,
+                    devices=sess.devices).fleet
+        print(f"  {name:14s} T={float(np.mean(b.T)) * 1e3:7.1f} ms  "
               f"E={float(np.mean(b.E)) * 1e3:6.1f} mJ  "
               f"C=${float(np.mean(b.C)):.6f}/round")
-    print(f"  {'mcsa':13s} T={float(np.mean(res.T)) * 1e3:7.1f} ms  "
-          f"E={float(np.mean(res.E)) * 1e3:6.1f} mJ  "
-          f"C=${float(np.mean(res.C)):.6f}/round")
+    print(f"  {'mcsa':14s} T={float(np.mean(sess.fleet.T)) * 1e3:7.1f} ms  "
+          f"E={float(np.mean(sess.fleet.E)) * 1e3:6.1f} mJ  "
+          f"C=${float(np.mean(sess.fleet.C)):.6f}/round")
 
-    # 5. mobility: run the waypoint model until somebody changes servers
+    # 4. mobility: step the session until somebody changes servers
     print("\n== mobility (MLi-GD handoff decisions) ==")
-    t, events = 0.0, []
-    while not events and t < 3600:
-        events = mob.step(10.0, t)
-        t += 10.0
-    planner.on_handoffs(events, devices, plans)
-    for ev in events:
-        p = plans[ev.user]
+    report = sess.step()
+    while not report.events and sess.steps_taken < scenario.steps:
+        report = sess.step()
+    for ev in report.events:
+        p = sess.fleet[ev.user]
         action = "relay-back" if p.R else "re-split"
         print(f"  t={ev.t:5.0f}s user{ev.user}: server "
               f"{ev.old_server}->{ev.new_server}  decision={action}  "

@@ -1,0 +1,51 @@
+"""repro.api — the front door to the MCSA system.
+
+Three pieces (docs/ARCHITECTURE.md "API surface" has the full map):
+
+* :class:`Scenario` — a declarative, JSON-serializable description of
+  one world (topology + budgets, fleet, mobility, model profile, solver,
+  schedule), with named presets: ``get_scenario("paper_fig1")``,
+  ``dense_urban``, ``highway``, ``capacitated_k3``,
+  ``static_no_mobility``, ``megafleet_100k``.
+* :class:`Policy` — the pluggable planning protocol
+  (``plan`` / ``on_handoffs`` / ``drain``).  The MCSA planner implements
+  it natively; the paper's §6 baselines ship as one-line-swappable
+  policies (``device_only``, ``edge_only``, ``greedy_nearest``,
+  ``dnn_surgery``, ``cloud``).
+* :class:`Session` — the single stepped lifecycle owning the
+  mobility → handoff → replan → scatter loop, async drain semantics
+  included.
+
+The 60-second version::
+
+    from repro.api import Session, get_scenario
+
+    session = Session(get_scenario("paper_fig1"))   # policy: MCSA
+    metrics = session.run()                         # the full schedule
+    print(metrics.mean_T, metrics.handoffs, session.fleet.split)
+
+    # apples-to-apples policy comparison on the identical world:
+    for name in ("mcsa", "greedy_nearest", "edge_only", "device_only"):
+        m = Session(get_scenario("highway"), policy=name).run(5)
+        print(name, m.mean_T[-1])
+
+``repro.core`` stays importable as the stable internal layer (the old
+``MCSAPlanner(...).plan_static`` / hand-rolled-loop entry points keep
+working); new code should come through this package.
+"""
+from .policies import (POLICIES, BaselinePolicy, CloudPolicy,
+                       DNNSurgeryPolicy, DeviceOnlyPolicy, EdgeOnlyPolicy,
+                       GreedyNearestPolicy, MCSAPlanner, Policy,
+                       list_policies, make_policy)
+from .scenario import (MOBILITY_MODELS, Scenario, get_scenario,
+                       list_scenarios, register_scenario)
+from .session import Session, SessionMetrics, StepReport
+
+__all__ = [
+    "Scenario", "get_scenario", "list_scenarios", "register_scenario",
+    "MOBILITY_MODELS",
+    "Policy", "POLICIES", "list_policies", "make_policy", "MCSAPlanner",
+    "BaselinePolicy", "DeviceOnlyPolicy", "EdgeOnlyPolicy", "CloudPolicy",
+    "GreedyNearestPolicy", "DNNSurgeryPolicy",
+    "Session", "SessionMetrics", "StepReport",
+]

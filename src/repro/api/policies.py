@@ -1,0 +1,229 @@
+"""The pluggable planning surface: one :class:`Policy` protocol for every
+way a fleet can be planned, so apples-to-apples comparison is a one-line
+swap inside the same :class:`repro.api.Session` lifecycle.
+
+Implementations shipped here:
+
+* :class:`repro.core.planner.MCSAPlanner` — the paper's Li-GD/MLi-GD
+  control plane (admission control, async replanning); it implements the
+  protocol natively and is the Session default.
+* The §6 comparison baselines from ``repro.core.baselines``, re-homed as
+  fleet-level policies: :class:`DeviceOnlyPolicy`, :class:`EdgeOnlyPolicy`,
+  :class:`GreedyNearestPolicy` (Neurosurgeon's latency-greedy split at
+  the nearest server), :class:`DNNSurgeryPolicy` (the same under a
+  resource-capped edge), and :class:`CloudPolicy` (full offload to one
+  remote datacenter reached over a fixed WAN hop count — the
+  "no edge, just cloud" strawman).
+
+None of the baselines optimize the (B, r) allocation — that is MCSA's
+contribution; they receive the same static fair allocation as the paper
+(see ``repro.core.baselines``).  On handoffs they statelessly re-evaluate
+only the moved users against their new serving server (for Device-Only
+the numbers come out unchanged and only the serving column follows
+coverage; Cloud's plan is position-independent, so its ``on_handoffs``
+is a no-op and the table stays exactly as planned).
+
+A policy is anything structurally matching :class:`Policy` — duck typing
+via ``typing.Protocol``, no registration or inheritance required; the
+name registry (:data:`POLICIES` / :func:`make_policy`) only exists so
+scenarios and CLIs can pick policies by string.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import run_baseline_batch
+from repro.core.costs import (Devices, LayerProfile, gather_devices,
+                              stack_devices, stack_edges_np)
+from repro.core.mobility import HandoffBatch
+from repro.core.network import Topology
+from repro.core.planner import FleetState, MCSAPlanner
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """What a Session needs from a planner.
+
+    ``plan`` produces the fleet's plan table from scratch;
+    ``on_handoffs`` updates it in place for one step's handoff batch
+    (implementations may defer the scatter — async replanning — until
+    the next call or an explicit ``drain``).  ``on_handoffs``/``drain``
+    may return their solver result for callers that want it; Session
+    surfaces it in the step report and otherwise treats ``fleet`` as
+    updated in place.
+
+    A policy that defers application MUST expose a truthy ``pending``
+    attribute/property while a replan is dispatched but unapplied
+    (cleared by the next ``on_handoffs``/``drain``): Session reads it to
+    know the step's result is still in flight — neither forcing the
+    un-applied solve (which would destroy the overlap) nor accounting
+    its decisions as landed.  Policies without the attribute are treated
+    as synchronous.
+    """
+
+    def plan(self, devices: Devices, user_aps: np.ndarray) -> FleetState:
+        ...                                             # pragma: no cover
+
+    def on_handoffs(self, events: HandoffBatch, devices: Devices,
+                    fleet: FleetState):
+        ...                                             # pragma: no cover
+
+    def drain(self, fleet: FleetState):
+        ...                                             # pragma: no cover
+
+
+class BaselinePolicy:
+    """Shared machinery for the stateless §6 baselines: plan every user
+    against its serving server with one vmapped baseline evaluation, and
+    re-evaluate only the moved rows on handoffs (no relay-back concept —
+    baselines always follow coverage)."""
+
+    #: key into ``repro.core.baselines.BASELINES``
+    baseline: str = "device_only"
+
+    def __init__(self, profile: LayerProfile, topo: Topology):
+        self.profile = profile
+        self.topo = topo
+        self._edge_table = stack_edges_np(topo.edges)
+
+    # -- helpers -------------------------------------------------------
+    def _edges_for(self, servers: np.ndarray) -> dict:
+        return {k: jnp.asarray(v[np.asarray(servers)], jnp.float32)
+                for k, v in self._edge_table.items()}
+
+    def _serving(self, user_aps: np.ndarray) -> tuple:
+        """(servers, hops) for a batch of AP associations."""
+        user_aps = np.asarray(user_aps)
+        servers = self.topo.ap_server[user_aps]
+        return servers, self.topo.hops[user_aps, servers]
+
+    def _evaluate(self, devs_s: dict, servers: np.ndarray,
+                  hops: np.ndarray):
+        devs_s = dict(devs_s)
+        devs_s["hops"] = jnp.asarray(hops, jnp.float32)
+        return run_baseline_batch(self.baseline, self.profile, devs_s,
+                                  self._edges_for(servers))
+
+    # -- Policy protocol -----------------------------------------------
+    def plan(self, devices: Devices, user_aps: np.ndarray) -> FleetState:
+        servers, hops = self._serving(user_aps)
+        res = self._evaluate(stack_devices(devices), servers, hops)
+        return FleetState.from_static(servers, res)
+
+    def on_handoffs(self, events: HandoffBatch, devices: Devices,
+                    fleet: FleetState):
+        batch = HandoffBatch.from_events(events) \
+            if not isinstance(events, HandoffBatch) else events
+        if len(batch) == 0:
+            return None
+        users = batch.user
+        servers, hops = batch.new_server, batch.hops_new
+        res = self._evaluate(gather_devices(devices, users), servers, hops)
+        fleet.scatter(users, servers, res, R=0)   # baselines never relay
+        return res
+
+    pending = False                           # baselines never defer
+
+    def drain(self, fleet: FleetState):
+        return None                           # baselines are synchronous
+
+
+class DeviceOnlyPolicy(BaselinePolicy):
+    """Everything on-device (s = M): no offload, no rent — the paper's
+    Device-Only baseline as a fleet policy."""
+    baseline = "device_only"
+
+
+class EdgeOnlyPolicy(BaselinePolicy):
+    """Everything offloaded (s = 0) to the nearest edge server at the
+    full static allocation — the paper's Edge-Only baseline."""
+    baseline = "edge_only"
+
+
+class GreedyNearestPolicy(BaselinePolicy):
+    """The greedy-nearest heuristic: latency-optimal single split at the
+    NEAREST server (Neurosurgeon [29]'s objective), no (B, r)
+    optimization, coverage-following handoffs."""
+    baseline = "neurosurgeon"
+
+
+class DNNSurgeryPolicy(BaselinePolicy):
+    """DNN-Surgery/DADS [14]: the greedy-nearest split under a capped
+    rentable edge allocation (resource-limited edge server)."""
+    baseline = "dnn_surgery"
+
+
+class CloudPolicy(BaselinePolicy):
+    """Full offload to ONE remote datacenter: every user ships its input
+    to the same (best-provisioned) server over ``wan_hops`` backhaul
+    hops, wherever it roams — the classic cloud-inference strawman the
+    edge exists to beat.  The plan is position-independent, so
+    ``on_handoffs`` is a no-op: the fleet table (including the serving
+    column, pinned to the cloud server) never changes after ``plan``."""
+    baseline = "edge_only"
+
+    def __init__(self, profile: LayerProfile, topo: Topology,
+                 wan_hops: int = 8):
+        super().__init__(profile, topo)
+        self.wan_hops = int(wan_hops)
+        # "the cloud" = the beefiest deployment in the region
+        self.cloud_server = int(np.argmax(
+            [e.c_min * e.r_max for e in topo.edges]))
+
+    def _serving(self, user_aps: np.ndarray) -> tuple:
+        X = len(np.asarray(user_aps))
+        return (np.full(X, self.cloud_server, np.int64),
+                np.full(X, self.wan_hops, np.int64))
+
+    def on_handoffs(self, events: HandoffBatch, devices: Devices,
+                    fleet: FleetState):
+        return None                 # plan is position-independent
+
+
+#: policy-name registry for scenarios / CLIs (classes, not instances:
+#: Session instantiates via make_policy)
+POLICIES = {
+    "mcsa": MCSAPlanner,
+    "device_only": DeviceOnlyPolicy,
+    "edge_only": EdgeOnlyPolicy,
+    "greedy_nearest": GreedyNearestPolicy,
+    "dnn_surgery": DNNSurgeryPolicy,
+    "cloud": CloudPolicy,
+}
+
+
+def list_policies() -> tuple:
+    return tuple(sorted(POLICIES))
+
+
+def make_policy(spec, scenario, profile: LayerProfile,
+                topo: Topology) -> Policy:
+    """Resolve a policy spec into a live Policy.
+
+    spec: None (→ the MCSA planner), a registry name from
+    :data:`POLICIES`, a policy class (constructed as
+    ``cls(profile, topo)``; MCSAPlanner subclasses additionally receive
+    the scenario's solver/admission knobs), or an already-built instance
+    (returned as-is — the caller owns its configuration).
+    """
+    if spec is None:
+        spec = "mcsa"
+    if isinstance(spec, str):
+        try:
+            spec = POLICIES[spec]
+        except KeyError:
+            raise KeyError(f"unknown policy {spec!r}; available: "
+                           f"{list_policies()}") from None
+    if isinstance(spec, type):
+        if issubclass(spec, MCSAPlanner):
+            return spec(profile, topo, scenario.ligd,
+                        candidates_k=scenario.candidates_k,
+                        async_replanning=scenario.async_replanning)
+        return spec(profile, topo)
+    if not isinstance(spec, Policy):
+        raise TypeError(f"{type(spec).__name__} does not implement the "
+                        "Policy protocol (plan / on_handoffs / drain)")
+    return spec

@@ -1,0 +1,244 @@
+"""Declarative scenarios: one serializable config for the whole MCSA
+pipeline (topology geometry + budgets, fleet, mobility, layer-profile
+source, solver, admission, schedule).
+
+A :class:`Scenario` is a frozen dataclass of plain scalars/tuples, so it
+
+* round-trips through ``to_dict`` / ``from_dict`` (JSON-safe — presets
+  can live in files, CI matrices, sweep configs);
+* compares by value (two sessions built from equal scenarios see the
+  identical world: every random element is seeded per component);
+* builds every component on demand (``build_topology`` /
+  ``build_profile`` / ``build_devices`` / ``build_mobility``) — the
+  :class:`repro.api.Session` lifecycle calls these, hand-written setups
+  never need to.
+
+Named presets live in a registry (:func:`get_scenario` /
+:func:`list_scenarios` / :func:`register_scenario`); ``paper_fig1`` is
+the paper's Fig. 1 system exactly as ``examples/mobility_sim.py``
+historically wired it — the Session-over-preset trajectory is pinned
+bit-for-bit against that hand-rolled loop in ``tests/test_api.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import CNN_IDS, get_config
+from repro.core.costs import DeviceFleet, LayerProfile
+from repro.core.ligd import LiGDConfig
+from repro.core.mobility import RandomWaypointMobility, StaticMobility
+from repro.core.network import Topology, build_topology
+from repro.core.profile import profile_of
+
+#: mobility-model registry: name -> class with the
+#: (topo, num_users, *, seed, speed_range-ignorable) constructor surface
+MOBILITY_MODELS = {
+    "random_waypoint": RandomWaypointMobility,
+    "static": StaticMobility,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named, serializable MCSA world.
+
+    Field groups (all plain scalars/tuples — see module docstring):
+
+    topology  : ``num_aps`` / ``num_servers`` / ``area`` / ``topo_seed``
+                / ``heterogeneity`` geometry, plus optional scalar
+                per-server budgets ``r_capacity`` / ``B_capacity``
+                (None = uncapacitated; a scalar broadcasts to every
+                server, matching ``build_topology``)
+    model     : ``model`` — a chain-CNN id (``nin``/``yolov2``/``vgg16``)
+                or any transformer arch id from ``repro.configs``;
+                transformers profile at ``model_seq`` prefill tokens
+    fleet     : ``num_users`` devices with ``c_dev`` drawn uniformly from
+                ``c_dev_range`` under ``device_seed``
+    mobility  : ``mobility`` model name (``random_waypoint``/``static``)
+                + ``speed_range`` / ``mobility_seed``
+    planner   : ``ligd`` (the full :class:`LiGDConfig`), admission
+                ``candidates_k``, ``async_replanning`` polarity, and
+                ``admission_aware_handoffs`` (None = auto: on exactly
+                when admission control is active — K > 1 or budgets set)
+    schedule  : ``steps`` mobility steps of ``dt`` seconds each
+    """
+    name: str = "custom"
+    # --- topology ---
+    num_aps: int = 16
+    num_servers: int = 4
+    area: float = 2000.0
+    topo_seed: int = 0
+    heterogeneity: float = 0.5
+    r_capacity: Optional[float] = None
+    B_capacity: Optional[float] = None
+    # --- model / layer profile source ---
+    model: str = "vgg16"
+    model_seq: int = 128
+    # --- fleet ---
+    num_users: int = 16
+    c_dev_range: Tuple[float, float] = (3e9, 6e9)
+    device_seed: int = 0
+    # --- mobility ---
+    mobility: str = "random_waypoint"
+    speed_range: Tuple[float, float] = (1.0, 15.0)
+    mobility_seed: int = 1
+    # --- planner / policy defaults ---
+    ligd: LiGDConfig = LiGDConfig()
+    candidates_k: int = 1
+    async_replanning: bool = False
+    admission_aware_handoffs: Optional[bool] = None
+    # --- schedule ---
+    steps: int = 30
+    dt: float = 60.0
+
+    # ------------------------------------------------------------------
+    # serialization
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain JSON-safe dict (tuples become lists; the nested
+        LiGDConfig becomes its own dict)."""
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, tuple):
+                d[k] = list(v)
+        d["ligd"] = {k: (list(v) if isinstance(v, tuple) else v)
+                     for k, v in dataclasses.asdict(self.ligd).items()}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        """Inverse of :meth:`to_dict`: ``Scenario.from_dict(s.to_dict())
+        == s`` for every scenario (tested over all registered presets).
+        Unknown keys are rejected loudly."""
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise TypeError(f"unknown Scenario fields: {sorted(unknown)}")
+        ligd = d.get("ligd", LiGDConfig())
+        if isinstance(ligd, dict):
+            ligd = dict(ligd)
+            if "init" in ligd:
+                ligd["init"] = tuple(ligd["init"])
+            ligd = LiGDConfig(**ligd)
+        d["ligd"] = ligd
+        for k in ("c_dev_range", "speed_range"):
+            if k in d:
+                d[k] = tuple(d[k])
+        return cls(**d)
+
+    def replace(self, **changes) -> "Scenario":
+        """A modified copy (``dataclasses.replace`` spelled as a method
+        so call sites don't need the import)."""
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------------
+    # component builders (Session calls these; scripts may too)
+    # ------------------------------------------------------------------
+    def build_topology(self) -> Topology:
+        return build_topology(
+            self.num_aps, self.num_servers, area=self.area,
+            seed=self.topo_seed, heterogeneity=self.heterogeneity,
+            r_capacity=self.r_capacity, B_capacity=self.B_capacity)
+
+    def build_profile(self) -> LayerProfile:
+        cfg = get_config(self.model)
+        if self.model in CNN_IDS:
+            return profile_of(cfg)
+        return profile_of(cfg, seq=self.model_seq, mode="prefill")
+
+    def build_devices(self) -> DeviceFleet:
+        rng = np.random.default_rng(self.device_seed)
+        return DeviceFleet(
+            c_dev=rng.uniform(*self.c_dev_range, self.num_users))
+
+    def build_mobility(self, topo: Topology):
+        try:
+            model = MOBILITY_MODELS[self.mobility]
+        except KeyError:
+            raise KeyError(
+                f"unknown mobility model {self.mobility!r}; available: "
+                f"{sorted(MOBILITY_MODELS)}") from None
+        kw = {"seed": self.mobility_seed}
+        if model is RandomWaypointMobility:
+            kw["speed_range"] = self.speed_range
+        return model(topo, self.num_users, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Preset registry
+# ---------------------------------------------------------------------------
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    """Register (or overwrite) a named preset; returns it unchanged."""
+    _SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; available: "
+                       f"{sorted(_SCENARIOS)}") from None
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_SCENARIOS))
+
+
+# The paper's Fig. 1 system exactly as examples/mobility_sim.py wired it
+# pre-redesign: 25 APs / 3 heterogeneous servers, YOLOv2 stream, 10
+# vehicles at 8-25 m/s, one MLi-GD batch per simulated minute.  The
+# Session trajectory over this preset (K=1, sync) is pinned BIT-FOR-BIT
+# against the hand-rolled loop in tests/test_api.py — treat every field
+# as load-bearing.
+register_scenario(Scenario(
+    name="paper_fig1", num_aps=25, num_servers=3, topo_seed=0,
+    model="yolov2", num_users=10, device_seed=0,
+    speed_range=(8.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=250), steps=30, dt=60.0))
+
+# Dense city core: many APs, short cells, pedestrian-to-scooter speeds,
+# a big fleet — the regime where handoff batches are large but shallow.
+register_scenario(Scenario(
+    name="dense_urban", num_aps=64, num_servers=8, area=1600.0,
+    topo_seed=2, model="vgg16", num_users=2000,
+    speed_range=(1.0, 8.0), mobility_seed=3,
+    ligd=LiGDConfig(max_iters=120), steps=20, dt=30.0))
+
+# Sparse corridor: few APs over a long stretch, vehicular speeds, short
+# dt — the frequent-handoff regime where MLi-GD's relay-back matters.
+register_scenario(Scenario(
+    name="highway", num_aps=12, num_servers=3, area=6000.0,
+    topo_seed=5, model="yolov2", num_users=200,
+    speed_range=(25.0, 40.0), mobility_seed=7,
+    ligd=LiGDConfig(max_iters=150), steps=40, dt=10.0))
+
+# Admission-control showcase: K=3 candidate servers under a per-server
+# compute budget tight enough to force spills (cf. the fleet bench's
+# admission track), admission-aware handoff detection auto-on.
+register_scenario(Scenario(
+    name="capacitated_k3", num_aps=25, num_servers=4, topo_seed=0,
+    model="nin", num_users=500, r_capacity=200.0, candidates_k=3,
+    speed_range=(8.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=100), steps=10, dt=30.0))
+
+# The paper's static Figs. 3-8 setting inside the same lifecycle: users
+# never move, so the session is one Li-GD plan + empty mobility steps.
+register_scenario(Scenario(
+    name="static_no_mobility", num_aps=16, num_servers=4, topo_seed=0,
+    model="vgg16", num_users=64, mobility="static",
+    ligd=LiGDConfig(max_iters=300), steps=5, dt=60.0))
+
+# Production-scale smoke: 100k users on the fast NiN profile with async
+# replanning hiding each step's MLi-GD solve behind the mobility numpy.
+register_scenario(Scenario(
+    name="megafleet_100k", num_aps=25, num_servers=4, topo_seed=0,
+    model="nin", num_users=100_000, speed_range=(10.0, 30.0),
+    mobility_seed=2, ligd=LiGDConfig(max_iters=60),
+    async_replanning=True, steps=5, dt=30.0))

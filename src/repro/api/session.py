@@ -1,0 +1,250 @@
+"""The one stepped lifecycle for the whole MCSA system.
+
+``Session(scenario, policy)`` builds the world a :class:`Scenario`
+declares (topology, layer profile, device fleet, mobility model),
+plans it with the policy, and then owns the per-step loop that used to
+be hand-rolled in every example and benchmark::
+
+    mobility.step -> HandoffBatch -> policy.on_handoffs -> FleetState
+
+including the async-replanning drain semantics (``run`` drains at the
+end; ``step`` never does — call :meth:`drain` explicitly between steps
+if you need the table fully up to date) and admission-aware handoff
+detection (the mobility model receives the fleet's admitted-server
+column whenever admission control is active, so events are emitted —
+and relay-back paths priced — against the server a user was actually
+admitted to).
+
+The step order is EXACTLY the historical loop (mobility step, then
+handoff replan, then accounting), pinned bit-for-bit against the
+pre-redesign ``examples/mobility_sim.py`` trajectory over the
+``paper_fig1`` preset in ``tests/test_api.py``.
+
+Per-step accounting accumulates as struct-of-arrays and comes back from
+:meth:`Session.metrics` as a :class:`SessionMetrics`; wall-clock spent
+inside the plan / step / drain calls accumulates in
+:attr:`Session.timings` (benchmarks read it instead of wrapping their
+own timers around a private loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.mobility import HandoffBatch
+
+from .policies import Policy, make_policy
+from .scenario import Scenario
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one :meth:`Session.step` did.
+
+    t         : simulation time at the START of the step (s)
+    events    : the step's handoff batch (possibly empty)
+    result    : the applied solver result (e.g. MLiGDResult with (E,)
+                leaves) when the policy replanned synchronously; None
+                when there were no events, the policy had nothing to
+                report, or the solve is still in flight (async)
+    in_flight : True while a replan is dispatched but not yet applied
+                (async replanning) — whether dispatched by this step or
+                an earlier one: the fleet table stays stale until the
+                next event-bearing step or :meth:`Session.drain`
+    """
+    t: float
+    events: HandoffBatch
+    result: Optional[object]
+    in_flight: bool = False
+
+
+@dataclasses.dataclass
+class SessionMetrics:
+    """Struct-of-arrays per-step accounting, one row per executed step.
+
+    Fleet aggregates are read AFTER the step's replanning was applied —
+    under async replanning they therefore see the one-step-stale table,
+    exactly what a live dashboard sampling the fleet would see.
+
+    t / handoffs        : (S,) step start times / handoff counts
+    resplits / relays   : (S,) synchronously applied MLi-GD decisions
+                          (-1 where unknown: solve still in flight, or a
+                          policy that reports no per-event decisions)
+    mean_T/mean_E/mean_C: (S,) fleet-mean delay (s) / device energy (J)
+                          / renting cost ($/round)
+    admission           : static-plan admission summary dict (spilled /
+                          rejected counts, per-server loads) or None
+                          when admission control was inactive
+    """
+    t: np.ndarray
+    handoffs: np.ndarray
+    resplits: np.ndarray
+    relays: np.ndarray
+    mean_T: np.ndarray
+    mean_E: np.ndarray
+    mean_C: np.ndarray
+    admission: Optional[dict] = None
+
+
+def _fleet_mean(fleet, field: str) -> float:
+    col = getattr(fleet, field, None)
+    if isinstance(col, np.ndarray):
+        return float(col.mean())
+    return float("nan")               # exotic fleets (e.g. plan lists)
+
+
+class Session:
+    """One scenario, one policy, one fleet — stepped to completion.
+
+    Parameters
+    ----------
+    scenario : the declarative world (see :class:`Scenario`)
+    policy   : anything :func:`repro.api.make_policy` resolves — None
+               (default: the MCSA planner), a registry name, a Policy
+               class, or a prebuilt instance
+    topo / profile / devices / mobility : optional prebuilt components
+               overriding the scenario's builders (benchmarks share one
+               topology across many sessions; tests inject fixtures)
+
+    Attributes: ``fleet`` (the live plan table), ``policy``, ``topo``,
+    ``profile``, ``devices``, ``mobility``, ``steps_taken``,
+    ``total_handoffs``, ``timings`` ({"plan_s", "steps_s", "drain_s"}
+    cumulative wall-clock inside the component calls).
+    """
+
+    def __init__(self, scenario: Scenario, policy=None, *,
+                 topo=None, profile=None, devices=None, mobility=None):
+        self.scenario = scenario
+        self.topo = topo if topo is not None else scenario.build_topology()
+        self.profile = (profile if profile is not None
+                        else scenario.build_profile())
+        self.devices = (devices if devices is not None
+                        else scenario.build_devices())
+        self.mobility = (mobility if mobility is not None
+                         else scenario.build_mobility(self.topo))
+        self.policy: Policy = make_policy(policy, scenario, self.profile,
+                                          self.topo)
+        aware = scenario.admission_aware_handoffs
+        if aware is None:   # auto: exactly when admission control is on
+            aware = scenario.candidates_k > 1 or self.topo.capacitated
+        self._admission_aware = bool(aware)
+
+        self.steps_taken = 0
+        self.total_handoffs = 0
+        self.timings = {"plan_s": 0.0, "steps_s": 0.0, "drain_s": 0.0}
+        self._log = {k: [] for k in ("t", "handoffs", "resplits", "relays",
+                                     "mean_T", "mean_E", "mean_C")}
+
+        t0 = time.perf_counter()
+        aps = self.topo.nearest_ap(self.mobility.positions())
+        self.fleet = self.policy.plan(self.devices, aps)
+        self.timings["plan_s"] = time.perf_counter() - t0
+        self.admission = self._admission_summary()
+
+    # ------------------------------------------------------------------
+    def _admission_summary(self) -> Optional[dict]:
+        rep = getattr(self.policy, "last_admission", None)
+        if rep is None:
+            return None
+        return {
+            "users_per_server": rep.users_per_server.tolist(),
+            "spilled": int(((rep.spills > 0) & ~rep.rejected).sum()),
+            "rejected": int(rep.rejected.sum()),
+            "r_load": rep.r_load.tolist(),
+            "B_load": rep.B_load.tolist(),
+        }
+
+    @property
+    def t(self) -> float:
+        """Simulation time at the start of the NEXT step (s)."""
+        return self.steps_taken * self.scenario.dt
+
+    # ------------------------------------------------------------------
+    def step(self) -> StepReport:
+        """One lifecycle step: advance mobility, replan the handoffs,
+        record accounting.  Returns a :class:`StepReport`."""
+        sc = self.scenario
+        t = self.t
+        admitted = None
+        if self._admission_aware:
+            # admission-aware detection must key on the CURRENT admitted
+            # servers: apply any in-flight replan first, else this step's
+            # hops_back/suppression would reference servers the replan
+            # just moved users off (mispricing the relay-back vertex).
+            # This shortens the async overlap window for capacitated /
+            # K>1 scenarios — pricing consistency wins there; the K=1
+            # overlap path (e.g. megafleet_100k) is unaffected.
+            if getattr(self.policy, "pending", False):
+                self.drain()
+            admitted = getattr(self.fleet, "server", None)
+
+        t0 = time.perf_counter()
+        batch = self.mobility.step(sc.dt, t, admitted=admitted) \
+            if admitted is not None else self.mobility.step(sc.dt, t)
+        result = None
+        if len(batch):
+            result = self.policy.on_handoffs(batch, self.devices,
+                                             self.fleet)
+        # the Policy in-flight contract: a truthy `pending` means a
+        # dispatched replan (this step's or an earlier one's — handoff-
+        # free steps don't apply it) has not yet reached the fleet table
+        in_flight = bool(getattr(self.policy, "pending", False))
+        if in_flight:
+            result = None             # forcing it would kill the overlap
+        self.timings["steps_s"] += time.perf_counter() - t0
+
+        self.steps_taken += 1
+        self.total_handoffs += len(batch)
+        log = self._log
+        log["t"].append(t)
+        log["handoffs"].append(len(batch))
+        R = getattr(result, "R", None)
+        if R is not None:
+            relays = int(np.asarray(R).sum())
+            log["relays"].append(relays)
+            log["resplits"].append(len(batch) - relays)
+        elif len(batch) == 0:
+            log["relays"].append(0)
+            log["resplits"].append(0)
+        else:                         # in flight / decision-free policy
+            log["relays"].append(-1)
+            log["resplits"].append(-1)
+        for f in ("T", "E", "C"):
+            log[f"mean_{f}"].append(_fleet_mean(self.fleet, f))
+        return StepReport(t=t, events=batch, result=result,
+                          in_flight=in_flight)
+
+    def run(self, n: Optional[int] = None) -> SessionMetrics:
+        """Step ``n`` times (default: the scenario's remaining schedule),
+        drain any in-flight async replan, and return the metrics."""
+        if n is None:
+            n = max(0, self.scenario.steps - self.steps_taken)
+        for _ in range(n):
+            self.step()
+        self.drain()
+        return self.metrics()
+
+    def drain(self):
+        """Force + scatter any in-flight async replan (no-op for
+        synchronous policies).  Returns the applied solver result, if
+        any."""
+        t0 = time.perf_counter()
+        res = self.policy.drain(self.fleet)
+        self.timings["drain_s"] += time.perf_counter() - t0
+        return res
+
+    def metrics(self) -> SessionMetrics:
+        """The per-step accounting so far (see :class:`SessionMetrics`)."""
+        log = self._log
+        return SessionMetrics(
+            t=np.asarray(log["t"], np.float64),
+            handoffs=np.asarray(log["handoffs"], np.int64),
+            resplits=np.asarray(log["resplits"], np.int64),
+            relays=np.asarray(log["relays"], np.int64),
+            mean_T=np.asarray(log["mean_T"], np.float64),
+            mean_E=np.asarray(log["mean_E"], np.float64),
+            mean_C=np.asarray(log["mean_C"], np.float64),
+            admission=self.admission)

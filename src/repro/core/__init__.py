@@ -2,7 +2,12 @@
 Li-GD and MLi-GD solvers (Algorithms 1–2), network topology, mobility,
 baselines, and the planner tying them together, plus the multi-server
 admission control layered on top (see docs/ARCHITECTURE.md for how the
-pieces compose)."""
+pieces compose).
+
+``repro.core`` is the stable INTERNAL layer; the supported front door is
+``repro.api`` — declarative ``Scenario`` presets, the ``Policy``
+protocol, and the ``Session`` stepped lifecycle that owns the
+mobility → handoff → replan → scatter loop."""
 from .admission import AdmissionReport, admit_waterfill
 from .costs import (DeviceFleet, DeviceParams, EdgeParams, LayerProfile,
                     dev_dict, edge_dict, stack_devices, stack_edges,
@@ -11,10 +16,11 @@ from .ligd import LiGDConfig, LiGDResult, solve_ligd, solve_ligd_batch_jit
 from .mligd import (MLiGDResult, orig_strategy_dict, solve_mligd,
                     solve_mligd_batch_jit)
 from .network import Topology, build_topology
-from .mobility import HandoffBatch, HandoffEvent, RandomWaypointMobility
+from .mobility import (HandoffBatch, HandoffEvent, RandomWaypointMobility,
+                       StaticMobility)
 from .profile import profile_chain_cnn, profile_of, profile_transformer
 from .baselines import BASELINES, run_baseline_batch
-from .planner import FleetState, MCSAPlanner, UserPlan
+from .planner import PLAN_FIELDS, FleetState, MCSAPlanner, UserPlan
 
 __all__ = [
     "AdmissionReport", "admit_waterfill",
@@ -23,7 +29,8 @@ __all__ = [
     "LiGDConfig", "LiGDResult", "solve_ligd", "solve_ligd_batch_jit",
     "MLiGDResult", "orig_strategy_dict", "solve_mligd",
     "solve_mligd_batch_jit", "Topology", "build_topology", "HandoffBatch",
-    "HandoffEvent", "RandomWaypointMobility", "profile_chain_cnn",
-    "profile_of", "profile_transformer", "BASELINES", "run_baseline_batch",
-    "FleetState", "MCSAPlanner", "UserPlan",
+    "HandoffEvent", "RandomWaypointMobility", "StaticMobility",
+    "profile_chain_cnn", "profile_of", "profile_transformer", "BASELINES",
+    "run_baseline_batch", "FleetState", "MCSAPlanner", "PLAN_FIELDS",
+    "UserPlan",
 ]

@@ -29,7 +29,9 @@ function of (candidates, U, demands, budgets) — replanning the same fleet
 twice yields the identical assignment.
 
 See docs/ARCHITECTURE.md ("Admission control") for where this sits in the
-control-plane dataflow.
+control-plane dataflow.  Admission turns on from the front door via
+``repro.api.Scenario`` (``candidates_k`` / ``r_capacity`` /
+``B_capacity`` fields — e.g. the ``capacitated_k3`` preset).
 """
 from __future__ import annotations
 

@@ -12,6 +12,11 @@ renting cost is the highest") and partial offloads rent proportionally.
 DNN-Surgery additionally caps the rentable units (its resource-limitation
 assumption), making it slightly slower but cheaper than Neurosurgeon —
 exactly the orderings in Figs. 3–8.
+
+These per-split evaluators are the numeric layer; ``repro.api.policies``
+re-homes them as fleet-level ``Policy`` implementations (EdgeOnlyPolicy,
+DeviceOnlyPolicy, GreedyNearestPolicy, ... plus a CloudPolicy) so a
+baseline swaps against the MCSA planner in one line of ``repro.api``.
 """
 from __future__ import annotations
 

@@ -12,17 +12,27 @@ is a handful of array ops, never a Python loop.  Handoffs come back as a
 :class:`HandoffBatch` of parallel arrays; iterating a batch yields legacy
 :class:`HandoffEvent` views for display/debug code.
 
-Handoff detection compares against the NEAREST server per AP
-(``topo.ap_server``), independent of which candidate the planner's
-admission control actually admitted a user to — coverage is a radio
-property, admission a resource one.  The planner re-resolves the serving
-server on each event (candidate-aware when ``candidates_k > 1``); see
-docs/ARCHITECTURE.md for the step-by-step dataflow.
+Handoff detection TRIGGERS on nearest-server coverage changes
+(``topo.ap_server``) — coverage is a radio property.  Which server an
+event is emitted AGAINST is a resource property: pass the fleet's
+admitted-server column as ``step(..., admitted=fleet.server)`` and each
+event's ``old_server`` / ``hops_back`` reference the server the user was
+actually ADMITTED to (the strategy MLi-GD prices the relay-back against),
+and coverage changes INTO the admitted server's own coverage are
+suppressed (arriving home is not a handoff).  Without ``admitted`` the
+detector keys on nearest-server coverage alone — the paper's
+one-server-per-AP model, where admitted == nearest.  ``repro.api.Session``
+passes the column automatically whenever admission control is active;
+see docs/ARCHITECTURE.md for the step-by-step dataflow.
+
+This module is internal plumbing: the supported front door is
+``repro.api`` (Scenario presets pick the mobility model by name and
+Session owns the step loop).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -122,6 +132,13 @@ class HandoffBatch:
                    hops_new=cat("hops_new"), hops_back=cat("hops_back"))
 
 
+def _deploy_area(topo: Topology) -> np.ndarray:
+    """The (2,) rectangle users are placed (and re-waypointed) over —
+    the AP deployment's bounding box plus a 5% margin, shared by every
+    mobility model so fleets built from one Scenario see one area."""
+    return topo.ap_xy.max(0) * 1.05
+
+
 class RandomWaypointMobility:
     """Classic random-waypoint over the topology area, vectorized.
 
@@ -135,7 +152,7 @@ class RandomWaypointMobility:
         self.topo = topo
         self.rng = np.random.default_rng(seed)
         self.speed_range = speed_range
-        area = topo.ap_xy.max(0) * 1.05
+        area = _deploy_area(topo)
         self.area = area
         self.xy = self.rng.uniform(0, 1, (num_users, 2)) * area
         self.waypoint = self.rng.uniform(0, 1, (num_users, 2)) * area
@@ -150,8 +167,18 @@ class RandomWaypointMobility:
     def positions(self) -> np.ndarray:
         return self.xy
 
-    def step(self, dt: float, t: float) -> HandoffBatch:
-        """Advance all users by dt seconds; return the step's handoffs."""
+    def step(self, dt: float, t: float,
+             admitted: Optional[np.ndarray] = None) -> HandoffBatch:
+        """Advance all users by dt seconds; return the step's handoffs.
+
+        ``admitted``: optional (X,) admitted-server column (e.g.
+        ``FleetState.server``).  Detection still TRIGGERS on
+        nearest-server coverage changes, but events are emitted AGAINST
+        the admitted server: ``old_server`` / ``hops_back`` reference
+        ``admitted[user]`` (what the frozen original strategy is priced
+        against), and coverage changes into the admitted server's own
+        coverage are suppressed.  ``None`` keeps the paper's
+        nearest-server keying (admitted == nearest under K=1)."""
         to_wp = self.waypoint - self.xy
         dist = np.linalg.norm(to_wp, axis=-1)
         travel = self.speed * dt
@@ -168,17 +195,52 @@ class RandomWaypointMobility:
         new_ap = np.asarray(self.topo.nearest_ap(self.xy))
         new_server = np.asarray(self.topo.ap_server[new_ap])
         moved = new_server != self.server
+        if admitted is None:
+            old = self.server
+        else:
+            old = np.asarray(admitted, np.int64)
+            moved &= new_server != old          # arriving home: no handoff
         idx = np.nonzero(moved)[0]
         batch = HandoffBatch(
             t=t,
             user=idx,
-            old_server=self.server[idx].astype(np.int64),
+            old_server=old[idx].astype(np.int64),
             new_server=new_server[idx].astype(np.int64),
             new_ap=new_ap[idx].astype(np.int64),
             hops_new=np.asarray(
                 self.topo.hops[new_ap[idx], new_server[idx]], np.int64),
             hops_back=np.asarray(
-                self.topo.hops[new_ap[idx], self.server[idx]], np.int64))
+                self.topo.hops[new_ap[idx], old[idx]], np.int64))
         self.ap = new_ap
-        self.server = np.where(moved, new_server, self.server)
+        self.server = new_server                # nearest-coverage tracking
         return batch
+
+
+class StaticMobility:
+    """Users that never move: random initial placement, zero handoffs.
+
+    The ``"static"`` mobility model of ``repro.api.Scenario`` — same
+    public surface as :class:`RandomWaypointMobility` (``xy``, ``ap``,
+    ``server``, ``positions()``, ``step()``), with ``step`` always
+    returning an empty :class:`HandoffBatch`.  Reproduces the paper's
+    static Figs. 3–8 setting inside the same Session lifecycle.
+    """
+
+    def __init__(self, topo: Topology, num_users: int, *,
+                 seed: int = 0, **_ignored):
+        self.topo = topo
+        rng = np.random.default_rng(seed)
+        self.xy = rng.uniform(0, 1, (num_users, 2)) * _deploy_area(topo)
+        self.ap = np.asarray(topo.nearest_ap(self.xy))
+        self.server = np.asarray(topo.ap_server[self.ap])
+
+    @property
+    def num_users(self) -> int:
+        return len(self.xy)
+
+    def positions(self) -> np.ndarray:
+        return self.xy
+
+    def step(self, dt: float, t: float,
+             admitted: Optional[np.ndarray] = None) -> HandoffBatch:
+        return HandoffBatch.empty(t)

@@ -15,6 +15,8 @@ server saturates; see docs/ARCHITECTURE.md ("Admission control") for the
 full control-plane dataflow.
 
 Pure numpy — topology is static control-plane state, not jitted compute.
+Built directly by :func:`build_topology` or declaratively from a
+``repro.api.Scenario`` (geometry + budgets are scenario fields).
 """
 from __future__ import annotations
 

@@ -46,6 +46,11 @@ docs/ARCHITECTURE.md for the dataflow):
   fleet table one step late — at the next ``on_handoffs`` call or an
   explicit :meth:`MCSAPlanner.drain`.  ``sync=True`` preserves the
   original blocking semantics exactly.
+
+This module is internal plumbing: the supported front door is
+``repro.api`` (declarative :class:`~repro.api.Scenario`, the
+:class:`~repro.api.Policy` protocol that :class:`MCSAPlanner`
+implements, and the :class:`~repro.api.Session` stepped lifecycle).
 """
 from __future__ import annotations
 
@@ -65,21 +70,6 @@ from .ligd import LiGDConfig, LiGDResult, solve_ligd_batch, \
     solve_ligd_batch_jit
 from .mligd import MLiGDResult, solve_mligd_batch_jit
 from .mobility import HandoffBatch, HandoffEvent
-
-
-@dataclasses.dataclass
-class UserPlan:
-    """Scalar view of one user's plan (display/compat — the solve path
-    never materializes these)."""
-    server: int
-    split: int
-    B: float
-    r: float
-    U: float
-    T: float
-    E: float
-    C: float
-    R: int = 0                    # last mobility decision
 
 
 @dataclasses.dataclass
@@ -134,16 +124,49 @@ class FleetState:
     def __len__(self) -> int:
         return len(self.server)
 
-    def __getitem__(self, i: int) -> UserPlan:
-        return UserPlan(server=int(self.server[i]), split=int(self.split[i]),
-                        B=float(self.B[i]), r=float(self.r[i]),
-                        U=float(self.U[i]), T=float(self.T[i]),
-                        E=float(self.E[i]), C=float(self.C[i]),
-                        R=int(self.R[i]))
+    def __getitem__(self, i: int) -> "UserPlan":
+        # ndarray.item() yields a native int/float per the column dtype,
+        # so new plan-table columns flow into the scalar view unchanged.
+        return UserPlan(**{name: getattr(self, name)[i].item()
+                           for name in PLAN_FIELDS})
+
+    def scatter(self, users: np.ndarray, server: np.ndarray, res,
+                R=None) -> None:
+        """Write one result batch into rows ``users``: ``server`` from
+        the argument (callers resolve relay-backs etc.), every other
+        column from the same-named attribute of ``res`` (so new plan
+        columns flow through automatically), ``R`` from the override
+        when given (policies without a relay concept pass 0)."""
+        self.server[users] = np.asarray(server, np.int64)
+        for name in PLAN_FIELDS:
+            if name == "server":
+                continue
+            col = getattr(self, name)
+            val = R if name == "R" and R is not None \
+                else getattr(res, name)
+            col[users] = np.asarray(val, col.dtype)
 
     def __iter__(self):
         for i in range(len(self)):
             yield self[i]
+
+
+#: Plan-table column names, in declaration order — THE single source of
+#: truth for what a plan row holds (UserPlan is generated from it).
+PLAN_FIELDS = tuple(f.name for f in dataclasses.fields(FleetState))
+
+# Scalar view of one user's plan (display/compat — the solve path never
+# materializes these).  Generated from FleetState's own fields so a new
+# plan-table column can never silently desync the two; every field
+# defaults to 0 (matching the old ``R: int = 0``).
+UserPlan = dataclasses.make_dataclass(
+    "UserPlan",
+    [(name, object, dataclasses.field(default=0)) for name in PLAN_FIELDS])
+UserPlan.__doc__ = (
+    "Scalar view of one user's plan — one native int/float per "
+    "FleetState column (see FleetState docstring for field semantics). "
+    "Generated from PLAN_FIELDS; display/compat only, the solve path "
+    "never materializes these.")
 
 
 def _pow2_bucket(n: int, floor: int = 8) -> int:
@@ -222,6 +245,13 @@ class MCSAPlanner:
         return devs_s
 
     # ------------------------------------------------------------------
+    def plan(self, devices: Devices, user_aps: np.ndarray,
+             env=None) -> FleetState:
+        """The ``repro.api.Policy`` entry point: plan every user and
+        return the scattered :class:`FleetState` (use :meth:`plan_static`
+        when you also need the raw batched LiGDResult / server ids)."""
+        return self.plan_static(devices, user_aps, env=env)[2]
+
     def plan_static(self, devices: Devices, user_aps: np.ndarray,
                     env=None, candidates_k: Optional[int] = None) -> tuple:
         """Plan every user in one vectorized call.
@@ -486,6 +516,13 @@ class MCSAPlanner:
             self._apply_pending(fleet)
         return res
 
+    @property
+    def pending(self) -> bool:
+        """True while an async replan is dispatched but not yet applied
+        to the fleet table — the ``repro.api.Policy`` in-flight signal
+        (``repro.api.Session`` reads it to avoid forcing the solve)."""
+        return self._pending is not None
+
     def drain(self, fleet: FleetState) -> Optional[MLiGDResult]:
         """Force and scatter the in-flight async replan, if any.  Call
         once after the mobility loop (or before reading ``fleet`` between
@@ -499,16 +536,9 @@ class MCSAPlanner:
             return None
         res, users = p.res, p.users
         take_back = np.asarray(res.R, bool)
-        fleet.server[users] = np.where(take_back, p.orig_servers,
-                                       np.asarray(p.new_server))
-        fleet.split[users] = np.asarray(res.split, np.int64)
-        fleet.B[users] = np.asarray(res.B, np.float64)
-        fleet.r[users] = np.asarray(res.r, np.float64)
-        fleet.U[users] = np.asarray(res.U, np.float64)
-        fleet.T[users] = np.asarray(res.T, np.float64)
-        fleet.E[users] = np.asarray(res.E, np.float64)
-        fleet.C[users] = np.asarray(res.C, np.float64)
-        fleet.R[users] = np.asarray(res.R, np.int64)
+        fleet.scatter(users,
+                      np.where(take_back, p.orig_servers,
+                               np.asarray(p.new_server)), res)
         return res
 
     # ------------------------------------------------------------------

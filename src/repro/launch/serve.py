@@ -12,6 +12,11 @@ This is the paper's full system running end-to-end (CPU-scale):
   6. per-round delay/energy/cost are accounted with the paper's models and
      printed next to Device-Only / Edge-Only / Neurosurgeon baselines.
 
+The world (topology, mobility, planner) is declared as a ``repro.api``
+Scenario and stepped by a Session; the serving profile (built from the
+REDUCED model config) and the heterogeneous device fleet are injected as
+prebuilt components.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --users 8 \
       --rounds 5 --steps 16
@@ -25,12 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Scenario, Session
 from repro.configs import get_config, reduced
-from repro.core.costs import DeviceParams
+from repro.core.costs import DeviceFleet
 from repro.core.ligd import LiGDConfig
-from repro.core.mobility import RandomWaypointMobility
-from repro.core.network import build_topology
-from repro.core.planner import MCSAPlanner
 from repro.core.profile import profile_transformer
 from repro.models import transformer as tfm
 from repro.runtime.meshenv import CPU_ENV
@@ -56,20 +59,24 @@ def main(argv=None):
     params, _ = tfm.init_lm(cfg, jax.random.PRNGKey(0), env)
     server = SplitServer(cfg, params, env)
 
-    topo = build_topology(args.aps, args.servers, seed=args.seed)
-    profile = profile_transformer(cfg, seq=args.prompt_len, batch=1,
-                                  mode="prefill")
-    planner = MCSAPlanner(profile, topo, LiGDConfig(max_iters=150))
-    mob = RandomWaypointMobility(topo, args.users, seed=args.seed + 1)
+    # the world as a Scenario; the profile comes from the REDUCED serving
+    # config (split points must index the model actually being served),
+    # so it is injected alongside the heterogeneous device fleet
+    scenario = Scenario(
+        name="serve", num_aps=args.aps, num_servers=args.servers,
+        topo_seed=args.seed, model=args.arch, model_seq=args.prompt_len,
+        num_users=args.users, mobility_seed=args.seed + 1,
+        ligd=LiGDConfig(max_iters=150), steps=args.rounds, dt=30.0)
     rng = np.random.default_rng(args.seed)
-    devices = [DeviceParams(c_dev=float(rng.uniform(10e9, 60e9)),
-                            p_tx=float(rng.uniform(0.2, 1.0)))
-               for _ in range(args.users)]
-
-    aps = topo.nearest_ap(mob.positions())
-    res, servers, plans = planner.plan_static(devices, aps)
+    sess = Session(
+        scenario,
+        profile=profile_transformer(cfg, seq=args.prompt_len, batch=1,
+                                    mode="prefill"),
+        devices=DeviceFleet(
+            c_dev=rng.uniform(10e9, 60e9, args.users),
+            p_tx=rng.uniform(0.2, 1.0, args.users)))
     print(f"== initial plan (arch={cfg.name}, M={cfg.num_layers} blocks) ==")
-    for i, p in enumerate(plans):
+    for i, p in enumerate(sess.fleet):
         print(f"  user{i}: server={p.server} split={p.split} "
               f"B={p.B / 1e6:.1f}MHz r={p.r:.1f} U={p.U:.4f}")
 
@@ -78,30 +85,28 @@ def main(argv=None):
         prompts = jnp.asarray(
             rng.integers(0, cfg.vocab_size,
                          (args.users, args.prompt_len)), jnp.int32)
-        for i, plan in enumerate(plans):
+        for i, plan in enumerate(sess.fleet):
             toks = server.generate(prompts[i:i + 1], plan.split,
                                    max_new=args.steps)
             assert toks.shape == (1, args.steps)
         wall = time.time() - t0
-        events = mob.step(30.0, rnd * 30.0)
-        if events:
-            planner.on_handoffs(events, devices, plans)
-            moved = {e.user: plans[e.user] for e in events}
-            for u, p in moved.items():
-                act = "relay-back" if p.R else "re-split"
-                print(f"  [handoff] user{u} -> {act} "
-                      f"(split={p.split}, server={p.server})")
+        report = sess.step()
+        for ev in report.events:
+            p = sess.fleet[ev.user]
+            act = "relay-back" if p.R else "re-split"
+            print(f"  [handoff] user{ev.user} -> {act} "
+                  f"(split={p.split}, server={p.server})")
         print(f"round {rnd}: {args.users} users × {args.steps} tokens "
-              f"in {wall:.1f}s; {len(events)} handoffs")
+              f"in {wall:.1f}s; {len(report.events)} handoffs")
 
     # baseline comparison (paper Figs. 3-5 quantities, planner accounting)
     print("\n== per-strategy mean (delay s, energy J, rent $/round) ==")
-    aps = topo.nearest_ap(mob.positions())
+    aps = sess.topo.nearest_ap(sess.mobility.positions())
     for name in ("device_only", "edge_only", "neurosurgeon", "dnn_surgery"):
-        b = planner.run_baseline(name, devices, aps)
+        b = sess.policy.run_baseline(name, sess.devices, aps)
         print(f"  {name:13s} T={float(np.mean(b.T)):.4f} "
               f"E={float(np.mean(b.E)):.4f} C={float(np.mean(b.C)):.6f}")
-    res, _, _ = planner.plan_static(devices, aps)
+    res, _, _ = sess.policy.plan_static(sess.devices, aps)
     print(f"  {'mcsa':13s} T={float(np.mean(res.T)):.4f} "
           f"E={float(np.mean(res.E)):.4f} C={float(np.mean(res.C)):.6f}")
     return 0
