@@ -8,7 +8,7 @@ declares worlds (Scenario overrides + prebuilt components) and reads
 ``session.timings``; even the seed planner under measurement is driven
 through Session behind a thin Policy adapter.
 
-Six measurements:
+Seven measurements:
 
   1. **10k-user head-to-head** — identical scenario (same topology,
      devices, mobility trace) planned by (a) the seed path: one Python
@@ -41,7 +41,16 @@ Six measurements:
      ``overlap_win`` is the steps-loop speedup from hiding the MLi-GD
      solve behind the waypoint numpy work.
 
-  6. **scenario matrix** — every registered Scenario preset, capped to
+  6. **chaos / evacuation** — the sustained-mobility world (K=3
+     candidates) with a scripted kill of the most-loaded server at
+     t=dt: the ``chaos`` track records the evacuation-replan latency at
+     ``--big-users`` scale (the ``faults_s`` delta of the kill step),
+     how many users were evacuated vs degraded, and the steady-state
+     mean-cost overhead vs the identical no-fault run during the
+     outage window.  The zero-stranded-users invariant is asserted at
+     every step.
+
+  7. **scenario matrix** — every registered Scenario preset, capped to
      ``--matrix-users`` users, planned + stepped once through Session:
      a smoke that each named world stays plannable, with per-preset
      plan/step timings in the ``scenario_matrix`` track.
@@ -63,7 +72,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Scenario, Session, get_scenario, list_scenarios
+from repro.api import (FaultConfig, Scenario, Session, get_scenario,
+                       list_scenarios)
 from repro.configs.chain_cnns import nin
 from repro.core.costs import (DeviceFleet, DeviceParams, LayerProfile,
                               edge_dict, stack_devices, stack_edges)
@@ -333,6 +343,66 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
                                 "overlap_win": overlap_win}
     print(f"[async] {big_users} users, {steps} steps: sync {t_sync:.2f}s "
           f"vs async {t_async:.2f}s -> {overlap_win:.2f}x overlap win")
+
+    # ---- chaos: scripted kill at big_users scale -> evacuation latency
+    # and cost overhead vs the identical no-fault run.  Sessions build
+    # their own topology here: apply_faults mutates it in place, so the
+    # bench's shared `topo` must stay out of this track.
+    chaos_base = Scenario(
+        name="fleet_bench_chaos", num_aps=25, num_servers=4, topo_seed=0,
+        num_users=big_users, ligd=cfg, mobility_seed=2,
+        speed_range=(10.0, 30.0), candidates_k=3, steps=steps, dt=dt)
+    probe = Session(chaos_base.replace(num_users=1024, steps=1))
+    p_offl = probe.fleet.split < prof.num_layers
+    victim = int(np.bincount(probe.fleet.server[p_offl],
+                             minlength=4).argmax())
+    sc_chaos = chaos_base.replace(faults=FaultConfig(schedule=(
+        ("server_down", dt, victim),
+        ("server_up", dt * max(steps - 1, 2), victim))))
+
+    base_sess = Session(chaos_base)
+    base_sess.run(steps)
+    m_base = base_sess.metrics()
+
+    sess = Session(sc_chaos)
+    M = prof.num_layers
+    evac_latency = evacuated = degraded = None
+    prev_faults_s = 0.0
+    for _ in range(steps):
+        rep = sess.step()
+        d_faults = sess.timings["faults_s"] - prev_faults_s
+        prev_faults_s = sess.timings["faults_s"]
+        up = sess.topo.server_available()
+        offl = sess.fleet.split < M
+        assert not np.any(~up[sess.fleet.server] & offl), \
+            "chaos track stranded users on a down server"
+        if rep.evacuation is not None and len(rep.evacuation.users):
+            evac_latency = d_faults
+            evacuated = int(rep.evacuation.evacuated)
+            degraded = int(rep.evacuation.degraded)
+    sess.drain()
+    m_chaos = sess.metrics()
+    down = m_chaos.availability < 1.0
+    overhead = (float(m_chaos.mean_C[down].mean()
+                      / max(m_base.mean_C[down].mean(), 1e-30))
+                if down.any() else 1.0)
+    assert evac_latency is not None, "scripted kill never evacuated"
+    rows.append(f"fleet_bench,{big_users},chaos,evac_latency_s,"
+                f"{evac_latency:.3f}")
+    rows.append(f"fleet_bench,{big_users},chaos,evacuated,{evacuated}")
+    rows.append(f"fleet_bench,{big_users},chaos,cost_overhead,"
+                f"{overhead:.3f}")
+    results["chaos"] = {
+        "users": big_users, "steps": steps, "victim": victim,
+        "evac_latency_s": evac_latency, "evacuated": evacuated,
+        "degraded": degraded,
+        "availability_min": float(m_chaos.availability.min()),
+        "cost_overhead_down_window": overhead,
+        "faults_s_total": sess.timings["faults_s"]}
+    print(f"[chaos] {big_users} users, server {victim} killed at "
+          f"t={dt:.0f}s: evacuation replan {evac_latency:.2f}s "
+          f"({evacuated} evacuated, {degraded} degraded), cost overhead "
+          f"x{overhead:.3f} during the outage")
 
     # ---- scenario matrix: every registered preset plans + steps once
     matrix = {}

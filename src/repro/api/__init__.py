@@ -14,7 +14,11 @@ Three pieces (docs/ARCHITECTURE.md "API surface" has the full map):
   ``dnn_surgery``, ``cloud``).
 * :class:`Session` — the single stepped lifecycle owning the
   mobility → handoff → replan → scatter loop, async drain semantics
-  included.
+  included.  Scenarios carrying a :class:`FaultConfig` (``faults``
+  field; ``chaos_singlefail_k3`` / ``chaos_churn`` presets) additionally
+  run the fault-injection layer each step: server crashes, link cuts,
+  and capacity churn flow through ``Topology.apply_faults`` and the
+  policy's evacuation replan (docs/ARCHITECTURE.md, "Failure handling").
 
 The 60-second version::
 
@@ -33,6 +37,9 @@ The 60-second version::
 ``MCSAPlanner(...).plan_static`` / hand-rolled-loop entry points keep
 working); new code should come through this package.
 """
+from repro.core.faults import (EvacuationReport, FaultBatch, FaultConfig,
+                               FaultModel)
+
 from .policies import (POLICIES, BaselinePolicy, CloudPolicy,
                        DNNSurgeryPolicy, DeviceOnlyPolicy, EdgeOnlyPolicy,
                        GreedyNearestPolicy, MCSAPlanner, Policy,
@@ -48,4 +55,5 @@ __all__ = [
     "BaselinePolicy", "DeviceOnlyPolicy", "EdgeOnlyPolicy", "CloudPolicy",
     "GreedyNearestPolicy", "DNNSurgeryPolicy",
     "Session", "SessionMetrics", "StepReport",
+    "FaultConfig", "FaultModel", "FaultBatch", "EvacuationReport",
 ]

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.configs import CNN_IDS, get_config
 from repro.core.costs import DeviceFleet, LayerProfile
+from repro.core.faults import FaultConfig, FaultModel
 from repro.core.ligd import LiGDConfig
 from repro.core.mobility import RandomWaypointMobility, StaticMobility
 from repro.core.network import Topology, build_topology
@@ -63,6 +64,11 @@ class Scenario:
                 ``candidates_k``, ``async_replanning`` polarity, and
                 ``admission_aware_handoffs`` (None = auto: on exactly
                 when admission control is active — K > 1 or budgets set)
+    faults    : optional :class:`repro.core.faults.FaultConfig` — the
+                chaos layer (server MTBF/MTTR, link cuts, capacity
+                churn, scripted kills).  None (the default) disables
+                fault injection entirely; see the ``chaos_*`` presets
+                and docs/ARCHITECTURE.md ("Failure handling")
     schedule  : ``steps`` mobility steps of ``dt`` seconds each
     """
     name: str = "custom"
@@ -90,6 +96,8 @@ class Scenario:
     candidates_k: int = 1
     async_replanning: bool = False
     admission_aware_handoffs: Optional[bool] = None
+    # --- fault injection (None = chaos off) ---
+    faults: Optional[FaultConfig] = None
     # --- schedule ---
     steps: int = 30
     dt: float = 60.0
@@ -106,6 +114,7 @@ class Scenario:
                 d[k] = list(v)
         d["ligd"] = {k: (list(v) if isinstance(v, tuple) else v)
                      for k, v in dataclasses.asdict(self.ligd).items()}
+        d["faults"] = None if self.faults is None else self.faults.to_dict()
         return d
 
     @classmethod
@@ -124,6 +133,9 @@ class Scenario:
                 ligd["init"] = tuple(ligd["init"])
             ligd = LiGDConfig(**ligd)
         d["ligd"] = ligd
+        faults = d.get("faults")
+        if isinstance(faults, dict):
+            d["faults"] = FaultConfig.from_dict(faults)
         for k in ("c_dev_range", "speed_range"):
             if k in d:
                 d[k] = tuple(d[k])
@@ -165,6 +177,14 @@ class Scenario:
         if model is RandomWaypointMobility:
             kw["speed_range"] = self.speed_range
         return model(topo, self.num_users, **kw)
+
+    def build_faults(self, topo: Topology) -> Optional[FaultModel]:
+        """The scenario's seeded fault process over ``topo``'s servers
+        and fiber links, or None when chaos is off."""
+        if self.faults is None:
+            return None
+        return FaultModel(self.faults, topo.num_servers,
+                          len(topo.links()))
 
 
 # ---------------------------------------------------------------------------
@@ -242,3 +262,32 @@ register_scenario(Scenario(
     model="nin", num_users=100_000, speed_range=(10.0, 30.0),
     mobility_seed=2, ligd=LiGDConfig(max_iters=60),
     async_replanning=True, steps=5, dt=30.0))
+
+# Chaos: the capacitated_k3 world with a scripted single-server failure
+# (server 2 dies at t=30 s, recovers at t=150 s) — the acceptance
+# scenario for evacuation replanning: every user on the dead server is
+# re-admitted under the survivors' residual budgets or degraded to
+# device-only within one step, and hysteresis holds them off the
+# recovered server when it comes back.
+register_scenario(Scenario(
+    name="chaos_singlefail_k3", num_aps=25, num_servers=4, topo_seed=0,
+    model="nin", num_users=500, r_capacity=200.0, candidates_k=3,
+    speed_range=(8.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=100),
+    faults=FaultConfig(schedule=(("server_down", 30.0, 2),
+                                 ("server_up", 150.0, 2))),
+    steps=8, dt=30.0))
+
+# Chaos: sustained stochastic churn — servers crash/recover on an
+# exponential MTBF/MTTR clock, fiber links get cut and spliced, and the
+# per-server budgets jitter every step.  The steady-state regime for the
+# fault path (availability oscillates, evacuations happen repeatedly).
+register_scenario(Scenario(
+    name="chaos_churn", num_aps=25, num_servers=4, topo_seed=0,
+    model="nin", num_users=200, r_capacity=250.0, candidates_k=2,
+    speed_range=(8.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=80),
+    faults=FaultConfig(server_mtbf=240.0, server_mttr=60.0,
+                       link_mtbf=300.0, link_mttr=90.0,
+                       capacity_jitter=0.15, seed=7),
+    steps=12, dt=30.0))

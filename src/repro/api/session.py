@@ -20,6 +20,14 @@ handoff replan, then accounting), pinned bit-for-bit against the
 pre-redesign ``examples/mobility_sim.py`` trajectory over the
 ``paper_fig1`` preset in ``tests/test_api.py``.
 
+When the scenario carries a :class:`repro.core.faults.FaultConfig`
+(``faults`` field; ``chaos_*`` presets), each step FIRST advances the
+fault process and folds any transitions into the topology + an
+evacuation replan (``policy.on_faults``) before mobility moves anyone —
+so handoff detection never sees a user admitted to a server that no
+longer exists.  Scenarios without faults skip the whole block and run
+bit-for-bit as before.  See docs/ARCHITECTURE.md ("Failure handling").
+
 Per-step accounting accumulates as struct-of-arrays and comes back from
 :meth:`Session.metrics` as a :class:`SessionMetrics`; wall-clock spent
 inside the plan / step / drain calls accumulates in
@@ -34,6 +42,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.faults import clamp_hops
 from repro.core.mobility import HandoffBatch
 
 from .policies import Policy, make_policy
@@ -54,11 +63,17 @@ class StepReport:
                 (async replanning) — whether dispatched by this step or
                 an earlier one: the fleet table stays stale until the
                 next event-bearing step or :meth:`Session.drain`
+    faults    : the step's FaultBatch when fault injection is active and
+                something changed this step (None otherwise)
+    evacuation: the step's EvacuationReport when the policy ran an
+                evacuation replan (None otherwise)
     """
     t: float
     events: HandoffBatch
     result: Optional[object]
     in_flight: bool = False
+    faults: Optional[object] = None
+    evacuation: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -78,6 +93,14 @@ class SessionMetrics:
     admission           : static-plan admission summary dict (spilled /
                           rejected counts, per-server loads) or None
                           when admission control was inactive
+    availability        : (S,) fraction of servers up at the END of each
+                          step (None when fault injection is off)
+    evacuated/degraded  : (S,) per-step evacuation counts — users
+                          re-admitted to a survivor / degraded to
+                          device-only (None when fault injection is off)
+    faults              : summary dict (min availability, totals,
+                          per-outage time-to-recover) or None when fault
+                          injection is off
     """
     t: np.ndarray
     handoffs: np.ndarray
@@ -87,6 +110,10 @@ class SessionMetrics:
     mean_E: np.ndarray
     mean_C: np.ndarray
     admission: Optional[dict] = None
+    availability: Optional[np.ndarray] = None
+    evacuated: Optional[np.ndarray] = None
+    degraded: Optional[np.ndarray] = None
+    faults: Optional[dict] = None
 
 
 def _fleet_mean(fleet, field: str) -> float:
@@ -132,11 +159,20 @@ class Session:
             aware = scenario.candidates_k > 1 or self.topo.capacitated
         self._admission_aware = bool(aware)
 
+        self.fault_model = scenario.build_faults(self.topo)
+        self._down_since: dict = {}      # server id -> sim time it died
+        self._recovery_times: list = []  # seconds down, per closed outage
+        self._fault_reassociated = 0     # cumulative, across evacuations
+        self._fault_retried = 0          # stale async replans re-dispatched
+
         self.steps_taken = 0
         self.total_handoffs = 0
-        self.timings = {"plan_s": 0.0, "steps_s": 0.0, "drain_s": 0.0}
+        self.timings = {"plan_s": 0.0, "steps_s": 0.0, "drain_s": 0.0,
+                        "faults_s": 0.0}
         self._log = {k: [] for k in ("t", "handoffs", "resplits", "relays",
-                                     "mean_T", "mean_E", "mean_C")}
+                                     "mean_T", "mean_E", "mean_C",
+                                     "availability", "evacuated",
+                                     "degraded")}
 
         t0 = time.perf_counter()
         aps = self.topo.nearest_ap(self.mobility.positions())
@@ -157,6 +193,40 @@ class Session:
             "B_load": rep.B_load.tolist(),
         }
 
+    def refresh_admission(self) -> Optional[dict]:
+        """Recompute :attr:`admission` from the LIVE fleet table.
+
+        The ``__init__``-time summary reflects the static plan; every
+        later ``drain()`` (async replans move users between servers) and
+        every fault evacuation changes the real per-server loads.  This
+        rebuilds ``users_per_server`` / ``r_load`` / ``B_load`` from the
+        current plan rows (device-only rows hold nothing) and adds a
+        ``degraded`` count; ``spilled`` / ``rejected`` keep their
+        static-plan values (they describe the admission *decision*, not
+        a live load).  Called automatically by :meth:`drain` and the
+        fault path; returns the refreshed dict (also stored)."""
+        base = self._admission_summary()
+        srv = getattr(self.fleet, "server", None)
+        split = getattr(self.fleet, "split", None)
+        if base is None or not isinstance(srv, np.ndarray) \
+                or not isinstance(split, np.ndarray):
+            self.admission = base if base is not None else self.admission
+            return self.admission
+        Z = self.topo.num_servers
+        offl = split < self.profile.num_layers
+        s = srv[offl]
+        base["users_per_server"] = np.bincount(
+            s, minlength=Z).tolist()
+        base["r_load"] = np.bincount(
+            s, weights=np.asarray(self.fleet.r)[offl],
+            minlength=Z).tolist()
+        base["B_load"] = np.bincount(
+            s, weights=np.asarray(self.fleet.B)[offl],
+            minlength=Z).tolist()
+        base["degraded"] = int((~offl).sum())
+        self.admission = base
+        return base
+
     @property
     def t(self) -> float:
         """Simulation time at the start of the NEXT step (s)."""
@@ -164,10 +234,31 @@ class Session:
 
     # ------------------------------------------------------------------
     def step(self) -> StepReport:
-        """One lifecycle step: advance mobility, replan the handoffs,
-        record accounting.  Returns a :class:`StepReport`."""
+        """One lifecycle step: advance the fault process (when chaos is
+        on), advance mobility, replan the handoffs, record accounting.
+        Returns a :class:`StepReport`."""
         sc = self.scenario
         t = self.t
+
+        fault_batch = None
+        evacuation = None
+        if self.fault_model is not None:
+            t0 = time.perf_counter()
+            fault_batch = self.fault_model.step(sc.dt, t)
+            if fault_batch:
+                self.topo.apply_faults(fault_batch)
+                evacuation = self._dispatch_faults(fault_batch)
+                self._track_recovery(fault_batch, t)
+                # fault-driven coverage changes are not user movement:
+                # resync the mobility model's nearest-server tracking so
+                # the next detection doesn't emit handoffs for users who
+                # never moved
+                self.mobility.server = np.asarray(
+                    self.topo.ap_server[self.mobility.ap])
+            else:
+                fault_batch = None
+            self.timings["faults_s"] += time.perf_counter() - t0
+
         admitted = None
         if self._admission_aware:
             # admission-aware detection must key on the CURRENT admitted
@@ -214,8 +305,64 @@ class Session:
             log["resplits"].append(-1)
         for f in ("T", "E", "C"):
             log[f"mean_{f}"].append(_fleet_mean(self.fleet, f))
+        log["availability"].append(self.topo.availability)
+        log["evacuated"].append(
+            0 if evacuation is None else int(evacuation.evacuated))
+        log["degraded"].append(
+            0 if evacuation is None else int(evacuation.degraded))
+        if evacuation is not None:
+            self._fault_reassociated += int(evacuation.reassociated)
+            self._fault_retried += int(evacuation.retried)
         return StepReport(t=t, events=batch, result=result,
-                          in_flight=in_flight)
+                          in_flight=in_flight, faults=fault_batch,
+                          evacuation=evacuation)
+
+    def _dispatch_faults(self, batch):
+        """Route one applied FaultBatch to the policy.  Fault-aware
+        policies (``on_faults``) run the full evacuation replan; for the
+        rest the session synthesizes handoff events that move every user
+        off a down server to its nearest up one, so no policy can keep
+        users assigned to dead servers."""
+        on_faults = getattr(self.policy, "on_faults", None)
+        if on_faults is not None:
+            rep = on_faults(batch, self.devices, self.fleet,
+                            user_aps=np.asarray(self.mobility.ap))
+            if self.admission is not None:
+                self.refresh_admission()
+            return rep
+        up = self.topo.server_available()
+        srv = getattr(self.fleet, "server", None)
+        if not isinstance(srv, np.ndarray) or not up.any():
+            return None
+        idx = np.nonzero(~up[srv])[0]
+        if len(idx) == 0:
+            return None
+        ap = np.asarray(self.mobility.ap)[idx]
+        h = np.asarray(self.topo.hops[ap], np.float64).copy()
+        h[:, ~up] = np.inf
+        tgt = np.argmin(h, axis=1)
+        blackout = ~np.isfinite(h[np.arange(len(tgt)), tgt])
+        tgt[blackout] = int(np.argmax(up))
+        hb = HandoffBatch(
+            t=float(batch.t), user=idx,
+            old_server=srv[idx].astype(np.int64),
+            new_server=tgt.astype(np.int64),
+            new_ap=ap.astype(np.int64),
+            hops_new=clamp_hops(self.topo.hops[ap, tgt]).astype(np.int64),
+            hops_back=clamp_hops(
+                self.topo.hops[ap, srv[idx]]).astype(np.int64))
+        self.policy.on_handoffs(hb, self.devices, self.fleet)
+        return None
+
+    def _track_recovery(self, batch, t: float) -> None:
+        """Time-to-recover accounting: outage opens at server_down,
+        closes (one sample) at the matching server_up."""
+        for z in np.asarray(batch.server_down, np.int64):
+            self._down_since.setdefault(int(z), t)
+        for z in np.asarray(batch.server_up, np.int64):
+            t_down = self._down_since.pop(int(z), None)
+            if t_down is not None:
+                self._recovery_times.append(t - t_down)
 
     def run(self, n: Optional[int] = None) -> SessionMetrics:
         """Step ``n`` times (default: the scenario's remaining schedule),
@@ -234,11 +381,35 @@ class Session:
         t0 = time.perf_counter()
         res = self.policy.drain(self.fleet)
         self.timings["drain_s"] += time.perf_counter() - t0
+        if res is not None and self.admission is not None:
+            # the applied replan moved users between servers: keep the
+            # admission summary in sync with the live table
+            self.refresh_admission()
         return res
 
     def metrics(self) -> SessionMetrics:
         """The per-step accounting so far (see :class:`SessionMetrics`)."""
         log = self._log
+        chaos = self.fault_model is not None
+        avail = np.asarray(log["availability"], np.float64)
+        evac = np.asarray(log["evacuated"], np.int64)
+        degr = np.asarray(log["degraded"], np.int64)
+        faults = None
+        if chaos:
+            faults = {
+                "availability_min": (float(avail.min())
+                                     if len(avail) else 1.0),
+                "evacuated_total": int(evac.sum()),
+                "degraded_total": int(degr.sum()),
+                "reassociated_total": self._fault_reassociated,
+                "replans_retried_total": self._fault_retried,
+                "recovery_times_s": [float(x)
+                                     for x in self._recovery_times],
+                "mean_time_to_recover_s": (
+                    float(np.mean(self._recovery_times))
+                    if self._recovery_times else 0.0),
+                "still_down": sorted(self._down_since),
+            }
         return SessionMetrics(
             t=np.asarray(log["t"], np.float64),
             handoffs=np.asarray(log["handoffs"], np.int64),
@@ -247,4 +418,8 @@ class Session:
             mean_T=np.asarray(log["mean_T"], np.float64),
             mean_E=np.asarray(log["mean_E"], np.float64),
             mean_C=np.asarray(log["mean_C"], np.float64),
-            admission=self.admission)
+            admission=self.admission,
+            availability=avail if chaos else None,
+            evacuated=evac if chaos else None,
+            degraded=degr if chaos else None,
+            faults=faults)

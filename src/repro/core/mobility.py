@@ -36,6 +36,7 @@ from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .faults import clamp_hops
 from .network import Topology
 
 
@@ -207,10 +208,14 @@ class RandomWaypointMobility:
             old_server=old[idx].astype(np.int64),
             new_server=new_server[idx].astype(np.int64),
             new_ap=new_ap[idx].astype(np.int64),
-            hops_new=np.asarray(
-                self.topo.hops[new_ap[idx], new_server[idx]], np.int64),
-            hops_back=np.asarray(
-                self.topo.hops[new_ap[idx], old[idx]], np.int64))
+            # clamp_hops: under fault injection a hop count can be inf
+            # (dead server / cut backhaul) — keep it a finite,
+            # astronomically expensive path instead of an int64 wrap
+            hops_new=clamp_hops(
+                self.topo.hops[new_ap[idx], new_server[idx]]
+            ).astype(np.int64),
+            hops_back=clamp_hops(
+                self.topo.hops[new_ap[idx], old[idx]]).astype(np.int64))
         self.ap = new_ap
         self.server = new_server                # nearest-coverage tracking
         return batch

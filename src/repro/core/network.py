@@ -17,6 +17,14 @@ full control-plane dataflow.
 Pure numpy — topology is static control-plane state, not jitted compute.
 Built directly by :func:`build_topology` or declaratively from a
 ``repro.api.Scenario`` (geometry + budgets are scenario fields).
+
+Under fault injection (``repro.core.faults``) the topology additionally
+carries live availability masks (``server_up`` / ``link_up``) and
+:meth:`Topology.apply_faults` recomputes hops, nearest-server
+associations, and effective capacities after every crash/cut/recovery —
+down servers get ``inf`` hop columns so every hop-ordered choice
+(``ap_server``, ``candidates``) automatically avoids them.  See
+docs/ARCHITECTURE.md ("Failure handling").
 """
 from __future__ import annotations
 
@@ -42,6 +50,14 @@ class Topology:
                                  # server (None = uncapacitated)
     B_capacity: Optional[np.ndarray] = None   # (Z,) uplink-bandwidth budget
                                  # per server in Hz (None = uncapacitated)
+    # --- availability (the fault-injection layer; see core/faults.py and
+    # docs/ARCHITECTURE.md "Failure handling").  None until the first
+    # apply_faults call: an unfaulted topology pays zero overhead and
+    # behaves bit-for-bit as before.
+    server_up: Optional[np.ndarray] = None    # (Z,) bool server liveness
+    link_up: Optional[np.ndarray] = None      # (L,) bool over links()
+    ap_reachable: Optional[np.ndarray] = None  # (N,) any up server in reach
+    _base: Optional[dict] = dataclasses.field(default=None, repr=False)
 
     @property
     def num_aps(self) -> int:
@@ -55,6 +71,89 @@ class Topology:
     def capacitated(self) -> bool:
         """True when any per-server budget is set (admission control on)."""
         return self.r_capacity is not None or self.B_capacity is not None
+
+    @property
+    def faulted(self) -> bool:
+        """True once apply_faults has run — availability masks exist and
+        planners must consult them.  All fault-aware planner branches
+        key on this so unfaulted runs stay numerically identical."""
+        return self.server_up is not None
+
+    def server_available(self) -> np.ndarray:
+        """(Z,) bool liveness mask (all-True when never faulted)."""
+        if self.server_up is None:
+            return np.ones(self.num_servers, bool)
+        return self.server_up
+
+    @property
+    def availability(self) -> float:
+        """Fraction of servers currently up (1.0 when never faulted)."""
+        return float(self.server_available().mean())
+
+    def links(self) -> np.ndarray:
+        """(L, 2) undirected fiber links (i < j) of the UNFAULTED graph
+        — the index space FaultBatch.link_down / link_up target."""
+        adj = self._base["adj"] if self._base is not None else self.adj
+        i, j = np.nonzero(np.triu(adj, 1))
+        return np.stack([i, j], axis=1)
+
+    # ------------------------------------------------------------------
+    def apply_faults(self, batch) -> None:
+        """Fold one :class:`repro.core.faults.FaultBatch` into the live
+        availability state and recompute every derived field (adjacency,
+        hops, nearest-server map, effective capacities).
+
+        The pre-fault state is snapshotted on the first call, so a fully
+        recovered topology (all servers and links back up) reproduces
+        the original ``hops`` / ``ap_server`` bit-for-bit.  Down or
+        unreachable servers get ``inf`` hop columns — ``candidates``'
+        stable argsort naturally sorts them last, and planners clamp the
+        inf through ``repro.core.faults.clamp_hops`` before any solver
+        sees it.  APs with no reachable up server keep their pre-fault
+        ``ap_server`` association (flagged False in ``ap_reachable``);
+        users there degrade to device-only at the next evacuation."""
+        if self._base is None:
+            self._base = dict(
+                adj=self.adj.copy(), hops=self.hops.copy(),
+                ap_server=self.ap_server.copy(), links=self.links(),
+                r_capacity=(None if self.r_capacity is None
+                            else self.r_capacity.copy()),
+                B_capacity=(None if self.B_capacity is None
+                            else self.B_capacity.copy()))
+            self.server_up = np.ones(self.num_servers, bool)
+            self.link_up = np.ones(len(self._base["links"]), bool)
+
+        self.server_up[np.asarray(batch.server_down, np.int64)] = False
+        self.server_up[np.asarray(batch.server_up, np.int64)] = True
+        self.link_up[np.asarray(batch.link_down, np.int64)] = False
+        self.link_up[np.asarray(batch.link_up, np.int64)] = True
+
+        adj = self._base["adj"].copy()
+        cut = self._base["links"][~self.link_up]
+        adj[cut[:, 0], cut[:, 1]] = False
+        adj[cut[:, 1], cut[:, 0]] = False
+        self.adj = adj
+
+        hops = np.full_like(self._base["hops"], np.inf, dtype=np.float64)
+        for z, ap in enumerate(self.server_aps):
+            if self.server_up[z]:
+                hops[:, z] = _bfs_hops(adj, int(ap))
+        self.hops = hops
+
+        best = np.argmin(hops, axis=1)
+        reachable = np.isfinite(hops[np.arange(len(best)), best])
+        self.ap_server = np.where(reachable, best,
+                                  self._base["ap_server"])
+        self.ap_reachable = reachable
+
+        if batch.r_scale is not None \
+                and self._base["r_capacity"] is not None:
+            self.r_capacity = self._base["r_capacity"] * np.asarray(
+                batch.r_scale, np.float64)
+        if batch.B_scale is not None \
+                and self._base["B_capacity"] is not None:
+            self.B_capacity = self._base["B_capacity"] * np.asarray(
+                batch.B_scale, np.float64)
 
     # ------------------------------------------------------------------
     def nearest_ap(self, xy: np.ndarray) -> np.ndarray:

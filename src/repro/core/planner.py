@@ -62,10 +62,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from types import SimpleNamespace
+
 from .admission import AdmissionReport, admit_waterfill
 from .baselines import run_baseline_batch
 from .costs import (Devices, LayerProfile, gather_devices, rent_cost,
                     stack_devices, stack_edges_np)
+from .faults import EvacuationReport, FaultBatch, clamp_hops
 from .ligd import LiGDConfig, LiGDResult, solve_ligd_batch, \
     solve_ligd_batch_jit
 from .mligd import MLiGDResult, solve_mligd_batch_jit
@@ -193,6 +196,9 @@ class _PendingReplan:
     users: np.ndarray            # (E,) fleet rows the decisions scatter to
     orig_servers: np.ndarray     # (E,) pre-solve servers (relay-back target)
     new_server: object           # (E,) effective new server (jax or numpy)
+    batch: Optional[HandoffBatch] = None   # the triggering events — kept
+                                 # so a fault can retry stale rows
+    attempts: int = 0            # fault-retry count for this dispatch
 
 
 class MCSAPlanner:
@@ -209,22 +215,37 @@ class MCSAPlanner:
                     default) is the paper's one-server-per-AP model
     async_replanning : default ``sync`` polarity of :meth:`on_handoffs`
                     (False = today's blocking semantics)
+    recovery_hold_steps : hysteresis — how many :meth:`on_faults` calls
+                    a just-recovered server stays excluded from the
+                    evacuation target set (users don't flap back the
+                    instant it blips up)
+    max_replan_retries : cap on re-dispatching one stale async replan
+                    against the updated topology before its rows fall
+                    through to the evacuation/degradation path
     """
 
     def __init__(self, profile: LayerProfile, topo,
                  cfg: LiGDConfig = LiGDConfig(),
                  per_iter_time: float = 5e-5,
                  candidates_k: int = 1,
-                 async_replanning: bool = False):
+                 async_replanning: bool = False,
+                 recovery_hold_steps: int = 2,
+                 max_replan_retries: int = 3):
         self.profile = profile
         self.topo = topo
         self.cfg = cfg
         self.per_iter_time = per_iter_time
         self.candidates_k = max(1, int(candidates_k))
         self.async_replanning = async_replanning
+        self.recovery_hold_steps = int(recovery_hold_steps)
+        self.max_replan_retries = int(max_replan_retries)
         self.t_ag_estimate = 0.0
         self.last_admission: Optional[AdmissionReport] = None
+        self.last_evacuation: Optional[EvacuationReport] = None
+        self.replan_retries = 0      # stale async rows retried, cumulative
         self._pending: Optional[_PendingReplan] = None
+        self._hold = np.zeros(topo.num_servers, np.int64)  # hysteresis
+        self._last_user_aps: Optional[np.ndarray] = None
         # (Z, field) edge table — gathered per user by server id.
         self._edge_table = stack_edges_np(topo.edges)
         self._sharded_static = {}
@@ -284,7 +305,10 @@ class MCSAPlanner:
             1, int(candidates_k))
         K = min(K, self.topo.num_servers)
         user_aps = np.asarray(user_aps)
-        if K == 1 and not self.topo.capacitated:
+        self._last_user_aps = user_aps
+        # a faulted topology always takes the candidate path: it masks
+        # down/unreachable servers and owns the device-only degrade
+        if K == 1 and not self.topo.capacitated and not self.topo.faulted:
             self.last_admission = None
             servers = self.topo.ap_server[user_aps]
             hops = self.topo.hops[user_aps, servers]
@@ -311,6 +335,20 @@ class MCSAPlanner:
         cand = topo.candidates(K)[user_aps]                     # (X, K)
         K = cand.shape[1]
         hops = topo.hops[user_aps[:, None], cand]               # (X, K)
+        reachable = None
+        if topo.faulted:
+            # mask candidates that are down or unreachable: invalid
+            # slots are filled with the row's first valid candidate (a
+            # duplicate proposal is an admission no-op), rows with no
+            # valid candidate are forced device-only after admission
+            up = topo.server_available()
+            valid = up[cand] & np.isfinite(np.asarray(hops, np.float64))
+            reachable = valid.any(axis=1)
+            rows_i = np.arange(X)
+            first = np.argmax(valid, axis=1)
+            cand = np.where(valid, cand, cand[rows_i, first][:, None])
+            hops = np.where(valid, hops, hops[rows_i, first][:, None])
+            hops = clamp_hops(hops)
         t_ag_used = self.t_ag_estimate
         dev_rows = gather_devices(devices, np.repeat(np.arange(X), K))
         dev_rows["hops"] = jnp.asarray(hops.reshape(-1), jnp.float32)
@@ -330,6 +368,18 @@ class MCSAPlanner:
             np.asarray(res.r, np.float64).reshape(X, K) * offl,
             np.asarray(res.B, np.float64).reshape(X, K) * offl,
             topo.num_servers, topo.r_capacity, topo.B_capacity)
+        if reachable is not None and not reachable.all():
+            # no up server in reach of these users' APs: force the
+            # device-only fallback and keep the association off the
+            # dead server (nearest up server, for later re-admission)
+            report.rejected = report.rejected | ~reachable
+            choice = report.choice.copy()
+            choice[~reachable] = -1
+            report.choice = choice
+            srv = report.server.copy()
+            srv[~reachable] = self._nearest_up(
+                user_aps[~reachable], topo.server_available())
+            report.server = srv
         self.last_admission = report
 
         # gather each user's admitted row out of the (X*K,) solve
@@ -350,19 +400,31 @@ class MCSAPlanner:
         return res_sel, report.server, FleetState.from_static(
             report.server, res_sel)
 
-    def _device_only_fallback(self, res: LiGDResult, devices: Devices,
-                              rejected: np.ndarray, t_ag: float
-                              ) -> LiGDResult:
-        """Overwrite rejected users' rows with the device-only plan
-        (s = M): nothing is offloaded, so no bandwidth/compute is rented
-        and the admission budgets are untouched."""
-        idx = np.nonzero(rejected)[0]
+    def _device_only_plan(self, devices: Devices, idx: np.ndarray,
+                          t_ag: float) -> tuple:
+        """(T, E, U) of the device-only plan (s = M) for fleet rows
+        ``idx`` — nothing offloaded: no bandwidth, no rent, no admission
+        load (shared by the rejection fallback and fault degradation)."""
         d = {k: np.asarray(v, np.float64)
              for k, v in gather_devices(devices, idx).items()}
         f_l_M = float(self.profile.prefix_tables()[0][-1])
         T = f_l_M / d["c_dev"] + t_ag / d["k_rounds"]
         E = d["xi"] * d["c_dev"] ** 2 * d["phi"] * f_l_M
         U = d["w_T"] * T + d["w_E"] * E
+        return T, E, U
+
+    def _device_only_fallback(self, res: LiGDResult, devices: Devices,
+                              rejected: np.ndarray, t_ag: float,
+                              rows: Optional[np.ndarray] = None
+                              ) -> LiGDResult:
+        """Overwrite rejected users' rows with the device-only plan
+        (s = M): nothing is offloaded, so no bandwidth/compute is rented
+        and the admission budgets are untouched.  ``rows`` maps result
+        rows to fleet/device rows when ``res`` covers a subset (the
+        evacuation path); None means result row i is device row i."""
+        idx = np.nonzero(rejected)[0]
+        dev_idx = idx if rows is None else np.asarray(rows)[idx]
+        T, E, U = self._device_only_plan(devices, dev_idx, t_ag)
         out = {f: np.array(getattr(res, f)) for f in res._fields}
         out["split"][idx] = self.profile.num_layers
         out["B"][idx] = 0.0
@@ -401,7 +463,8 @@ class MCSAPlanner:
     def on_handoffs(self, events: Union[HandoffBatch,
                                         Sequence[HandoffEvent]],
                     devices: Devices, fleet: FleetState,
-                    sync: Optional[bool] = None
+                    sync: Optional[bool] = None,
+                    _attempts: int = 0
                     ) -> Optional[MLiGDResult]:
         """One padded, jitted MLi-GD solve over ALL of this step's handoff
         events.  Returns the (unpadded) batched MLiGDResult with (E,)
@@ -447,10 +510,19 @@ class MCSAPlanner:
             return None
         users = batch.user
         K = min(self.candidates_k, self.topo.num_servers)
+        faulted = self.topo.faulted
+        up = self.topo.server_available() if faulted else None
 
+        cand_invalid = None
         if K > 1:
             cand = self.topo.candidates(K)[batch.new_ap]         # (n, K)
             hops_new = self.topo.hops[batch.new_ap[:, None], cand]
+            if faulted:
+                # down/unreachable candidates stay in the solve (static
+                # shapes) but are priced out of the argmin below
+                cand_invalid = ~up[cand] | ~np.isfinite(
+                    np.asarray(hops_new, np.float64))
+                hops_new = clamp_hops(hops_new)
             rows = np.repeat(np.arange(n), K)
             new_server_rows = cand.reshape(-1)
             hops_new_rows = hops_new.reshape(-1)
@@ -458,6 +530,18 @@ class MCSAPlanner:
             rows = np.arange(n)
             new_server_rows = batch.new_server
             hops_new_rows = batch.hops_new
+            if faulted:
+                # the nearest-coverage target may be down (ap_server
+                # falls back to the pre-fault map where nothing is
+                # reachable): retarget those events to the nearest up
+                # server so a handoff can never land on a dead one
+                tgt = np.asarray(new_server_rows, np.int64).copy()
+                dead = ~up[tgt]
+                if dead.any() and up.any():
+                    tgt[dead] = self._nearest_up(batch.new_ap[dead], up)
+                    new_server_rows = tgt
+                hops_new_rows = clamp_hops(
+                    self.topo.hops[batch.new_ap, new_server_rows])
 
         dev_b = gather_devices(devices, users[rows])
         dev_b["hops"] = jnp.asarray(hops_new_rows, jnp.float32)
@@ -487,7 +571,12 @@ class MCSAPlanner:
             "B": orig_B,
             "rent": rent_cost(edges_orig, orig_r_true, orig_B),
         }
-        hops_back = jnp.asarray(batch.hops_back[rows], jnp.float32)
+        hops_back_np = batch.hops_back[rows]
+        if faulted:
+            # a relay-back to a dead original server must price as
+            # unreachable, never as a wrapped/NaN path
+            hops_back_np = clamp_hops(hops_back_np)
+        hops_back = jnp.asarray(hops_back_np, jnp.float32)
 
         pad = _pow2_bucket(n * K) - n * K
         res = solve_mligd_batch_jit(
@@ -500,18 +589,23 @@ class MCSAPlanner:
         if K > 1:
             # argmin-U candidate per event (jnp, so the reduction rides
             # the async dispatch — nothing is forced here)
-            best_k = jnp.argmin(res.U.reshape(n, K), axis=1)
+            U_eff = res.U.reshape(n, K)
+            if cand_invalid is not None and cand_invalid.any():
+                U_eff = U_eff + jnp.where(jnp.asarray(cand_invalid),
+                                          jnp.inf, 0.0)
+            best_k = jnp.argmin(U_eff, axis=1)
             take = lambda a: a.reshape(n, K, *a.shape[1:])[
                 jnp.arange(n), best_k]
             res = jax.tree.map(take, res)
             new_server = jnp.take_along_axis(
                 jnp.asarray(cand), best_k[:, None], axis=1)[:, 0]
         else:
-            new_server = batch.new_server
+            new_server = np.asarray(new_server_rows, np.int64)
 
         self._pending = _PendingReplan(res=res, users=users,
                                        orig_servers=orig_servers,
-                                       new_server=new_server)
+                                       new_server=new_server,
+                                       batch=batch, attempts=_attempts)
         if sync:
             self._apply_pending(fleet)
         return res
@@ -536,10 +630,282 @@ class MCSAPlanner:
             return None
         res, users = p.res, p.users
         take_back = np.asarray(res.R, bool)
-        fleet.scatter(users,
-                      np.where(take_back, p.orig_servers,
-                               np.asarray(p.new_server)), res)
+        server = np.where(take_back, p.orig_servers,
+                          np.asarray(p.new_server))
+        if self.topo.faulted:
+            live = self.topo.server_available()[server]
+            if not live.all():
+                # never scatter onto a dead server: stale rows keep
+                # their frozen plan and the next on_faults evacuates
+                # them (on_faults itself routes through
+                # _retry_stale_pending first, so this is the drain-
+                # without-on_faults backstop)
+                keep = np.nonzero(live)[0]
+                if len(keep):
+                    res_np = jax.tree.map(np.asarray, res)
+                    fleet.scatter(users[keep], server[keep],
+                                  jax.tree.map(lambda a: a[keep], res_np))
+                return res
+        fleet.scatter(users, server, res)
         return res
+
+    # ------------------------------------------------------------------
+    # Fault handling: evacuation replanning (see docs/ARCHITECTURE.md,
+    # "Failure handling", for the end-to-end dataflow)
+    # ------------------------------------------------------------------
+    def on_faults(self, batch: FaultBatch, devices: Devices,
+                  fleet: FleetState,
+                  user_aps: Optional[np.ndarray] = None
+                  ) -> EvacuationReport:
+        """Failure-aware evacuation replan for one applied FaultBatch.
+
+        Call AFTER ``topo.apply_faults(batch)``.  Every user offloading
+        to a down or unreachable server is re-admitted to a surviving
+        candidate — one fused candidate-set Li-GD solve plus the
+        water-filling greedy under the surviving servers' RESIDUAL
+        budgets (capacity minus what unaffected users keep holding) —
+        and degraded to device-only execution (split = M) when no
+        candidate is reachable or admissible.  Device-only users merely
+        *associated* with a dead server are re-associated to the
+        nearest up server (no solve: they hold no resources).
+
+        Hysteresis: servers recovered this step are excluded from the
+        evacuation target set for ``recovery_hold_steps`` subsequent
+        calls (unless they are a user's only survivor), so the fleet
+        doesn't flap back the instant a server blips up; static replans
+        and natural movement handoffs may still use them.
+
+        Stale async dispatch: an in-flight replan whose decisions would
+        land users on a now-dead server is split — still-valid rows are
+        applied, stale rows are re-dispatched synchronously against the
+        updated topology (``max_replan_retries`` bounds the retries per
+        dispatch; exhausted rows fall through to the evacuation).
+
+        ``user_aps``: (X,) current AP per fleet row (``repro.api.
+        Session`` passes its mobility state; defaults to the APs of the
+        last static plan).  Returns an :class:`EvacuationReport`, also
+        kept as ``self.last_evacuation``."""
+        topo = self.topo
+        up = topo.server_available()
+        t = float(getattr(batch, "t", 0.0))
+
+        self._hold = np.maximum(self._hold - 1, 0)
+        if len(batch.server_up):
+            self._hold[np.asarray(batch.server_up, np.int64)] = \
+                self.recovery_hold_steps
+
+        retried = self._retry_stale_pending(devices, fleet, up)
+
+        if user_aps is None:
+            user_aps = self._last_user_aps
+        if user_aps is None:          # never planned: nothing to evacuate
+            rep = EvacuationReport(t=t, users=np.zeros(0, np.int64),
+                                   retried=retried)
+            self.last_evacuation = rep
+            return rep
+        user_aps = np.asarray(user_aps)
+
+        offl = fleet.split < self.profile.num_layers
+        on_down = ~up[fleet.server]
+        unreachable = offl & ~np.isfinite(np.asarray(
+            topo.hops[user_aps, fleet.server], np.float64))
+        affected = (on_down & offl) | unreachable
+        assoc_only = on_down & ~offl
+
+        reassociated = 0
+        if assoc_only.any() and up.any():
+            fleet.server[assoc_only] = self._nearest_up(
+                user_aps[assoc_only], up)
+            reassociated = int(assoc_only.sum())
+
+        evac_idx = np.nonzero(affected)[0]
+        if len(evac_idx) == 0:
+            rep = EvacuationReport(t=t, users=evac_idx, retried=retried,
+                                   reassociated=reassociated)
+            self.last_evacuation = rep
+            return rep
+
+        evacuated, degraded, admission = self._evacuate(
+            devices, fleet, user_aps, evac_idx, up)
+        rep = EvacuationReport(t=t, users=evac_idx, evacuated=evacuated,
+                               degraded=degraded,
+                               reassociated=reassociated,
+                               retried=retried, admission=admission)
+        self.last_evacuation = rep
+        return rep
+
+    def _evacuate(self, devices: Devices, fleet: FleetState,
+                  user_aps: np.ndarray, evac_idx: np.ndarray,
+                  up: np.ndarray) -> tuple:
+        """Re-admit ``evac_idx`` onto surviving servers under residual
+        budgets; degrade the rest to device-only.  Returns
+        (evacuated, degraded, AdmissionReport-or-None)."""
+        topo = self.topo
+        K = min(max(self.candidates_k, 1), topo.num_servers)
+        aps_e = user_aps[evac_idx]
+        t_ag = self.t_ag_estimate
+
+        held = self._hold > 0
+        cand = topo.candidates(K)[aps_e]                       # (A, K)
+        K = cand.shape[1]
+        hops = np.asarray(topo.hops[aps_e[:, None], cand], np.float64)
+        valid = up[cand] & np.isfinite(hops)
+        # hysteresis: prefer non-held targets, but a held server beats
+        # device-only when it is a user's only survivor in reach
+        strict = valid & ~held[cand]
+        use = np.where(strict.any(axis=1)[:, None], strict, valid)
+        has = use.any(axis=1)
+
+        evacuated = 0
+        degraded = 0
+        admission = None
+        solve_rows = np.nonzero(has)[0]
+        if len(solve_rows):
+            cand_s = cand[solve_rows]
+            hops_s = hops[solve_rows]
+            use_s = use[solve_rows]
+            ri = np.arange(len(solve_rows))
+            first = np.argmax(use_s, axis=1)
+            cand_s = np.where(use_s, cand_s, cand_s[ri, first][:, None])
+            hops_s = np.where(use_s, hops_s, hops_s[ri, first][:, None])
+
+            A = len(solve_rows)
+            fleet_rows = evac_idx[solve_rows]
+            dev_rows = gather_devices(devices, np.repeat(fleet_rows, K))
+            dev_rows["hops"] = jnp.asarray(hops_s.reshape(-1),
+                                           jnp.float32)
+            dev_rows["t_ag"] = jnp.full((A * K,), t_ag, jnp.float32)
+            edge_rows = self._edges_for(cand_s.reshape(-1))
+            pad = _pow2_bucket(A * K) - A * K
+            res = self._solve_static(_pad_axis0(dev_rows, pad),
+                                     _pad_axis0(edge_rows, pad), None)
+            jax.block_until_ready(res.U)
+            if pad:
+                res = jax.tree.map(lambda a: np.asarray(a)[:A * K], res)
+
+            offl_s = (np.asarray(res.split).reshape(A, K)
+                      < self.profile.num_layers)
+            rem_r, rem_B = self._residual_budgets(fleet, evac_idx, up)
+            report = admit_waterfill(
+                cand_s, np.asarray(res.U, np.float64).reshape(A, K),
+                np.asarray(res.r, np.float64).reshape(A, K) * offl_s,
+                np.asarray(res.B, np.float64).reshape(A, K) * offl_s,
+                topo.num_servers, rem_r, rem_B)
+            admission = report
+
+            flat = np.arange(A) * K + np.where(report.rejected, 0,
+                                               report.choice)
+            res_sel = jax.tree.map(lambda a: np.asarray(a)[flat], res)
+            dev_only = (np.asarray(res_sel.split)
+                        >= self.profile.num_layers)
+            if dev_only.any():
+                B = np.array(res_sel.B)
+                r = np.array(res_sel.r)
+                B[dev_only] = 0.0
+                r[dev_only] = 0.0
+                res_sel = res_sel._replace(B=B, r=r)
+            if report.rejected.any():
+                res_sel = self._device_only_fallback(
+                    res_sel, devices, report.rejected, t_ag,
+                    rows=fleet_rows)
+            fleet.scatter(fleet_rows, report.server, res_sel, R=0)
+            evacuated = int((~report.rejected).sum())
+            degraded += int(report.rejected.sum())
+
+        no_cand = np.nonzero(~has)[0]
+        if len(no_cand):
+            # graceful degradation: nothing reachable -> device-only
+            idx = evac_idx[no_cand]
+            T, E, U = self._device_only_plan(devices, idx, t_ag)
+            srv = fleet.server[idx]
+            if up.any():
+                srv = self._nearest_up(user_aps[idx], up)
+            res_d = SimpleNamespace(
+                split=np.full(len(idx), self.profile.num_layers,
+                              np.int64),
+                B=0.0, r=0.0, U=U, T=T, E=E, C=0.0, R=0)
+            fleet.scatter(idx, srv, res_d, R=0)
+            degraded += len(no_cand)
+        return evacuated, degraded, admission
+
+    def _residual_budgets(self, fleet: FleetState, evac_idx: np.ndarray,
+                          up: np.ndarray) -> tuple:
+        """Surviving budgets minus what unaffected users keep holding —
+        an evacuation must fit in the headroom, not the full capacity."""
+        topo = self.topo
+        if topo.r_capacity is None and topo.B_capacity is None:
+            return None, None
+        keep = np.ones(len(fleet), bool)
+        keep[evac_idx] = False
+        keep &= (fleet.split < self.profile.num_layers) \
+            & up[fleet.server]
+
+        def resid(capacity, col):
+            if capacity is None:
+                return None
+            rem = np.asarray(capacity, np.float64).copy()
+            np.subtract.at(rem, fleet.server[keep], col[keep])
+            return np.maximum(rem, 0.0)
+
+        return (resid(topo.r_capacity, fleet.r),
+                resid(topo.B_capacity, fleet.B))
+
+    def _nearest_up(self, aps: np.ndarray, up: np.ndarray) -> np.ndarray:
+        """Nearest up & reachable server per AP (live hop counts); falls
+        back to the lowest-id up server when nothing is reachable from
+        an AP (blackout: server 0, deterministically)."""
+        h = np.asarray(self.topo.hops[np.asarray(aps)], np.float64).copy()
+        h[:, ~up] = np.inf
+        best = np.argmin(h, axis=1)
+        bad = ~np.isfinite(h[np.arange(len(best)), best])
+        if bad.any():
+            best[bad] = int(np.argmax(up))
+        return best
+
+    def _retry_stale_pending(self, devices: Devices, fleet: FleetState,
+                             up: np.ndarray) -> int:
+        """Async-dispatch fault safety: split the in-flight replan into
+        rows whose decided server survived (applied as usual) and rows
+        decided onto a now-dead server (re-dispatched synchronously
+        against the updated topology — the retry half of the
+        retry-with-backoff wrapper; ``max_replan_retries`` is the
+        backoff bound, after which rows fall through to evacuation).
+        Returns the number of retried rows."""
+        p = self._pending
+        if p is None or up.all():
+            return 0
+        final = np.where(np.asarray(p.res.R, bool), p.orig_servers,
+                         np.asarray(p.new_server))
+        final = np.asarray(final, np.int64)
+        stale = ~up[final]
+        if not stale.any():
+            return 0                  # applies at the next call/drain
+        self._pending = None
+        res_np = jax.tree.map(np.asarray, p.res)
+        good = np.nonzero(~stale)[0]
+        if len(good):
+            fleet.scatter(p.users[good], final[good],
+                          jax.tree.map(lambda a: a[good], res_np))
+        if p.batch is None or p.attempts >= self.max_replan_retries \
+                or not up.any():
+            return 0                  # out of retries: evacuation owns them
+        bad = np.nonzero(stale)[0]
+        new_ap = p.batch.new_ap[bad]
+        tgt = self._nearest_up(new_ap, up)
+        old = np.asarray(fleet.server[p.users[bad]], np.int64)
+        retry = HandoffBatch(
+            t=p.batch.t, user=p.users[bad],
+            old_server=old,
+            new_server=np.asarray(tgt, np.int64),
+            new_ap=np.asarray(new_ap, np.int64),
+            hops_new=clamp_hops(
+                self.topo.hops[new_ap, tgt]).astype(np.int64),
+            hops_back=clamp_hops(
+                self.topo.hops[new_ap, old]).astype(np.int64))
+        self.replan_retries += len(bad)
+        self.on_handoffs(retry, devices, fleet, sync=True,
+                         _attempts=p.attempts + 1)
+        return len(bad)
 
     # ------------------------------------------------------------------
     def run_baseline(self, name: str, devices: Devices,

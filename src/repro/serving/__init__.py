@@ -1,6 +1,8 @@
 """Serving layer: batched prefill/decode engine + MCSA split serving."""
 from .engine import DecodeState, InferenceEngine
-from .split import SplitServer, device_prefix, edge_suffix, layer_params
+from .split import (FailoverEvent, FailoverReport, ServerLostError,
+                    SplitServer, device_prefix, edge_suffix, layer_params)
 
 __all__ = ["DecodeState", "InferenceEngine", "SplitServer",
+           "ServerLostError", "FailoverEvent", "FailoverReport",
            "device_prefix", "edge_suffix", "layer_params"]

@@ -20,9 +20,18 @@ Implementation notes
   the edge for the suffix — on an MLi-GD "re-split" decision only the
   activation stream moves, never the cache (it is re-prefilled edge-side,
   matching the paper's accounting where re-splits pay T_Ag, not migration).
+* Server loss mid-stream is a first-class outcome: the edge half raises a
+  typed :class:`ServerLostError` when its server is down (the serving-path
+  face of the control plane's fault layer, ``repro.core.faults``), and
+  :meth:`SplitServer.generate_with_failover` is the driver-side retry —
+  the device relays the stream to a fallback server and pays the
+  relay-back price (activation bits x hops / bandwidth, the same H₂ path
+  MLi-GD's Eq. 41 decision is priced on).  See docs/ARCHITECTURE.md
+  ("Failure handling").
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, List, Optional
 
@@ -136,6 +145,54 @@ def activation_bits(cfg: ModelConfig, batch: int, tokens: int) -> float:
     return float(batch * tokens * cfg.d_model * 16)
 
 
+class ServerLostError(RuntimeError):
+    """The edge server disappeared mid-stream (crash / cut backhaul).
+
+    Raised by the edge half of a split call when the server is down;
+    ``server`` names the lost server.  Drivers catch it and relay the
+    stream to a surviving server — see
+    :meth:`SplitServer.generate_with_failover`."""
+
+    def __init__(self, server: str):
+        super().__init__(f"edge server {server!r} lost mid-stream")
+        self.server = server
+
+
+@dataclasses.dataclass
+class FailoverEvent:
+    """One mid-stream server loss handled by the failover driver.
+
+    lost        : name of the server that died
+    tokens_done : tokens already generated when it died (all preserved —
+                  the fallback re-prefills the prefix + generated text)
+    relay_s     : relay-back transmission delay paid for this failover:
+                  the full activation stream re-shipped over ``hops_back``
+                  backhaul hops at ``bandwidth_hz`` (the H₂ relay path
+                  of MLi-GD's Eq. 41 pricing)
+    relay_bits  : size of that re-shipped w_s payload (bits)
+    """
+    lost: str
+    tokens_done: int
+    relay_s: float
+    relay_bits: float
+
+
+@dataclasses.dataclass
+class FailoverReport:
+    """Accounting of one :meth:`SplitServer.generate_with_failover` run:
+    the failovers that happened (empty = clean run) and the total
+    relay-back delay they cost."""
+    events: List[FailoverEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def retries(self) -> int:
+        return len(self.events)
+
+    @property
+    def relay_s(self) -> float:
+        return sum(e.relay_s for e in self.events)
+
+
 # ---------------------------------------------------------------------------
 # SplitServer: jit-cached split programs keyed by (split, mode)
 # ---------------------------------------------------------------------------
@@ -148,12 +205,39 @@ class SplitServer:
     (tests/test_split_serving.py)."""
 
     def __init__(self, cfg: ModelConfig, params: Params,
-                 env: MeshEnv = CPU_ENV):
+                 env: MeshEnv = CPU_ENV, name: str = "edge"):
         self.cfg = cfg
         self.params = params
         self.env = env
+        self.name = name
+        self.up = True                    # edge-server liveness
+        self._fail_after: Optional[int] = None
         self._prefix_jit: dict = {}
         self._suffix_jit: dict = {}
+
+    # -- fault simulation (the serving-path face of repro.core.faults) --
+    def fail(self, after_calls: Optional[int] = None) -> None:
+        """Kill this edge server: immediately (default), or after
+        ``after_calls`` more successful edge-side calls (each prefill or
+        decode counts one) — lets tests lose a server mid-generation."""
+        if after_calls is None:
+            self.up = False
+        else:
+            self._fail_after = int(after_calls)
+
+    def restore(self) -> None:
+        """Bring the edge server back up."""
+        self.up = True
+        self._fail_after = None
+
+    def _edge_guard(self) -> None:
+        if self._fail_after is not None:
+            self._fail_after -= 1
+            if self._fail_after < 0:
+                self.up = False
+                self._fail_after = None
+        if not self.up:
+            raise ServerLostError(self.name)
 
     def _programs(self, split: int, mode: str):
         key = (split, mode)
@@ -170,10 +254,13 @@ class SplitServer:
         return self._prefix_jit[key], self._suffix_jit[key]
 
     def prefill(self, tokens, split: int, cache_len: int):
-        """Split prefill: device prefix -> shipped w_s -> edge suffix."""
+        """Split prefill: device prefix -> shipped w_s -> edge suffix.
+        Raises :class:`ServerLostError` when the edge server is down
+        (the device prefix runs regardless — it is local)."""
         prefix, suffix = self._programs(split, "prefill")
         batch = {"tokens": tokens}
         h_split, dev_caches = prefix(batch, cache_len=cache_len)
+        self._edge_guard()
         logits, nxt, edge_caches = suffix(h_split, cache_len=cache_len)
         return logits, nxt, (dev_caches, edge_caches)
 
@@ -181,6 +268,7 @@ class SplitServer:
         dev_caches, edge_caches = caches
         prefix, suffix = self._programs(split, "decode")
         h_split, dev_caches = prefix(token, caches=dev_caches, pos=pos)
+        self._edge_guard()
         logits, nxt, edge_caches = suffix(h_split, caches=edge_caches,
                                           pos=pos)
         return logits, nxt, (dev_caches, edge_caches)
@@ -200,3 +288,56 @@ class SplitServer:
             out.append(nxt)
             pos += 1
         return jnp.stack(out, axis=1)
+
+    def generate_with_failover(self, tokens, split: int, max_new: int, *,
+                               fallbacks, hops_back: float = 1.0,
+                               bandwidth_hz: float = 20e6,
+                               cache_len: Optional[int] = None):
+        """Greedy generation that survives mid-stream server loss.
+
+        Runs :meth:`generate`'s loop on this server; when a prefill or
+        decode raises :class:`ServerLostError`, the stream relays to the
+        next server in ``fallbacks`` — the device re-ships its full
+        activation stream (prompt + every token generated so far) and
+        the fallback re-prefills it, so no generated token is lost and
+        the continued greedy stream is identical to an uninterrupted
+        one.  The relay is PRICED, not free: each failover logs
+        ``activation_bits(cfg, B, S + tokens_done) * hops_back /
+        bandwidth_hz`` seconds of relay-back delay (Eq. 41's H₂ path).
+
+        Arguments: ``fallbacks`` — sequence of SplitServer; ``hops_back``
+        / ``bandwidth_hz`` — the relay path the planner's topology gives
+        (hops to the fallback, allocated uplink bandwidth).
+
+        Returns ``((B, max_new) tokens, FailoverReport)``.  Re-raises
+        the final :class:`ServerLostError` when every fallback dies
+        too."""
+        B, S = tokens.shape
+        cache_len = cache_len or (S + max_new)
+        queue = [self, *fallbacks]
+        report = FailoverReport()
+        produced: List = []
+        while True:
+            srv = queue[0]
+            seq = tokens if not produced else jnp.concatenate(
+                [tokens, jnp.stack(produced, axis=1)], axis=1)
+            try:
+                logits, nxt, caches = srv.prefill(seq, split, cache_len)
+                produced.append(nxt)
+                pos = seq.shape[1]
+                while len(produced) < max_new:
+                    logits, nxt, caches = srv.decode(
+                        nxt[:, None], jnp.asarray(pos, jnp.int32),
+                        caches, split)
+                    produced.append(nxt)
+                    pos += 1
+                return jnp.stack(produced, axis=1), report
+            except ServerLostError as exc:
+                queue.pop(0)
+                if not queue:
+                    raise
+                bits = activation_bits(self.cfg, B, S + len(produced))
+                report.events.append(FailoverEvent(
+                    lost=exc.server, tokens_done=len(produced),
+                    relay_s=bits * float(hops_back) / float(bandwidth_hz),
+                    relay_bits=bits))

@@ -1,0 +1,111 @@
+"""Elastic rescale (repro.runtime.elastic): shrink_mesh edge cases and
+the remesh_state checkpoint round-trip — the node-loss recovery path of
+the runtime, sibling to the control plane's fault layer."""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import Mesh
+
+from repro.runtime.elastic import shrink_mesh
+
+
+def _run_subprocess(script: str) -> str:
+    """Run a 2-forced-device JAX script in a clean subprocess (the suite
+    itself must keep seeing the real single CPU device — see conftest)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", script], cwd=root,
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+_PREAMBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2")
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax
+import numpy as np
+from jax.sharding import Mesh
+assert jax.device_count() == 2
+"""
+
+
+def test_shrink_mesh_cannot_drop_all_rows():
+    mesh = Mesh(jax.devices()[:1], ("data",))
+    with pytest.raises(ValueError, match="cannot drop all data rows"):
+        shrink_mesh(mesh, drop_data_rows=1)
+    with pytest.raises(ValueError, match="cannot drop all data rows"):
+        shrink_mesh(mesh, drop_data_rows=5)      # over-drop: same error
+
+
+def test_shrink_mesh_requires_data_axis():
+    mesh = Mesh(jax.devices()[:1], ("model",))
+    with pytest.raises(AssertionError):
+        shrink_mesh(mesh)
+
+
+def test_shrink_mesh_drops_data_rows_whatever_the_axis_position():
+    """shrink_mesh must shrink the DATA axis even when it is not the
+    leading mesh axis, and keep names, ordering, and the surviving
+    devices (prefix rows) intact."""
+    out = _run_subprocess(_PREAMBLE + r"""
+from repro.runtime.elastic import shrink_mesh
+
+# data axis LAST: ("model", "data") with shape (1, 2)
+devs = np.asarray(jax.devices()).reshape(1, 2)
+mesh = Mesh(devs, ("model", "data"))
+small = shrink_mesh(mesh, drop_data_rows=1)
+assert small.axis_names == ("model", "data"), small.axis_names
+assert dict(small.shape) == {"model": 1, "data": 1}, dict(small.shape)
+assert np.asarray(small.devices)[0, 0] == devs[0, 0]   # survivor = row 0
+
+# data axis FIRST: shape (2, 1)
+mesh2 = Mesh(devs.reshape(2, 1), ("data", "model"))
+small2 = shrink_mesh(mesh2, drop_data_rows=1)
+assert dict(small2.shape) == {"data": 1, "model": 1}
+assert np.asarray(small2.devices)[0, 0] == devs[0, 0]
+print("SHRINK_OK")
+""")
+    assert "SHRINK_OK" in out
+
+
+def test_remesh_state_round_trip():
+    """remesh_state moves a live sharded pytree onto the shrunk mesh
+    bit-for-bit, and the returned env reflects the new mesh."""
+    out = _run_subprocess(_PREAMBLE + r"""
+from jax.sharding import PartitionSpec as P
+from repro.runtime.elastic import remesh_state, shrink_mesh
+from repro.runtime.meshenv import make_env
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(2), ("data",))
+env = make_env(mesh)
+
+spec_fn = lambda e: {"w": P(), "x": P("data")}
+state = {
+    "w": jax.device_put(np.arange(6, dtype=np.float32).reshape(2, 3),
+                        jax.sharding.NamedSharding(mesh, P())),
+    "x": jax.device_put(np.arange(8, dtype=np.float32).reshape(4, 2),
+                        jax.sharding.NamedSharding(mesh, P("data"))),
+}
+
+small = shrink_mesh(mesh, drop_data_rows=1)
+new_state, new_env = remesh_state(state, spec_fn, env, small)
+
+assert new_env.mesh is small
+for k in state:
+    np.testing.assert_array_equal(np.asarray(new_state[k]),
+                                  np.asarray(state[k]))
+    assert new_state[k].sharding.mesh == small
+# the data-sharded leaf now lives entirely on the surviving device
+assert len(new_state["x"].sharding.device_set) == 1
+print("REMESH_OK")
+""")
+    assert "REMESH_OK" in out

@@ -1,0 +1,378 @@
+"""Fault injection + failure-aware evacuation replanning.
+
+Covers the chaos layer end-to-end: FaultConfig/Scenario round-trips,
+FaultModel determinism and scripted schedules, Topology.apply_faults
+recompute + bit-for-bit restore, and the acceptance property — a
+scripted single-server failure in the capacitated K=3 world leaves ZERO
+users offloading to the dead server within the step that killed it
+(every affected user re-admitted under residual budgets or degraded to
+device-only).  See docs/ARCHITECTURE.md, "Failure handling".
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import Scenario, Session, get_scenario
+from repro.configs.chain_cnns import nin
+from repro.core.costs import DeviceFleet
+from repro.core.faults import (HOP_UNREACHABLE, FaultBatch, FaultConfig,
+                               FaultModel, clamp_hops)
+from repro.core.ligd import LiGDConfig
+from repro.core.mobility import RandomWaypointMobility
+from repro.core.network import build_topology
+from repro.core.planner import MCSAPlanner
+from repro.core.profile import profile_of
+
+CFG = LiGDConfig(max_iters=60)
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_of(nin())
+
+
+def _kill(z, t=0.0):
+    b = FaultBatch.empty(t)
+    b.server_down = np.asarray([z] if np.isscalar(z) else z, np.int64)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# config + serialization
+# ---------------------------------------------------------------------------
+def test_fault_config_json_round_trip():
+    cfg = FaultConfig(server_mtbf=240.0, server_mttr=60.0,
+                      link_mtbf=300.0, link_mttr=90.0,
+                      capacity_jitter=0.15, seed=7,
+                      schedule=(("server_down", 30.0, 2),
+                                ("server_up", 150.0, 2)))
+    d = json.loads(json.dumps(cfg.to_dict()))
+    assert FaultConfig.from_dict(d) == cfg
+
+
+def test_fault_config_rejects_unknown_kind_and_field():
+    with pytest.raises(ValueError, match="unknown fault-schedule kind"):
+        FaultConfig(schedule=(("server_explode", 1.0, 0),))
+    with pytest.raises(TypeError, match="unknown FaultConfig fields"):
+        FaultConfig.from_dict({"server_mtbf": 10.0, "mtbf": 10.0})
+
+
+@pytest.mark.parametrize("name", ["chaos_singlefail_k3", "chaos_churn"])
+def test_chaos_presets_round_trip_through_json(name):
+    sc = get_scenario(name)
+    assert sc.faults is not None
+    assert Scenario.from_dict(json.loads(json.dumps(sc.to_dict()))) == sc
+
+
+def test_clamp_hops_is_finite_and_astronomical():
+    h = clamp_hops(np.asarray([0.0, 3.0, np.inf, np.nan]))
+    assert np.all(np.isfinite(h))
+    assert h[0] == 0.0 and h[1] == 3.0
+    assert h[2] == h[3] == HOP_UNREACHABLE
+    assert HOP_UNREACHABLE < 2 ** 31          # int32/float32-safe
+
+
+# ---------------------------------------------------------------------------
+# FaultModel: determinism + schedule
+# ---------------------------------------------------------------------------
+def test_fault_trajectory_is_pure_function_of_config():
+    cfg = FaultConfig(server_mtbf=120.0, server_mttr=60.0,
+                      link_mtbf=150.0, link_mttr=60.0,
+                      capacity_jitter=0.2, seed=3)
+    runs = []
+    for _ in range(2):
+        fm = FaultModel(cfg, num_servers=6, num_links=10)
+        runs.append([fm.step(30.0, i * 30.0) for i in range(20)])
+    for a, b in zip(*runs):
+        for f in ("server_down", "server_up", "link_down", "link_up"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        np.testing.assert_array_equal(a.r_scale, b.r_scale)
+        np.testing.assert_array_equal(a.B_scale, b.B_scale)
+    # churn actually happened somewhere in 20 steps
+    assert any(len(b) for b in runs[0])
+
+
+def test_schedule_fires_exactly_once_at_its_time():
+    fm = FaultModel(FaultConfig(schedule=(("server_down", 30.0, 1),
+                                          ("server_up", 90.0, 1))), 3)
+    assert not fm.step(30.0, 0.0)                      # t=0 < 30: quiet
+    b = fm.step(30.0, 30.0)
+    assert b.server_down.tolist() == [1] and not len(b.server_up)
+    assert not fm.step(30.0, 60.0)                     # fired once only
+    b = fm.step(30.0, 120.0)                           # late is fine
+    assert b.server_up.tolist() == [1]
+    assert fm.server_ok.all()
+
+
+def test_schedule_target_out_of_range_raises():
+    with pytest.raises(ValueError, match="out of range"):
+        FaultModel(FaultConfig(schedule=(("server_down", 0.0, 5),)), 3)
+
+
+def test_empty_batch_is_falsy_capacity_churn_is_not():
+    assert not FaultBatch.empty()
+    b = FaultBatch.empty()
+    b.r_scale = np.ones(3)
+    assert b and len(b) == 0
+
+
+# ---------------------------------------------------------------------------
+# Topology.apply_faults: recompute + restore
+# ---------------------------------------------------------------------------
+def test_apply_faults_recomputes_and_recovery_restores_bit_for_bit():
+    topo = build_topology(16, 3, seed=0)
+    orig = (topo.hops.copy(), topo.ap_server.copy(), topo.adj.copy())
+    assert not topo.faulted and topo.availability == 1.0
+
+    dead = int(np.bincount(topo.ap_server, minlength=3).argmax())
+    topo.apply_faults(_kill(dead))
+    assert topo.faulted and topo.availability == pytest.approx(2 / 3)
+    assert np.all(np.isinf(topo.hops[:, dead]))        # unreachable column
+    assert not np.any(topo.ap_server == dead)          # associations moved
+    assert topo.ap_reachable.all()                     # others still cover
+    # hop-ordered candidate sets sort the dead server last
+    assert np.all(topo.candidates(3)[:, -1] == dead)
+
+    # cut a fiber link too, then restore everything
+    b = FaultBatch.empty()
+    b.link_down = np.asarray([0], np.int64)
+    topo.apply_faults(b)
+    assert not topo.adj[tuple(topo.links()[0])]
+
+    up = FaultBatch.empty()
+    up.server_up = np.asarray([dead], np.int64)
+    up.link_up = np.asarray([0], np.int64)
+    topo.apply_faults(up)
+    assert topo.availability == 1.0
+    np.testing.assert_array_equal(topo.hops, orig[0])
+    np.testing.assert_array_equal(topo.ap_server, orig[1])
+    np.testing.assert_array_equal(topo.adj, orig[2])
+
+
+def test_blackout_keeps_prefault_association_flagged_unreachable():
+    topo = build_topology(9, 2, seed=0)
+    before = topo.ap_server.copy()
+    topo.apply_faults(_kill([0, 1]))
+    assert topo.availability == 0.0
+    np.testing.assert_array_equal(topo.ap_server, before)
+    assert not topo.ap_reachable.any()
+
+
+# ---------------------------------------------------------------------------
+# evacuation replanning (planner level)
+# ---------------------------------------------------------------------------
+def test_evacuation_readmits_when_survivors_have_headroom(prof):
+    # ample budgets: every affected user must be re-admitted, none degraded
+    topo = build_topology(25, 4, seed=0, r_capacity=1e6)
+    devs = DeviceFleet(c_dev=np.random.default_rng(0).uniform(
+        3e9, 8e9, 64))
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+    _, _, fleet = planner.plan_static(devs, np.arange(64) % 25)
+
+    offl = fleet.split < prof.num_layers
+    dead = int(np.bincount(fleet.server[offl],
+                           minlength=4).argmax())
+    affected = int((offl & (fleet.server == dead)).sum())
+    assert affected > 0
+
+    topo.apply_faults(_kill(dead, t=30.0))
+    rep = planner.on_faults(_kill(dead, t=30.0), devs, fleet)
+    assert rep.evacuated == affected and rep.degraded == 0
+    assert planner.last_evacuation is rep
+    up = topo.server_available()
+    offl = fleet.split < prof.num_layers
+    assert not np.any(~up[fleet.server] & offl)        # zero stranded
+    assert np.all(np.isfinite(fleet.U))
+
+
+def test_evacuation_respects_residual_budgets(prof):
+    # tight budgets: the evacuation waterfill must fit in the headroom
+    # the unaffected users leave, never the full capacity
+    topo = build_topology(25, 4, seed=0, r_capacity=60.0)
+    devs = DeviceFleet(c_dev=np.random.default_rng(1).uniform(
+        3e9, 8e9, 96))
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+    _, _, fleet = planner.plan_static(devs, np.arange(96) % 25)
+
+    offl = fleet.split < prof.num_layers
+    dead = int(np.bincount(fleet.server[offl], minlength=4).argmax())
+    topo.apply_faults(_kill(dead, t=30.0))
+    rep = planner.on_faults(_kill(dead, t=30.0), devs, fleet)
+    assert rep.evacuated + rep.degraded == len(rep.users)
+
+    up = topo.server_available()
+    offl = fleet.split < prof.num_layers
+    assert not np.any(~up[fleet.server] & offl)
+    # post-evacuation loads on survivors stay within the (unchurned)
+    # budgets: the static plan respected them and the evacuation only
+    # filled residual headroom
+    r_load = np.bincount(fleet.server[offl], weights=fleet.r[offl],
+                         minlength=4)
+    assert np.all(r_load[up] <= np.asarray(topo.r_capacity)[up] + 1e-9)
+    assert r_load[dead] == 0.0
+
+
+def test_all_servers_down_degrades_everyone_to_device_only(prof):
+    topo = build_topology(16, 2, seed=0)
+    devs = DeviceFleet(c_dev=np.linspace(3e9, 8e9, 24))
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=2)
+    _, _, fleet = planner.plan_static(devs, np.arange(24) % 16)
+    was_offl = int((fleet.split < prof.num_layers).sum())
+    assert was_offl > 0
+
+    topo.apply_faults(_kill([0, 1], t=30.0))
+    rep = planner.on_faults(_kill([0, 1], t=30.0), devs, fleet)
+    assert rep.degraded == was_offl and rep.evacuated == 0
+    assert np.all(fleet.split == prof.num_layers)
+    np.testing.assert_array_equal(fleet.r, 0.0)
+    np.testing.assert_array_equal(fleet.B, 0.0)
+    assert np.all(np.isfinite(fleet.U)) and np.all(fleet.T > 0)
+
+
+def test_hysteresis_keeps_evacuees_off_just_recovered_server(prof):
+    topo = build_topology(25, 4, seed=0)
+    devs = DeviceFleet(c_dev=np.random.default_rng(2).uniform(
+        3e9, 8e9, 64))
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3,
+                          recovery_hold_steps=2)
+    _, _, fleet = planner.plan_static(devs, np.arange(64) % 25)
+    offl = fleet.split < prof.num_layers
+    z0 = int(np.bincount(fleet.server[offl], minlength=4).argmax())
+
+    topo.apply_faults(_kill(z0, t=30.0))
+    planner.on_faults(_kill(z0, t=30.0), devs, fleet)
+    offl = fleet.split < prof.num_layers
+    z1 = int(np.bincount(fleet.server[offl], minlength=4).argmax())
+    assert z1 != z0
+
+    # z0 comes back in the same batch that kills z1: evacuees from z1
+    # must avoid the just-recovered (held) z0 while other servers live
+    b = _kill(z1, t=60.0)
+    b.server_up = np.asarray([z0], np.int64)
+    topo.apply_faults(b)
+    rep = planner.on_faults(b, devs, fleet)
+    assert planner._hold[z0] == 2
+    assert len(rep.users) > 0
+    moved = rep.users
+    offl_m = fleet.split[moved] < prof.num_layers
+    assert not np.any(fleet.server[moved][offl_m] == z0)
+    # the hold decays: two more on_faults calls and z0 is usable again
+    planner.on_faults(FaultBatch.empty(90.0), devs, fleet)
+    planner.on_faults(FaultBatch.empty(120.0), devs, fleet)
+    assert planner._hold[z0] == 0
+
+
+def test_stale_async_replan_is_retried_not_scattered_onto_dead(prof):
+    topo = build_topology(25, 4, seed=0)
+    devs = DeviceFleet(c_dev=np.random.default_rng(3).uniform(
+        3e9, 8e9, 48))
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3,
+                          async_replanning=True)
+    mob = RandomWaypointMobility(topo, 48, seed=3,
+                                 speed_range=(20.0, 40.0))
+    _, _, fleet = planner.plan_static(devs,
+                                      topo.nearest_ap(mob.positions()))
+    batch = None
+    for t in range(300):
+        batch = mob.step(10.0, t * 10.0)
+        if batch:
+            break
+    assert batch
+    planner.on_handoffs(batch, devs, fleet)
+    p = planner._pending
+    assert p is not None
+    final = np.where(np.asarray(p.res.R, bool), p.orig_servers,
+                     np.asarray(p.new_server, np.int64))
+    dead = int(np.bincount(final, minlength=4).argmax())
+    stale = int((final == dead).sum())
+    assert stale > 0
+
+    topo.apply_faults(_kill(dead, t=999.0))
+    rep = planner.on_faults(_kill(dead, t=999.0), devs, fleet,
+                            user_aps=mob.ap)
+    assert rep.retried == stale
+    assert planner.replan_retries == stale
+    planner.drain(fleet)
+    up = topo.server_available()
+    offl = fleet.split < prof.num_layers
+    assert not np.any(~up[fleet.server] & offl)
+
+
+# ---------------------------------------------------------------------------
+# Session integration (the acceptance scenario)
+# ---------------------------------------------------------------------------
+def test_scripted_single_server_failure_acceptance():
+    """chaos_singlefail_k3: server 2 dies at t=30 s.  Within that same
+    step every affected user is re-admitted to a survivor or degraded to
+    device-only — zero users offloading to the dead server, at every
+    step of the outage."""
+    sc = get_scenario("chaos_singlefail_k3")
+    session = Session(sc)
+    M = session.profile.num_layers
+    saw_outage = False
+    for _ in range(sc.steps):
+        rep = session.step()
+        up = session.topo.server_available()
+        offl = session.fleet.split < M
+        assert not np.any(~up[session.fleet.server] & offl), \
+            "users left offloading to a down server"
+        if rep.evacuation is not None and len(rep.evacuation.users):
+            e = rep.evacuation
+            saw_outage = True
+            assert e.evacuated + e.degraded == len(e.users)
+        if not up.all():
+            # the session's live admission view reflects the evacuation
+            assert session.admission["users_per_server"][2] == 0
+    assert saw_outage
+
+    session.drain()
+    m = session.metrics()
+    assert m.availability.min() == pytest.approx(0.75)
+    assert m.availability[-1] == 1.0                  # scripted recovery
+    assert m.faults["availability_min"] == pytest.approx(0.75)
+    assert m.faults["recovery_times_s"] == [pytest.approx(120.0)]
+    assert not m.faults["still_down"]
+    assert (m.evacuated + m.degraded).sum() == \
+        m.faults["evacuated_total"] + m.faults["degraded_total"]
+
+
+def test_chaos_session_equals_unfaulted_until_first_fault():
+    # the fault layer is strictly additive: before anything fires, a
+    # chaos session is bit-for-bit the plain capacitated session
+    chaos = Session(get_scenario("chaos_singlefail_k3"))
+    plain = Session(get_scenario("capacitated_k3"))
+    np.testing.assert_array_equal(chaos.fleet.server, plain.fleet.server)
+    np.testing.assert_array_equal(chaos.fleet.U, plain.fleet.U)
+    r1, r2 = chaos.step(), plain.step()               # t=0: pre-kill
+    assert len(r1.events) == len(r2.events)
+    np.testing.assert_array_equal(chaos.fleet.split, plain.fleet.split)
+
+
+def test_refresh_admission_tracks_live_fleet_after_drain_and_faults():
+    """Satellite regression: ``Session.admission`` used to stay frozen at
+    the init-time static plan; it must now follow the live fleet through
+    async drains and fault evacuations."""
+    sc = get_scenario("chaos_singlefail_k3").replace(
+        num_users=200, async_replanning=True)
+    session = Session(sc)
+    M = session.profile.num_layers
+
+    def live_counts():
+        offl = session.fleet.split < M
+        return np.bincount(session.fleet.server[offl],
+                           minlength=session.topo.num_servers)
+
+    for _ in range(3):                # covers the t=30 s kill + a drain
+        session.step()
+        session.drain()
+        adm = session.admission
+        np.testing.assert_array_equal(adm["users_per_server"],
+                                      live_counts())
+        offl = session.fleet.split < M
+        np.testing.assert_allclose(
+            adm["r_load"],
+            np.bincount(session.fleet.server[offl],
+                        weights=session.fleet.r[offl],
+                        minlength=session.topo.num_servers))
+        assert adm["degraded"] == int((~offl).sum())

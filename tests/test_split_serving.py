@@ -9,7 +9,8 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import transformer as tfm
 from repro.runtime.meshenv import CPU_ENV as env
-from repro.serving.split import (SplitServer, activation_bits, device_prefix,
+from repro.serving.split import (ServerLostError, SplitServer,
+                                 activation_bits, device_prefix,
                                  edge_suffix, layer_params)
 
 
@@ -83,6 +84,59 @@ def test_same_activation_payload_as_planner_prices(setup):
                          cache_len=16)
     assert h.shape == (B, S, cfg.d_model)
     assert activation_bits(cfg, B, S) == B * S * cfg.d_model * 16
+
+
+def test_server_loss_raises_typed_error(setup):
+    cfg, params = setup
+    tok = jax.random.randint(jax.random.PRNGKey(5), (1, 6), 0,
+                             cfg.vocab_size)
+    server = SplitServer(cfg, params, env, name="edge-0")
+    server.fail()
+    with pytest.raises(ServerLostError) as exc:
+        server.prefill(tok, 2, cache_len=16)
+    assert exc.value.server == "edge-0"
+    server.restore()
+    server.prefill(tok, 2, cache_len=16)      # back up: works again
+
+
+def test_failover_mid_stream_preserves_output_and_prices_relay(setup):
+    """Losing the edge server mid-generation and relaying to a fallback
+    yields the SAME tokens as an uninterrupted run, and the relay-back
+    is priced as activation_bits x hops / bandwidth."""
+    cfg, params = setup
+    B, S, N, split = 1, 6, 5, 2
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                             cfg.vocab_size)
+    ref = SplitServer(cfg, params, env).generate(tok, split, max_new=N)
+
+    primary = SplitServer(cfg, params, env, name="edge-0")
+    fallback = SplitServer(cfg, params, env, name="edge-1")
+    primary.fail(after_calls=3)     # dies after prefill + 2 decodes
+    out, report = primary.generate_with_failover(
+        tok, split, max_new=N, fallbacks=[fallback],
+        hops_back=2.0, bandwidth_hz=20e6)
+    assert list(np.asarray(out[0])) == list(np.asarray(ref[0]))
+    assert report.retries == 1
+    ev = report.events[0]
+    assert ev.lost == "edge-0" and ev.tokens_done == 3
+    expected_bits = activation_bits(cfg, B, S + 3)
+    assert ev.relay_bits == expected_bits
+    assert ev.relay_s == pytest.approx(expected_bits * 2.0 / 20e6)
+    assert report.relay_s == pytest.approx(ev.relay_s)
+
+
+def test_failover_exhausted_reraises(setup):
+    cfg, params = setup
+    tok = jax.random.randint(jax.random.PRNGKey(6), (1, 6), 0,
+                             cfg.vocab_size)
+    primary = SplitServer(cfg, params, env, name="edge-0")
+    fallback = SplitServer(cfg, params, env, name="edge-1")
+    primary.fail()
+    fallback.fail()
+    with pytest.raises(ServerLostError) as exc:
+        primary.generate_with_failover(tok, 2, max_new=3,
+                                       fallbacks=[fallback])
+    assert exc.value.server == "edge-1"       # the LAST hope that died
 
 
 def test_split_zero_equals_edge_only_and_full_equals_device_only(setup):

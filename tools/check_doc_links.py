@@ -2,9 +2,12 @@
 """Fail CI on broken intra-repo documentation links.
 
 Scans every tracked ``*.md`` file for markdown links/images and verifies
-that relative targets exist on disk (anchors are stripped; external
-``http(s):``/``mailto:`` targets are skipped).  Also verifies the
-``docs/...`` path references that module docstrings use as cross-links.
+that relative targets exist on disk AND that ``#anchor`` fragments match
+a real heading in the target file (GitHub-style slugs; in-page ``#...``
+links are checked against the file they appear in).  Also verifies the
+``docs/...`` path references (an optional ``#anchor`` suffix is checked
+too) that module docstrings use as cross-links.  External ``http(s):``/``mailto:``
+targets are skipped.
 
 Run:  python tools/check_doc_links.py  (from the repo root or anywhere)
 """
@@ -12,14 +15,39 @@ from __future__ import annotations
 
 import re
 import sys
+from functools import lru_cache
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 MD_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 # docstring cross-links like "docs/ARCHITECTURE.md" or
-# "see docs/ARCHITECTURE.md (...)" inside python sources
-PY_DOC_REF = re.compile(r"\bdocs/[A-Za-z0-9_.-]+\.md\b")
-SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+# "docs/ARCHITECTURE.md#failure-handling" inside python sources
+PY_DOC_REF = re.compile(
+    r"\bdocs/[A-Za-z0-9_.-]+\.md(?:#[A-Za-z0-9_-]+)?")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+MD_HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.MULTILINE)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style heading slug: drop markdown markers and punctuation,
+    lowercase, spaces -> hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+@lru_cache(maxsize=None)
+def heading_anchors(md_path: str) -> frozenset:
+    """All anchor slugs a markdown file exposes (duplicate headings get
+    GitHub's ``-1``/``-2`` suffixes)."""
+    seen: dict = {}
+    out = set()
+    for m in MD_HEADING.finditer(Path(md_path).read_text(encoding="utf-8")):
+        slug = _slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return frozenset(out)
 
 
 def iter_files(suffix: str):
@@ -30,6 +58,16 @@ def iter_files(suffix: str):
         yield p
 
 
+def _check_anchor(src: Path, target: str, resolved: Path,
+                  anchor: str, errors: list) -> None:
+    if resolved.suffix != ".md":
+        return                        # only markdown targets have headings
+    if anchor not in heading_anchors(str(resolved)):
+        errors.append(f"{src.relative_to(ROOT)}: broken anchor "
+                      f"-> {target} (no heading slugs to {anchor!r} in "
+                      f"{resolved.relative_to(ROOT)})")
+
+
 def check_markdown() -> list:
     errors = []
     for md in iter_files(".md"):
@@ -37,13 +75,14 @@ def check_markdown() -> list:
             target = m.group(1)
             if target.startswith(SKIP_SCHEMES):
                 continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            resolved = (md.parent / path).resolve()
+            path, _, anchor = target.partition("#")
+            resolved = (md.parent / path).resolve() if path else md
             if not resolved.exists():
                 errors.append(f"{md.relative_to(ROOT)}: broken link "
                               f"-> {target}")
+                continue
+            if anchor:
+                _check_anchor(md, target, resolved, anchor, errors)
     return errors
 
 
@@ -51,9 +90,15 @@ def check_docstring_refs() -> list:
     errors = []
     for py in iter_files(".py"):
         for m in PY_DOC_REF.finditer(py.read_text(encoding="utf-8")):
-            if not (ROOT / m.group(0)).exists():
+            target = m.group(0)
+            path, _, anchor = target.partition("#")
+            resolved = ROOT / path
+            if not resolved.exists():
                 errors.append(f"{py.relative_to(ROOT)}: dangling doc "
-                              f"reference -> {m.group(0)}")
+                              f"reference -> {target}")
+                continue
+            if anchor:
+                _check_anchor(py, target, resolved, anchor, errors)
     return errors
 
 
