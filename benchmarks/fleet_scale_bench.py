@@ -50,7 +50,17 @@ Seven measurements:
      outage window.  The zero-stranded-users invariant is asserted at
      every step.
 
-  7. **scenario matrix** — every registered Scenario preset, capped to
+  7. **incremental event pipeline** — the dirty-set replan
+     (``MCSAPlanner.on_events``) at ``--big-users`` scale: synthesized
+     handoff batches at 0.1% / 1% / 5% of the fleet, each solved
+     through the event pipeline (per-step latency vs dirty-set size in
+     the ``incremental`` track) against the cost of a full-fleet
+     ``plan_static`` sweep — what every event-bearing step would pay
+     without incrementality.  At full scale the ~1% batch must win by
+     >= 5x (asserted; recorded-only at reduced smoke scale, where fixed
+     dispatch overheads dominate both sides).
+
+  8. **scenario matrix** — every registered Scenario preset, capped to
      ``--matrix-users`` users, planned + stepped once through Session:
      a smoke that each named world stays plannable, with per-preset
      plan/step timings in the ``scenario_matrix`` track.
@@ -77,9 +87,11 @@ from repro.api import (FaultConfig, Scenario, Session, get_scenario,
 from repro.configs.chain_cnns import nin
 from repro.core.costs import (DeviceFleet, DeviceParams, LayerProfile,
                               edge_dict, stack_devices, stack_edges)
+from repro.core.events import StepEvents
+from repro.core.faults import clamp_hops
 from repro.core.ligd import LiGDConfig, LiGDResult, solve_ligd_batch_jit
 from repro.core.mligd import orig_strategy_dict, solve_mligd_batch_jit
-from repro.core.mobility import RandomWaypointMobility
+from repro.core.mobility import HandoffBatch, RandomWaypointMobility
 from repro.core.network import build_topology
 from repro.core.planner import MCSAPlanner, UserPlan
 from repro.core.profile import profile_of
@@ -200,6 +212,24 @@ def _run_seed(topo, prof, cfg, c_dev, steps: int, dt: float,
     return (sess.timings["plan_s"],
             sess.timings["steps_s"] + sess.timings["drain_s"],
             sess.total_handoffs, sess.fleet)
+
+
+def _synth_handoffs(topo, fleet, n: int, t: float) -> HandoffBatch:
+    """A deterministic n-user handoff batch: each of the first n users
+    moves to an AP served by a different server than its current one
+    (so repeated calls flip-flop and every call is a real handoff)."""
+    users = np.arange(n)
+    cur = np.asarray(fleet.server[users], np.int64)
+    alt_ap = np.empty(topo.num_servers, np.int64)
+    for s in range(topo.num_servers):
+        alt_ap[s] = np.nonzero(topo.ap_server != s)[0][0]
+    new_ap = alt_ap[cur]
+    new_server = topo.ap_server[new_ap].astype(np.int64)
+    return HandoffBatch(
+        t=t, user=users, old_server=cur, new_server=new_server,
+        new_ap=new_ap,
+        hops_new=clamp_hops(topo.hops[new_ap, new_server]).astype(np.int64),
+        hops_back=clamp_hops(topo.hops[new_ap, cur]).astype(np.int64))
 
 
 def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
@@ -403,6 +433,63 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
           f"t={dt:.0f}s: evacuation replan {evac_latency:.2f}s "
           f"({evacuated} evacuated, {degraded} degraded), cost overhead "
           f"x{overhead:.3f} during the outage")
+
+    # ---- incremental event pipeline: dirty-set replan vs full sweep.
+    # The comparator is what a non-incremental control plane pays on
+    # every event-bearing step: a full-fleet plan_static.  The event
+    # pipeline solves only the dirty rows, so its per-step latency must
+    # scale with the handoff count, not the fleet size.
+    inc_topo = build_topology(25, 4, seed=0)
+    inc_dev = DeviceFleet(c_dev=np.resize(c_dev, big_users))
+    inc_aps = inc_topo.nearest_ap(
+        RandomWaypointMobility(inc_topo, big_users, seed=3).positions())
+
+    sweep_planner = MCSAPlanner(prof, inc_topo, cfg)
+    sweep_planner.plan_static(inc_dev, inc_aps)                  # warm
+    t0 = time.perf_counter()
+    sweep_planner.plan_static(inc_dev, inc_aps)
+    t_sweep = time.perf_counter() - t0
+
+    planner = MCSAPlanner(prof, inc_topo, cfg)
+    fleet_inc = planner.plan(inc_dev, inc_aps)
+    by_size = {}
+    for rate in (0.001, 0.01, 0.05):
+        n = max(1, int(big_users * rate))
+        planner.on_events(                                       # warm
+            StepEvents.from_handoffs(_synth_handoffs(inc_topo, fleet_inc,
+                                                     n, 0.0)),
+            inc_dev, fleet_inc, sync=True)
+        t_best = np.inf
+        for rep in range(2):
+            hb = _synth_handoffs(inc_topo, fleet_inc, n, float(rep + 1))
+            t0 = time.perf_counter()
+            outcome = planner.on_events(StepEvents.from_handoffs(hb),
+                                        inc_dev, fleet_inc, sync=True)
+            t_best = min(t_best, time.perf_counter() - t0)
+        assert len(outcome.dirty) == n
+        by_size[n] = t_best
+        rows.append(f"fleet_bench,{big_users},incremental,"
+                    f"step_{n}_dirty_s,{t_best:.4f}")
+
+    n_1pct = max(1, int(big_users * 0.01))
+    inc_win = t_sweep / by_size[n_1pct]
+    rows.append(f"fleet_bench,{big_users},incremental,full_sweep_s,"
+                f"{t_sweep:.3f}")
+    rows.append(f"fleet_bench,{big_users},incremental,win_at_1pct,"
+                f"{inc_win:.2f}")
+    results["incremental"] = {
+        "users": big_users, "full_sweep_s": t_sweep,
+        "step_s_by_dirty": {str(k): v for k, v in by_size.items()},
+        "win_at_1pct": inc_win}
+    # fixed dispatch overheads dominate at smoke scale; the >=5x claim
+    # is about the real fleet size
+    if big_users >= 50_000:
+        assert inc_win >= 5.0, \
+            (f"incremental 1% handoff step ({by_size[n_1pct]:.3f}s) is "
+             f"less than 5x faster than the {t_sweep:.3f}s full sweep")
+    print(f"[incremental] {big_users} users: full sweep {t_sweep:.2f}s; "
+          + ", ".join(f"{n} dirty {t:.3f}s" for n, t in by_size.items())
+          + f" -> {inc_win:.1f}x win at 1%")
 
     # ---- scenario matrix: every registered preset plans + steps once
     matrix = {}

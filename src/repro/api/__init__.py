@@ -37,8 +37,11 @@ The 60-second version::
 ``MCSAPlanner(...).plan_static`` / hand-rolled-loop entry points keep
 working); new code should come through this package.
 """
+from repro.core.events import (DirtyBatch, DirtySet, EventOutcome,
+                               StepEvents)
 from repro.core.faults import (EvacuationReport, FaultBatch, FaultConfig,
                                FaultModel)
+from repro.core.ledger import BudgetLedger
 
 from .policies import (POLICIES, BaselinePolicy, CloudPolicy,
                        DNNSurgeryPolicy, DeviceOnlyPolicy, EdgeOnlyPolicy,
@@ -56,4 +59,6 @@ __all__ = [
     "GreedyNearestPolicy", "DNNSurgeryPolicy",
     "Session", "SessionMetrics", "StepReport",
     "FaultConfig", "FaultModel", "FaultBatch", "EvacuationReport",
+    "StepEvents", "EventOutcome", "DirtyBatch", "DirtySet",
+    "BudgetLedger",
 ]

@@ -62,6 +62,20 @@ class Policy(Protocol):
     un-applied solve (which would destroy the overlap) nor accounting
     its decisions as landed.  Policies without the attribute are treated
     as synchronous.
+
+    Optional entry points (duck-typed, NOT part of the structural
+    protocol so minimal policies stay valid):
+
+    * ``on_events(StepEvents, devices, fleet, user_aps=...)`` — the
+      incremental event pipeline (one dirty-set solve for the step's
+      handoffs + faults + drains, returning an
+      :class:`repro.core.events.EventOutcome`).  When present, Session
+      PREFERS it over the per-kind ``on_handoffs``/``on_faults``
+      dispatch (docs/ARCHITECTURE.md, "Event lifecycle").
+    * ``on_faults(FaultBatch, devices, fleet, user_aps=...)`` — the
+      legacy fault hook; policies with neither get synthesized
+      evacuation handoffs from Session so no policy can keep users on
+      dead servers.
     """
 
     def plan(self, devices: Devices, user_aps: np.ndarray) -> FleetState:
@@ -182,6 +196,25 @@ class CloudPolicy(BaselinePolicy):
                     fleet: FleetState):
         return None                 # plan is position-independent
 
+    def on_faults(self, batch, devices: Devices, fleet: FleetState,
+                  user_aps=None):
+        """Position-independent is not failure-independent: when the
+        datacenter goes down (or becomes unreachable) the whole fleet
+        fails over to the best-provisioned surviving server — still one
+        cloud, just a different one."""
+        up = self.topo.server_available()
+        if up[self.cloud_server] or not up.any():
+            return None
+        score = np.array([e.c_min * e.r_max for e in self.topo.edges],
+                         np.float64)
+        score[~up] = -np.inf
+        self.cloud_server = int(np.argmax(score))
+        X = len(fleet.server)
+        servers, hops = self._serving(np.zeros(X, np.int64))
+        res = self._evaluate(stack_devices(devices), servers, hops)
+        fleet.scatter(np.arange(X), servers, res, R=0)
+        return None
+
 
 #: policy-name registry for scenarios / CLIs (classes, not instances:
 #: Session instantiates via make_policy)
@@ -221,7 +254,9 @@ def make_policy(spec, scenario, profile: LayerProfile,
         if issubclass(spec, MCSAPlanner):
             return spec(profile, topo, scenario.ligd,
                         candidates_k=scenario.candidates_k,
-                        async_replanning=scenario.async_replanning)
+                        async_replanning=scenario.async_replanning,
+                        async_horizon=scenario.async_horizon,
+                        hysteresis=scenario.hysteresis)
         return spec(profile, topo)
     if not isinstance(spec, Policy):
         raise TypeError(f"{type(spec).__name__} does not implement the "

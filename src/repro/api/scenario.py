@@ -61,7 +61,11 @@ class Scenario:
     mobility  : ``mobility`` model name (``random_waypoint``/``static``)
                 + ``speed_range`` / ``mobility_seed``
     planner   : ``ligd`` (the full :class:`LiGDConfig`), admission
-                ``candidates_k``, ``async_replanning`` polarity, and
+                ``candidates_k``, ``async_replanning`` polarity +
+                ``async_horizon`` (max dispatched-but-unapplied replans),
+                ``hysteresis`` (relative switch margin — a user only
+                changes servers when the replan beats its current plan
+                by this fraction; 0 = the paper's always-argmin), and
                 ``admission_aware_handoffs`` (None = auto: on exactly
                 when admission control is active — K > 1 or budgets set)
     faults    : optional :class:`repro.core.faults.FaultConfig` — the
@@ -95,6 +99,8 @@ class Scenario:
     ligd: LiGDConfig = LiGDConfig()
     candidates_k: int = 1
     async_replanning: bool = False
+    async_horizon: int = 1
+    hysteresis: float = 0.0
     admission_aware_handoffs: Optional[bool] = None
     # --- fault injection (None = chaos off) ---
     faults: Optional[FaultConfig] = None

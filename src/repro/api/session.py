@@ -20,13 +20,22 @@ handoff replan, then accounting), pinned bit-for-bit against the
 pre-redesign ``examples/mobility_sim.py`` trajectory over the
 ``paper_fig1`` preset in ``tests/test_api.py``.
 
+Policies that implement the optional ``on_events`` entry point (the
+:class:`~repro.core.planner.MCSAPlanner` event pipeline) get this
+step's handoffs AND faults in one :class:`repro.core.events.StepEvents`
+bundle — one dirty-set solve per step, last-wins when the same user is
+both evacuated and handed off in one tick (docs/ARCHITECTURE.md,
+"Event lifecycle").  Policies without it keep the legacy per-kind
+dispatch (``on_faults`` / synthesized evacuation handoffs, then
+``on_handoffs``).
+
 When the scenario carries a :class:`repro.core.faults.FaultConfig`
 (``faults`` field; ``chaos_*`` presets), each step FIRST advances the
-fault process and folds any transitions into the topology + an
-evacuation replan (``policy.on_faults``) before mobility moves anyone —
-so handoff detection never sees a user admitted to a server that no
-longer exists.  Scenarios without faults skip the whole block and run
-bit-for-bit as before.  See docs/ARCHITECTURE.md ("Failure handling").
+fault process and folds any transitions into the topology before
+mobility moves anyone — so handoff detection never prices a relay-back
+against a server as if it were still reachable.  Scenarios without
+faults skip the whole block and run bit-for-bit as before.  See
+docs/ARCHITECTURE.md ("Failure handling").
 
 Per-step accounting accumulates as struct-of-arrays and comes back from
 :meth:`Session.metrics` as a :class:`SessionMetrics`; wall-clock spent
@@ -42,6 +51,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.events import StepEvents
 from repro.core.faults import clamp_hops
 from repro.core.mobility import HandoffBatch
 
@@ -240,6 +250,7 @@ class Session:
         sc = self.scenario
         t = self.t
 
+        on_events = getattr(self.policy, "on_events", None)
         fault_batch = None
         evacuation = None
         if self.fault_model is not None:
@@ -247,7 +258,12 @@ class Session:
             fault_batch = self.fault_model.step(sc.dt, t)
             if fault_batch:
                 self.topo.apply_faults(fault_batch)
-                evacuation = self._dispatch_faults(fault_batch)
+                if on_events is None:
+                    # legacy / baseline policies: evacuate BEFORE
+                    # mobility so detection never keys on a dead server
+                    # (event-pipeline policies fold the evacuation into
+                    # the same-step on_events call below instead)
+                    evacuation = self._dispatch_faults(fault_batch)
                 self._track_recovery(fault_batch, t)
                 # fault-driven coverage changes are not user movement:
                 # resync the mobility model's nearest-server tracking so
@@ -276,7 +292,18 @@ class Session:
         batch = self.mobility.step(sc.dt, t, admitted=admitted) \
             if admitted is not None else self.mobility.step(sc.dt, t)
         result = None
-        if len(batch):
+        outcome = None
+        if on_events is not None and (len(batch) or
+                                      fault_batch is not None):
+            # the incremental pipeline: this step's handoffs + faults
+            # flow through ONE dirty-set solve (last-wins per user)
+            outcome = on_events(
+                StepEvents(t=t, handoffs=batch, faults=fault_batch),
+                self.devices, self.fleet,
+                user_aps=np.asarray(self.mobility.ap))
+            result = outcome.result
+            evacuation = outcome.evacuation
+        elif on_events is None and len(batch):
             result = self.policy.on_handoffs(batch, self.devices,
                                              self.fleet)
         # the Policy in-flight contract: a truthy `pending` means a
@@ -286,15 +313,23 @@ class Session:
         if in_flight:
             result = None             # forcing it would kill the overlap
         self.timings["steps_s"] += time.perf_counter() - t0
+        if outcome is not None and not in_flight \
+                and self.admission is not None \
+                and (len(outcome.dirty) or evacuation is not None):
+            # the synchronous pipeline already moved users between
+            # servers (drain() would no-op, so it can't refresh for us)
+            self.refresh_admission()
 
         self.steps_taken += 1
         self.total_handoffs += len(batch)
         log = self._log
         log["t"].append(t)
         log["handoffs"].append(len(batch))
-        R = getattr(result, "R", None)
-        if R is not None:
-            relays = int(np.asarray(R).sum())
+        if outcome is not None and outcome.relays is not None:
+            log["relays"].append(outcome.relays)
+            log["resplits"].append(outcome.resplits)
+        elif getattr(result, "R", None) is not None:
+            relays = int(np.asarray(result.R).sum())
             log["relays"].append(relays)
             log["resplits"].append(len(batch) - relays)
         elif len(batch) == 0:

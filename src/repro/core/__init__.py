@@ -12,8 +12,11 @@ from .admission import AdmissionReport, admit_waterfill
 from .costs import (DeviceFleet, DeviceParams, EdgeParams, LayerProfile,
                     dev_dict, edge_dict, stack_devices, stack_edges,
                     utility)
+from .events import (DRAIN, EVACUATE, HANDOFF, DirtyBatch, DirtySet,
+                     EventOutcome, StepEvents)
 from .faults import (HOP_UNREACHABLE, EvacuationReport, FaultBatch,
                      FaultConfig, FaultModel, clamp_hops)
+from .ledger import BudgetLedger
 from .ligd import LiGDConfig, LiGDResult, solve_ligd, solve_ligd_batch_jit
 from .mligd import (MLiGDResult, orig_strategy_dict, solve_mligd,
                     solve_mligd_batch_jit)
@@ -26,6 +29,8 @@ from .planner import PLAN_FIELDS, FleetState, MCSAPlanner, UserPlan
 
 __all__ = [
     "AdmissionReport", "admit_waterfill",
+    "DRAIN", "EVACUATE", "HANDOFF", "DirtyBatch", "DirtySet",
+    "EventOutcome", "StepEvents", "BudgetLedger",
     "HOP_UNREACHABLE", "EvacuationReport", "FaultBatch", "FaultConfig",
     "FaultModel", "clamp_hops",
     "DeviceFleet", "DeviceParams", "EdgeParams", "LayerProfile",

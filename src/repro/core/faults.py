@@ -178,6 +178,10 @@ class EvacuationReport:
     retried      : stale async-replan rows re-dispatched against the
                    updated topology instead of scattered onto a dead
                    server
+    drained      : users shed from servers whose effective capacity
+                   churned below their ledger usage (re-admitted through
+                   the same dirty-set pipeline; capacitated topologies
+                   only)
     admission    : the evacuation water-filling AdmissionReport (None
                    when nothing needed the candidate solve)
     """
@@ -187,6 +191,7 @@ class EvacuationReport:
     degraded: int = 0
     reassociated: int = 0
     retried: int = 0
+    drained: int = 0
     admission: Optional[object] = None
 
 

@@ -5,8 +5,11 @@ Responsibilities:
   * static planning — per-user (s, B, r) via batched Li-GD against each
     user's serving edge server (per-user edge params gathered from a
     per-topology table, solved in one vectorized call);
-  * mobility — on handoff events, batched MLi-GD decisions (re-solve vs
-    relay-back), updating the fleet's strategy table;
+  * incremental replanning — handoffs, fault evacuations, and capacity
+    drains all enqueue into one dirty set (``repro.core.events``) and
+    are re-solved by ONE fused MLi-GD solve per step over only the
+    dirty rows, with a sparse scatter into the fleet table
+    (docs/ARCHITECTURE.md, "Event lifecycle");
   * strategy-calculation-time feedback — measured solver time feeds the
     CBR term T_Ag/k of the *next* solve (Eq. 6/7's self-consistency).
 
@@ -28,7 +31,7 @@ Optionally the static solve shards users across devices with ``shard_map``
 batched Li-GD (fused or autodiff per ``cfg.solver``) on its slice of the
 fleet — the solves are independent, so no collectives are needed.
 
-Two control-plane extensions on top of the paper's model (see
+Control-plane extensions on top of the paper's model (see
 docs/ARCHITECTURE.md for the dataflow):
 
 * **Admission control** — with ``candidates_k > 1`` (or a capacitated
@@ -38,14 +41,28 @@ docs/ARCHITECTURE.md for the dataflow):
   each user to its cheapest candidate under the per-server compute /
   bandwidth budgets, spilling to the next candidate on saturation and
   falling back to device-only execution when every candidate is full.
+  The per-server headroom lives in a persistent, delta-updated
+  :class:`repro.core.ledger.BudgetLedger` shared by the static plan,
+  handoff replanning, and fault evacuation.
+
+* **Event pipeline** — :meth:`MCSAPlanner.on_events` is the incremental
+  core: one step's handoffs + faults + capacity drains are normalized
+  into a last-wins dirty set, solved by one fused candidate-set MLi-GD
+  launch over the dirty rows only, admitted (argmin-U when
+  uncapacitated; water-filling under the ledger's residuals otherwise,
+  so handoff replanning is capacity-aware), and scattered sparsely.
+  ``on_handoffs`` and ``on_faults`` are thin consumers of this
+  pipeline.  A ``hysteresis`` margin keeps border users from
+  ping-ponging: a user only switches servers when the re-split beats
+  the stay/relay continuation by the margin.
 
 * **Async replanning** — ``on_handoffs(..., sync=False)`` (or
   ``async_replanning=True`` at construction) dispatches the padded
   MLi-GD solve WITHOUT forcing it, so the next mobility step overlaps
   the solve (JAX async dispatch); the decisions are scattered into the
-  fleet table one step late — at the next ``on_handoffs`` call or an
-  explicit :meth:`MCSAPlanner.drain`.  ``sync=True`` preserves the
-  original blocking semantics exactly.
+  fleet table up to ``async_horizon`` steps late — at later
+  ``on_handoffs`` calls or an explicit :meth:`MCSAPlanner.drain`.
+  ``sync=True`` preserves the original blocking semantics exactly.
 
 This module is internal plumbing: the supported front door is
 ``repro.api`` (declarative :class:`~repro.api.Scenario`, the
@@ -68,7 +85,10 @@ from .admission import AdmissionReport, admit_waterfill
 from .baselines import run_baseline_batch
 from .costs import (Devices, LayerProfile, gather_devices, rent_cost,
                     stack_devices, stack_edges_np)
+from .events import (DRAIN, EVACUATE, HANDOFF, DirtyBatch, DirtySet,
+                     EventOutcome, StepEvents)
 from .faults import EvacuationReport, FaultBatch, clamp_hops
+from .ledger import BudgetLedger
 from .ligd import LiGDConfig, LiGDResult, solve_ligd_batch, \
     solve_ligd_batch_jit
 from .mligd import MLiGDResult, solve_mligd_batch_jit
@@ -191,14 +211,17 @@ class _PendingReplan:
     """A dispatched-but-unapplied MLi-GD solve (async replanning).
 
     ``res`` leaves are un-forced jax arrays — the solve may still be in
-    flight on the backend; forcing happens in _apply_pending."""
+    flight on the backend; forcing happens when the replan is applied.
+    Up to ``MCSAPlanner.async_horizon`` of these can be outstanding at
+    once; they apply FIFO, so a later dispatch's rows win per user."""
     res: MLiGDResult
     users: np.ndarray            # (E,) fleet rows the decisions scatter to
     orig_servers: np.ndarray     # (E,) pre-solve servers (relay-back target)
     new_server: object           # (E,) effective new server (jax or numpy)
-    batch: Optional[HandoffBatch] = None   # the triggering events — kept
+    batch: Optional[object] = None   # the triggering DirtyBatch — kept
                                  # so a fault can retry stale rows
     attempts: int = 0            # fault-retry count for this dispatch
+    stayed: int = 0              # hysteresis holds counted at apply time
 
 
 class MCSAPlanner:
@@ -215,7 +238,19 @@ class MCSAPlanner:
                     default) is the paper's one-server-per-AP model
     async_replanning : default ``sync`` polarity of :meth:`on_handoffs`
                     (False = today's blocking semantics)
-    recovery_hold_steps : hysteresis — how many :meth:`on_faults` calls
+    async_horizon : how many dispatched-but-unapplied replans may be
+                    outstanding at once (async replanning); 1 (default)
+                    is the classic one-step-stale drain, larger values
+                    deepen the overlap window at the cost of staler
+                    frozen originals
+    hysteresis    : relative switch margin for handoff replanning — a
+                    user only moves to a new server when the re-split
+                    utility beats the stay/relay continuation by this
+                    fraction (0 = always take the argmin, the paper's
+                    behavior); with admission-aware handoff detection
+                    this stops border users ping-ponging (one replan
+                    per dwell, tested in tests/test_events.py)
+    recovery_hold_steps : hysteresis — how many fault-preamble runs
                     a just-recovered server stays excluded from the
                     evacuation target set (users don't flap back the
                     instant it blips up)
@@ -229,6 +264,8 @@ class MCSAPlanner:
                  per_iter_time: float = 5e-5,
                  candidates_k: int = 1,
                  async_replanning: bool = False,
+                 async_horizon: int = 1,
+                 hysteresis: float = 0.0,
                  recovery_hold_steps: int = 2,
                  max_replan_retries: int = 3):
         self.profile = profile
@@ -237,13 +274,18 @@ class MCSAPlanner:
         self.per_iter_time = per_iter_time
         self.candidates_k = max(1, int(candidates_k))
         self.async_replanning = async_replanning
+        self.async_horizon = max(1, int(async_horizon))
+        self.hysteresis = float(hysteresis)
         self.recovery_hold_steps = int(recovery_hold_steps)
         self.max_replan_retries = int(max_replan_retries)
         self.t_ag_estimate = 0.0
         self.last_admission: Optional[AdmissionReport] = None
         self.last_evacuation: Optional[EvacuationReport] = None
+        self.last_outcome: Optional[EventOutcome] = None
         self.replan_retries = 0      # stale async rows retried, cumulative
-        self._pending: Optional[_PendingReplan] = None
+        self.ledger = BudgetLedger(topo)   # per-server budget residuals
+        self.dirty = DirtySet()            # this step's event queue
+        self._inflight: list = []          # FIFO _PendingReplan queue
         self._hold = np.zeros(topo.num_servers, np.int64)  # hysteresis
         self._last_user_aps: Optional[np.ndarray] = None
         # (Z, field) edge table — gathered per user by server id.
@@ -298,9 +340,10 @@ class MCSAPlanner:
         water-filling greedy of ``repro.core.admission`` assigns servers
         under the per-server budgets; the outcome is stored in
         ``self.last_admission``.  Any in-flight async replan is dropped
-        (a fresh static plan supersedes it).
+        (a fresh static plan supersedes it), and the budget ledger is
+        re-derived from the new plan table.
         """
-        self._pending = None
+        self._inflight.clear()
         K = self.candidates_k if candidates_k is None else max(
             1, int(candidates_k))
         K = min(K, self.topo.num_servers)
@@ -317,7 +360,9 @@ class MCSAPlanner:
             res = self._solve_static(devs_s, edges_s, env)
             jax.block_until_ready(res.U)
             self._update_t_ag(res)
-            return res, servers, FleetState.from_static(servers, res)
+            fleet = FleetState.from_static(servers, res)
+            self.ledger.reset_from_fleet(fleet, self.profile.num_layers)
+            return res, servers, fleet
         return self._plan_admission(devices, user_aps, K, env)
 
     def _update_t_ag(self, res: LiGDResult) -> None:
@@ -397,8 +442,9 @@ class MCSAPlanner:
         if report.rejected.any():
             res_sel = self._device_only_fallback(
                 res_sel, devices, report.rejected, t_ag_used)
-        return res_sel, report.server, FleetState.from_static(
-            report.server, res_sel)
+        fleet = FleetState.from_static(report.server, res_sel)
+        self.ledger.reset_from_fleet(fleet, self.profile.num_layers)
+        return res_sel, report.server, fleet
 
     def _device_only_plan(self, devices: Devices, idx: np.ndarray,
                           t_ag: float) -> tuple:
@@ -413,15 +459,16 @@ class MCSAPlanner:
         U = d["w_T"] * T + d["w_E"] * E
         return T, E, U
 
-    def _device_only_fallback(self, res: LiGDResult, devices: Devices,
+    def _device_only_fallback(self, res, devices: Devices,
                               rejected: np.ndarray, t_ag: float,
-                              rows: Optional[np.ndarray] = None
-                              ) -> LiGDResult:
+                              rows: Optional[np.ndarray] = None):
         """Overwrite rejected users' rows with the device-only plan
         (s = M): nothing is offloaded, so no bandwidth/compute is rented
         and the admission budgets are untouched.  ``rows`` maps result
         rows to fleet/device rows when ``res`` covers a subset (the
-        evacuation path); None means result row i is device row i."""
+        evacuation path); None means result row i is device row i.
+        Works for both LiGDResult and MLiGDResult batches (the latter
+        additionally zeroes the relay decision R)."""
         idx = np.nonzero(rejected)[0]
         dev_idx = idx if rows is None else np.asarray(rows)[idx]
         T, E, U = self._device_only_plan(devices, dev_idx, t_ag)
@@ -433,7 +480,9 @@ class MCSAPlanner:
         out["T"][idx] = T
         out["E"][idx] = E
         out["C"][idx] = 0.0
-        return LiGDResult(**out)
+        if "R" in out:
+            out["R"][idx] = 0
+        return type(res)(**out)
 
     def _solve_static(self, devs_s, edges_s, env) -> LiGDResult:
         X = devs_s["c_dev"].shape[0]
@@ -460,76 +509,261 @@ class MCSAPlanner:
         return fn(devs_s, edges_s)
 
     # ------------------------------------------------------------------
-    def on_handoffs(self, events: Union[HandoffBatch,
-                                        Sequence[HandoffEvent]],
-                    devices: Devices, fleet: FleetState,
-                    sync: Optional[bool] = None,
-                    _attempts: int = 0
-                    ) -> Optional[MLiGDResult]:
-        """One padded, jitted MLi-GD solve over ALL of this step's handoff
-        events.  Returns the (unpadded) batched MLiGDResult with (E,)
-        leaves, or None when there are no events.
+    # The incremental event pipeline (docs/ARCHITECTURE.md,
+    # "Event lifecycle"): handoffs, fault evacuations, and capacity
+    # drains all flow through ONE dirty-set solve per step.
+    # ------------------------------------------------------------------
+    def on_events(self, events, devices: Devices, fleet: FleetState,
+                  user_aps: Optional[np.ndarray] = None,
+                  sync: Optional[bool] = None,
+                  _attempts: int = 0) -> EventOutcome:
+        """Replan everything one step dirtied, in one fused solve.
 
-        Arguments
-        ---------
-        events  : HandoffBatch (or sequence of HandoffEvent views), E
-                  events; ``user`` indexes rows of ``fleet``
-        devices : the SAME fleet ``plan_static`` planned (row-aligned)
-        fleet   : FleetState to scatter decisions into
-        sync    : None (default) follows the planner's
-                  ``async_replanning`` flag; True blocks and scatters
-                  before returning (the original semantics); False
-                  dispatches the solve and defers the scatter to the next
-                  ``on_handoffs``/:meth:`drain` call, so the caller's
-                  next mobility step overlaps the solve (one-step-stale
-                  plan application)
+        ``events`` is a :class:`repro.core.events.StepEvents` (mobility
+        handoffs + optionally the step's applied FaultBatch); a bare
+        HandoffBatch / event sequence is accepted for convenience.
+        Returns an :class:`~repro.core.events.EventOutcome`; the plan
+        table is updated in place (or marked in-flight under async
+        replanning).
 
-        With ``candidates_k > 1`` the re-solve is evaluated per (event,
-        candidate-of-the-new-AP) — E·K rows through the same padded
-        solve — and the argmin-utility candidate wins (ties toward the
-        nearer candidate).  Handoff replanning is capacity-blind: budgets
-        are enforced at the next static replan (docs/ARCHITECTURE.md
-        discusses the trade-off).
-
-        Duplicate users within a batch (only possible when batches are
-        concatenated across steps): every event's frozen original strategy
-        is read from the PRE-CALL fleet state — exactly like the seed
-        loop, which built all origs before applying any update — and the
-        last event's decision wins per field.  A relay-back therefore
-        restores the pre-call server (the one its frozen strategy was
-        priced against), which is self-consistent where the seed's
-        sequential server bookkeeping could disagree with the orig it had
-        just solved with."""
+        Pipeline: (1) the fault preamble (only when ``events.faults`` is
+        not None) decays the recovery hold, retries stale async rows,
+        re-associates device-only users, and enqueues EVACUATE rows for
+        users on down/unreachable servers plus DRAIN rows for servers
+        whose effective capacity shrank below their ledger usage;
+        (2) the handoff batch enqueues HANDOFF rows; (3) the dirty set
+        flushes with last-wins dedup (a user both evacuated and handed
+        off in one tick is solved ONCE, against its freshest AP);
+        (4) one padded MLi-GD solve over the dirty rows; (5) admission —
+        the classic argmin-U reduction on uncapacitated pure-handoff
+        steps (bit-for-bit the historical path), or the water-filling
+        greedy under the :class:`~repro.core.ledger.BudgetLedger`
+        residuals when the topology is capacitated or fault rows are
+        present; (6) sparse scatter (sync) or a pending dispatch
+        (async).  Fault-bearing calls always run synchronously — an
+        evacuation must land within its step."""
+        if not isinstance(events, StepEvents):
+            events = StepEvents.from_handoffs(events)
         if sync is None:
             sync = not self.async_replanning
-        self._apply_pending(fleet)
-        batch = HandoffBatch.from_events(events) \
-            if not isinstance(events, HandoffBatch) else events
-        n = len(batch)
-        if n == 0:
-            return None
-        users = batch.user
+        t = float(events.t)
+        pre = None
+        if events.faults is not None:
+            sync = True               # evacuations must land this step
+            pre = self._fault_preamble(events.faults, devices, fleet,
+                                       user_aps)
+        else:
+            # bring the table within the async horizon before freezing
+            # originals (the default horizon 1 applies everything —
+            # exactly the historical one-step-stale behavior)
+            self._apply_inflight(fleet, keep=self.async_horizon - 1)
+        self.dirty.enqueue_handoffs(events.handoffs)
+        dirty = self.dirty.flush()
+        n_hand = dirty.count(HANDOFF)
+
+        if len(dirty) == 0:
+            outcome = EventOutcome(t=t, result=None, dirty=dirty,
+                                   relays=0, resplits=0, stays=0)
+        else:
+            use_admission = self.topo.capacitated or \
+                bool((dirty.kind != HANDOFF).any())
+            sol = self._solve_dirty(dirty, devices, fleet,
+                                    reduce=not use_admission)
+            if use_admission:
+                result, relays, stays, admission = self._admit_dirty(
+                    dirty, devices, fleet, sol)
+                outcome = EventOutcome(
+                    t=t, result=result, dirty=dirty, relays=relays,
+                    resplits=n_hand - relays, stays=stays)
+                if pre is not None:
+                    pre.admission = admission
+            else:
+                p = _PendingReplan(res=sol.res, users=dirty.user,
+                                   orig_servers=sol.orig_servers,
+                                   new_server=sol.new_server,
+                                   batch=dirty, attempts=_attempts)
+                self._inflight.append(p)
+                if sync:
+                    self._apply_inflight(fleet, keep=0)
+                    relays = int(np.asarray(p.res.R, bool).sum()) + p.stayed
+                    outcome = EventOutcome(
+                        t=t, result=p.res, dirty=dirty, relays=relays,
+                        resplits=n_hand - relays, stays=p.stayed)
+                else:
+                    outcome = EventOutcome(t=t, result=p.res, dirty=dirty,
+                                           in_flight=True)
+
+        if pre is not None:
+            outcome.evacuation = self._evacuation_report(pre, fleet, t)
+        self.last_outcome = outcome
+        return outcome
+
+    def _fault_preamble(self, batch: FaultBatch, devices: Devices,
+                        fleet: FleetState,
+                        user_aps: Optional[np.ndarray]) -> SimpleNamespace:
+        """Fault bookkeeping + dirty-set producers (no solve here): hold
+        decay, stale-pending retry, device-only re-association, EVACUATE
+        rows for users offloading to down/unreachable servers, DRAIN
+        rows for capacity-churn overflow."""
+        topo = self.topo
+        up = topo.server_available()
+        t = float(getattr(batch, "t", 0.0))
+
+        self._hold = np.maximum(self._hold - 1, 0)
+        if len(batch.server_up):
+            self._hold[np.asarray(batch.server_up, np.int64)] = \
+                self.recovery_hold_steps
+
+        retried = self._retry_stale_pending(devices, fleet, up)
+        pre = SimpleNamespace(retried=retried, reassociated=0,
+                              evac_idx=np.zeros(0, np.int64), drained=0,
+                              admission=None)
+        if user_aps is None:
+            user_aps = self._last_user_aps
+        if user_aps is None:          # never planned: nothing to evacuate
+            return pre
+        user_aps = np.asarray(user_aps)
+
+        offl = fleet.split < self.profile.num_layers
+        on_down = ~up[fleet.server]
+        unreachable = offl & ~np.isfinite(np.asarray(
+            topo.hops[user_aps, fleet.server], np.float64))
+        affected = (on_down & offl) | unreachable
+        assoc_only = on_down & ~offl
+
+        if assoc_only.any() and up.any():
+            fleet.server[assoc_only] = self._nearest_up(
+                user_aps[assoc_only], up)
+            pre.reassociated = int(assoc_only.sum())
+
+        pre.evac_idx = np.nonzero(affected)[0]
+        if len(pre.evac_idx):
+            aps_e = user_aps[pre.evac_idx]
+            tgt = self._nearest_up(aps_e, up) if up.any() \
+                else fleet.server[pre.evac_idx]
+            self.dirty.enqueue_evacuations(
+                pre.evac_idx, fleet.server[pre.evac_idx], tgt, aps_e,
+                clamp_hops(topo.hops[aps_e, tgt]).astype(np.int64), t=t)
+
+        if topo.capacitated:
+            pre.drained = self._enqueue_drains(fleet, user_aps, affected,
+                                               up, t)
+        return pre
+
+    def _enqueue_drains(self, fleet: FleetState, user_aps: np.ndarray,
+                        affected: np.ndarray, up: np.ndarray,
+                        t: float) -> int:
+        """Capacity churn: servers whose LIVE effective capacity dropped
+        below their ledger usage shed their most expensive plans back
+        into the dirty set (per server, users are ranked by utility and
+        the cheapest prefix that still fits is kept).  The drained rows
+        re-admit through the same waterfill — possibly back onto their
+        origin if the freed headroom suffices."""
+        topo = self.topo
+        over = self.ledger.overloaded() & up
+        if not over.any():
+            return 0
+        M = self.profile.num_layers
+        r_cap = None if topo.r_capacity is None \
+            else np.asarray(topo.r_capacity, np.float64)
+        B_cap = None if topo.B_capacity is None \
+            else np.asarray(topo.B_capacity, np.float64)
+        offl = fleet.split < M
+        drop_rows = []
+        for z in np.nonzero(over)[0]:
+            rows = np.nonzero(offl & (fleet.server == z) & ~affected)[0]
+            if len(rows) == 0:
+                continue
+            order = rows[np.argsort(fleet.U[rows], kind="stable")]
+            keep = np.ones(len(order), bool)
+            if r_cap is not None:
+                keep &= np.cumsum(fleet.r[order]) <= r_cap[z] + 1e-9
+            if B_cap is not None:
+                keep &= np.cumsum(fleet.B[order]) <= B_cap[z] + 1e-9
+            if not keep.all():
+                drop_rows.append(order[~keep])
+        if not drop_rows:
+            return 0
+        idx = np.concatenate(drop_rows)
+        aps_d = np.asarray(user_aps)[idx]
+        tgt = self._nearest_up(aps_d, up)
+        self.dirty.enqueue_evacuations(
+            idx, fleet.server[idx], tgt, aps_d,
+            clamp_hops(self.topo.hops[aps_d, tgt]).astype(np.int64),
+            t=t, kind=DRAIN)
+        return len(idx)
+
+    def _evacuation_report(self, pre: SimpleNamespace, fleet: FleetState,
+                           t: float) -> EvacuationReport:
+        """Post-scatter accounting over the evacuated rows: re-admitted
+        to a live server = evacuated, device-only = degraded (the two
+        partition ``users`` exactly — rows superseded by a same-tick
+        handoff entry were still replanned off the dead server)."""
+        evac_idx = pre.evac_idx
+        evacuated = degraded = 0
+        if len(evac_idx):
+            up = self.topo.server_available()
+            offl = fleet.split[evac_idx] < self.profile.num_layers
+            evacuated = int((offl & up[fleet.server[evac_idx]]).sum())
+            degraded = len(evac_idx) - evacuated
+        rep = EvacuationReport(t=t, users=evac_idx, evacuated=evacuated,
+                               degraded=degraded,
+                               reassociated=pre.reassociated,
+                               retried=pre.retried, drained=pre.drained,
+                               admission=pre.admission)
+        self.last_evacuation = rep
+        return rep
+
+    def _solve_dirty(self, dirty: DirtyBatch, devices: Devices,
+                     fleet: FleetState, reduce: bool) -> SimpleNamespace:
+        """ONE padded, jitted MLi-GD solve over the dirty rows (all
+        kinds).  With ``candidates_k > 1`` each row is solved per
+        candidate-of-its-AP (D·K rows); EVACUATE/DRAIN rows carry
+        ``hops_back = HOP_UNREACHABLE`` so the relay-back vertex never
+        wins, and their candidates additionally exclude held
+        (just-recovered) servers unless nothing else survives.
+
+        ``reduce=True`` (the uncapacitated pure-handoff path) applies
+        the classic argmin-U candidate reduction on the un-forced jax
+        arrays — bit-for-bit the historical ``on_handoffs`` solve;
+        ``reduce=False`` returns the full (D·K,) result for the
+        ledger-aware waterfill admission."""
+        n = len(dirty)
+        users = dirty.user
         K = min(self.candidates_k, self.topo.num_servers)
         faulted = self.topo.faulted
         up = self.topo.server_available() if faulted else None
+        evacish = dirty.kind != HANDOFF
 
+        cand = None
         cand_invalid = None
         if K > 1:
-            cand = self.topo.candidates(K)[batch.new_ap]         # (n, K)
-            hops_new = self.topo.hops[batch.new_ap[:, None], cand]
+            cand = self.topo.candidates(K)[dirty.new_ap]         # (n, K)
+            hops_new = self.topo.hops[dirty.new_ap[:, None], cand]
             if faulted:
                 # down/unreachable candidates stay in the solve (static
-                # shapes) but are priced out of the argmin below
+                # shapes) but are priced out of the selection below
                 cand_invalid = ~up[cand] | ~np.isfinite(
                     np.asarray(hops_new, np.float64))
                 hops_new = clamp_hops(hops_new)
+            if evacish.any() and (self._hold > 0).any():
+                # recovery hysteresis: evacuees avoid just-recovered
+                # servers unless one is their only surviving candidate
+                held = self._hold > 0
+                base = cand_invalid if cand_invalid is not None \
+                    else np.zeros(cand.shape, bool)
+                strict = base | held[cand]
+                use_strict = evacish & (~strict).any(axis=1)
+                if use_strict.any():
+                    cand_invalid = np.where(use_strict[:, None],
+                                            strict, base)
             rows = np.repeat(np.arange(n), K)
             new_server_rows = cand.reshape(-1)
             hops_new_rows = hops_new.reshape(-1)
         else:
             rows = np.arange(n)
-            new_server_rows = batch.new_server
-            hops_new_rows = batch.hops_new
+            new_server_rows = dirty.new_server
+            hops_new_rows = dirty.hops_new
             if faulted:
                 # the nearest-coverage target may be down (ap_server
                 # falls back to the pre-fault map where nothing is
@@ -538,10 +772,10 @@ class MCSAPlanner:
                 tgt = np.asarray(new_server_rows, np.int64).copy()
                 dead = ~up[tgt]
                 if dead.any() and up.any():
-                    tgt[dead] = self._nearest_up(batch.new_ap[dead], up)
+                    tgt[dead] = self._nearest_up(dirty.new_ap[dead], up)
                     new_server_rows = tgt
                 hops_new_rows = clamp_hops(
-                    self.topo.hops[batch.new_ap, new_server_rows])
+                    self.topo.hops[dirty.new_ap, new_server_rows])
 
         dev_b = gather_devices(devices, users[rows])
         dev_b["hops"] = jnp.asarray(hops_new_rows, jnp.float32)
@@ -571,10 +805,11 @@ class MCSAPlanner:
             "B": orig_B,
             "rent": rent_cost(edges_orig, orig_r_true, orig_B),
         }
-        hops_back_np = batch.hops_back[rows]
+        hops_back_np = dirty.hops_back[rows]
         if faulted:
             # a relay-back to a dead original server must price as
-            # unreachable, never as a wrapped/NaN path
+            # unreachable, never as a wrapped/NaN path (EVACUATE/DRAIN
+            # rows arrive pre-clamped at HOP_UNREACHABLE)
             hops_back_np = clamp_hops(hops_back_np)
         hops_back = jnp.asarray(hops_back_np, jnp.float32)
 
@@ -586,88 +821,294 @@ class MCSAPlanner:
         if pad:
             res = jax.tree.map(lambda a: a[:n * K], res)
 
-        if K > 1:
-            # argmin-U candidate per event (jnp, so the reduction rides
-            # the async dispatch — nothing is forced here)
-            U_eff = res.U.reshape(n, K)
-            if cand_invalid is not None and cand_invalid.any():
-                U_eff = U_eff + jnp.where(jnp.asarray(cand_invalid),
-                                          jnp.inf, 0.0)
-            best_k = jnp.argmin(U_eff, axis=1)
-            take = lambda a: a.reshape(n, K, *a.shape[1:])[
-                jnp.arange(n), best_k]
-            res = jax.tree.map(take, res)
-            new_server = jnp.take_along_axis(
-                jnp.asarray(cand), best_k[:, None], axis=1)[:, 0]
-        else:
-            new_server = np.asarray(new_server_rows, np.int64)
+        new_server = None
+        if reduce:
+            if K > 1:
+                # argmin-U candidate per event (jnp, so the reduction
+                # rides the async dispatch — nothing is forced here)
+                U_eff = res.U.reshape(n, K)
+                if cand_invalid is not None and cand_invalid.any():
+                    U_eff = U_eff + jnp.where(jnp.asarray(cand_invalid),
+                                              jnp.inf, 0.0)
+                best_k = jnp.argmin(U_eff, axis=1)
+                take = lambda a: a.reshape(n, K, *a.shape[1:])[
+                    jnp.arange(n), best_k]
+                res = jax.tree.map(take, res)
+                new_server = jnp.take_along_axis(
+                    jnp.asarray(cand), best_k[:, None], axis=1)[:, 0]
+            else:
+                new_server = np.asarray(new_server_rows, np.int64)
 
-        self._pending = _PendingReplan(res=res, users=users,
-                                       orig_servers=orig_servers,
-                                       new_server=new_server,
-                                       batch=batch, attempts=_attempts)
-        if sync:
-            self._apply_pending(fleet)
-        return res
+        return SimpleNamespace(res=res, K=K, cand=cand,
+                               cand_invalid=cand_invalid,
+                               new_server_rows=new_server_rows,
+                               new_server=new_server,
+                               orig_servers=orig_servers)
+
+    def _admit_dirty(self, dirty: DirtyBatch, devices: Devices,
+                     fleet: FleetState, sol: SimpleNamespace) -> tuple:
+        """Ledger-aware admission over the dirty solve: release what the
+        replanned rows held, water-fill the per-(row, candidate) plans
+        under the residual budgets (relay-back columns re-admit to the
+        original server), degrade rejected rows to device-only, scatter,
+        and charge the new holdings back to the ledger.  Returns
+        ``(result, relays, stays, AdmissionReport-or-None)``."""
+        topo = self.topo
+        M = self.profile.num_layers
+        n = len(dirty)
+        users = dirty.user
+        up = topo.server_available()
+        t_ag = self.t_ag_estimate
+        res_np = jax.tree.map(np.asarray, sol.res)    # forces the solve
+
+        if sol.cand is not None:
+            cand = sol.cand
+        else:
+            cand = np.asarray(sol.new_server_rows, np.int64).reshape(n, 1)
+        Kc = cand.shape[1]
+        invalid = sol.cand_invalid
+        if invalid is None:
+            invalid = np.zeros((n, Kc), bool)
+            if topo.faulted or not up.all():
+                invalid |= ~up[cand]
+        old_server = np.asarray(fleet.server[users], np.int64)
+
+        split_m = np.asarray(res_np.split).reshape(n, Kc)
+        offl_m = split_m < M
+        Uv = np.asarray(res_np.U, np.float64).reshape(n, Kc)
+        R_mat = np.asarray(res_np.R, bool).reshape(n, Kc)
+        r_dem = np.asarray(res_np.r, np.float64).reshape(n, Kc) * offl_m
+        B_dem = np.asarray(res_np.B, np.float64).reshape(n, Kc) * offl_m
+
+        handoff = np.asarray(dirty.kind == HANDOFF)
+        # switch hysteresis: a handoff-row user keeps its current plan
+        # row untouched unless the best re-split beats the stay/relay
+        # continuation by the margin (EVACUATE/DRAIN rows always move)
+        stay = np.zeros(n, bool)
+        if self.hysteresis > 0.0 and handoff.any():
+            u1b = np.where(invalid, np.inf,
+                           np.asarray(res_np.U_recalc,
+                                      np.float64).reshape(n, Kc)).min(1)
+            u2b = np.where(invalid, np.inf,
+                           np.asarray(res_np.U_back,
+                                      np.float64).reshape(n, Kc)).min(1)
+            stay = handoff & up[old_server] \
+                & (u2b <= u1b * (1.0 + self.hysteresis))
+        stays = int(stay.sum())
+        sel = np.nonzero(~stay)[0]
+        if len(sel) == 0:
+            return None, stays, stays, None
+
+        # the replanned rows' current holdings come off the ledger
+        # first — the waterfill must see their headroom as free (the
+        # evacuation half of this is exactly what the old
+        # ``_residual_budgets`` fleet sweep recomputed per call)
+        self.ledger.release_rows(fleet, users[sel], M)
+
+        cand_s = cand[sel]
+        invalid_s = invalid[sel]
+        # a relay-back column re-admits to the ORIGINAL server with the
+        # relay demands (orig r, B_back — charged where the live-load
+        # accounting charges them)
+        serv_s = np.where(R_mat[sel], old_server[sel][:, None], cand_s)
+        U_s = Uv[sel].copy()
+        r_s = r_dem[sel]
+        B_s = B_dem[sel]
+        has_valid = (~invalid_s).any(axis=1)
+        if invalid_s.any():
+            # invalid columns become +inf-priced duplicates of the row's
+            # first valid column (a duplicate proposal is an admission
+            # no-op); all-invalid rows bypass admission entirely
+            ri = np.arange(len(sel))
+            first = np.where(has_valid, np.argmax(~invalid_s, axis=1), 0)
+            serv_s = np.where(invalid_s, serv_s[ri, first][:, None],
+                              serv_s)
+            r_s = np.where(invalid_s, r_s[ri, first][:, None], r_s)
+            B_s = np.where(invalid_s, B_s[ri, first][:, None], B_s)
+            U_s[invalid_s] = np.inf
+
+        report = admit_waterfill(serv_s, U_s, r_s, B_s, topo.num_servers,
+                                 self.ledger.residual_r(),
+                                 self.ledger.residual_B())
+        if not has_valid.all():
+            report.rejected = report.rejected | ~has_valid
+            choice = report.choice.copy()
+            choice[~has_valid] = -1
+            report.choice = choice
+
+        gflat = sel * Kc + np.where(report.rejected, 0,
+                                    np.maximum(report.choice, 0))
+        res_sel = jax.tree.map(lambda a: a[gflat], res_np)
+        dev_only = np.asarray(res_sel.split) >= M
+        if dev_only.any():
+            B = np.array(res_sel.B)
+            r = np.array(res_sel.r)
+            B[dev_only] = 0.0
+            r[dev_only] = 0.0
+            res_sel = res_sel._replace(B=B, r=r)
+        if report.rejected.any():
+            res_sel = self._device_only_fallback(
+                res_sel, devices, report.rejected, t_ag, rows=users[sel])
+
+        final_srv = np.asarray(report.server, np.int64).copy()
+        if not has_valid.all():
+            nv = ~has_valid
+            # nothing reachable: keep the association useful — nearest
+            # up server, or the frozen one during a full blackout
+            final_srv[nv] = self._nearest_up(dirty.new_ap[sel][nv], up) \
+                if up.any() else old_server[sel][nv]
+        fleet.scatter(users[sel], final_srv, res_sel)
+
+        offl_new = np.asarray(res_sel.split) < M
+        self.ledger.charge(final_srv[offl_new],
+                           np.asarray(res_sel.r)[offl_new],
+                           np.asarray(res_sel.B)[offl_new])
+
+        hand_sel = handoff[sel]
+        relays = stays + int(np.asarray(res_sel.R,
+                                        np.int64)[hand_sel].sum())
+        return res_sel, relays, stays, report
+
+    # ------------------------------------------------------------------
+    def on_handoffs(self, events: Union[HandoffBatch,
+                                        Sequence[HandoffEvent]],
+                    devices: Devices, fleet: FleetState,
+                    sync: Optional[bool] = None,
+                    _attempts: int = 0
+                    ) -> Optional[MLiGDResult]:
+        """One padded, jitted MLi-GD solve over ALL of this step's handoff
+        events — a thin consumer of :meth:`on_events` (HANDOFF rows
+        only).  Returns the (unpadded) batched MLiGDResult with (E,)
+        leaves, or None when there are no events.
+
+        Arguments
+        ---------
+        events  : HandoffBatch (or sequence of HandoffEvent views), E
+                  events; ``user`` indexes rows of ``fleet``
+        devices : the SAME fleet ``plan_static`` planned (row-aligned)
+        fleet   : FleetState to scatter decisions into
+        sync    : None (default) follows the planner's
+                  ``async_replanning`` flag; True blocks and scatters
+                  before returning (the original semantics); False
+                  dispatches the solve and defers the scatter to a later
+                  ``on_handoffs``/:meth:`drain` call, so the caller's
+                  next mobility steps overlap the solve (up to
+                  ``async_horizon`` steps of staleness)
+
+        With ``candidates_k > 1`` the re-solve is evaluated per (event,
+        candidate-of-the-new-AP) — E·K rows through the same padded
+        solve.  On an uncapacitated topology the argmin-utility
+        candidate wins (ties toward the nearer candidate); on a
+        capacitated one the rows are water-filled under the budget
+        ledger's residuals — handoff replanning is capacity-aware, and
+        a saturated candidate spills to the next one exactly like the
+        static plan (docs/ARCHITECTURE.md, "Event lifecycle").
+
+        Duplicate users within a batch (only possible when batches are
+        concatenated across steps): every event's frozen original strategy
+        is read from the PRE-CALL fleet state — exactly like the seed
+        loop, which built all origs before applying any update — and the
+        last event's decision wins per field.  A relay-back therefore
+        restores the pre-call server (the one its frozen strategy was
+        priced against), which is self-consistent where the seed's
+        sequential server bookkeeping could disagree with the orig it had
+        just solved with."""
+        outcome = self.on_events(events, devices, fleet, sync=sync,
+                                 _attempts=_attempts)
+        return outcome.result
 
     @property
     def pending(self) -> bool:
         """True while an async replan is dispatched but not yet applied
         to the fleet table — the ``repro.api.Policy`` in-flight signal
         (``repro.api.Session`` reads it to avoid forcing the solve)."""
-        return self._pending is not None
+        return len(self._inflight) > 0
+
+    @property
+    def _pending(self) -> Optional[_PendingReplan]:
+        """The newest in-flight replan (None when the table is up to
+        date) — kept as a read-only view now that the planner holds a
+        FIFO of up to ``async_horizon`` dispatches."""
+        return self._inflight[-1] if self._inflight else None
 
     def drain(self, fleet: FleetState) -> Optional[MLiGDResult]:
-        """Force and scatter the in-flight async replan, if any.  Call
+        """Force and scatter ALL in-flight async replans, if any.  Call
         once after the mobility loop (or before reading ``fleet`` between
         steps) to bring the plan table fully up to date.  Returns the
-        applied MLiGDResult, or None when nothing was pending."""
-        return self._apply_pending(fleet)
+        last applied MLiGDResult, or None when nothing was pending."""
+        return self._apply_inflight(fleet, keep=0)
 
-    def _apply_pending(self, fleet: FleetState) -> Optional[MLiGDResult]:
-        p, self._pending = self._pending, None
-        if p is None:
-            return None
+    def _apply_inflight(self, fleet: FleetState,
+                        keep: int = 0) -> Optional[MLiGDResult]:
+        """Apply in-flight replans FIFO until at most ``keep`` remain
+        (later dispatches win per user, matching the dirty set's
+        last-wins contract across steps)."""
+        res = None
+        while len(self._inflight) > max(0, keep):
+            res = self._apply_one(self._inflight.pop(0), fleet)
+        return res
+
+    def _apply_one(self, p: _PendingReplan,
+                   fleet: FleetState) -> MLiGDResult:
         res, users = p.res, p.users
         take_back = np.asarray(res.R, bool)
         server = np.where(take_back, p.orig_servers,
                           np.asarray(p.new_server))
+        scatter = np.ones(len(users), bool)
+        if self.hysteresis > 0.0:
+            # switch hysteresis (uncapacitated path): keep the frozen
+            # plan row when the re-split doesn't beat the stay/relay
+            # continuation by the margin — but never hold a user on a
+            # server that has since died
+            stay = ~take_back & (np.asarray(res.U_back, np.float64)
+                                 <= np.asarray(res.U_recalc, np.float64)
+                                 * (1.0 + self.hysteresis))
+            if self.topo.faulted:
+                stay &= self.topo.server_available()[
+                    np.asarray(p.orig_servers, np.int64)]
+            p.stayed = int(stay.sum())
+            scatter &= ~stay
         if self.topo.faulted:
             live = self.topo.server_available()[server]
-            if not live.all():
-                # never scatter onto a dead server: stale rows keep
-                # their frozen plan and the next on_faults evacuates
-                # them (on_faults itself routes through
-                # _retry_stale_pending first, so this is the drain-
-                # without-on_faults backstop)
-                keep = np.nonzero(live)[0]
-                if len(keep):
-                    res_np = jax.tree.map(np.asarray, res)
-                    fleet.scatter(users[keep], server[keep],
-                                  jax.tree.map(lambda a: a[keep], res_np))
-                return res
-        fleet.scatter(users, server, res)
+            # never scatter onto a dead server: stale rows keep
+            # their frozen plan and the next fault preamble evacuates
+            # them (on_events routes through _retry_stale_pending
+            # first, so this is the drain-without-faults backstop)
+            scatter &= live
+        if scatter.all():
+            fleet.scatter(users, server, res)
+            return res
+        idx = np.nonzero(scatter)[0]
+        if len(idx):
+            res_np = jax.tree.map(np.asarray, res)
+            fleet.scatter(users[idx], server[idx],
+                          jax.tree.map(lambda a: a[idx], res_np))
         return res
 
     # ------------------------------------------------------------------
     # Fault handling: evacuation replanning (see docs/ARCHITECTURE.md,
-    # "Failure handling", for the end-to-end dataflow)
+    # "Failure handling" + "Event lifecycle", for the dataflow)
     # ------------------------------------------------------------------
     def on_faults(self, batch: FaultBatch, devices: Devices,
                   fleet: FleetState,
                   user_aps: Optional[np.ndarray] = None
                   ) -> EvacuationReport:
-        """Failure-aware evacuation replan for one applied FaultBatch.
+        """Failure-aware evacuation replan for one applied FaultBatch —
+        a consumer of the :meth:`on_events` pipeline (EVACUATE/DRAIN
+        rows, no handoffs).
 
         Call AFTER ``topo.apply_faults(batch)``.  Every user offloading
         to a down or unreachable server is re-admitted to a surviving
-        candidate — one fused candidate-set Li-GD solve plus the
-        water-filling greedy under the surviving servers' RESIDUAL
-        budgets (capacity minus what unaffected users keep holding) —
-        and degraded to device-only execution (split = M) when no
-        candidate is reachable or admissible.  Device-only users merely
-        *associated* with a dead server are re-associated to the
-        nearest up server (no solve: they hold no resources).
+        candidate — the fused dirty-set MLi-GD solve (relay-back priced
+        unreachable) plus the water-filling greedy under the budget
+        ledger's RESIDUAL headroom — and degraded to device-only
+        execution (split = M) when no candidate is reachable or
+        admissible.  Device-only users merely *associated* with a dead
+        server are re-associated to the nearest up server (no solve:
+        they hold no resources).  On capacitated topologies, servers
+        whose effective capacity churned below their ledger usage
+        additionally DRAIN their overflow users through the same
+        pipeline.
 
         Hysteresis: servers recovered this step are excluded from the
         evacuation target set for ``recovery_hold_steps`` subsequent
@@ -685,170 +1126,13 @@ class MCSAPlanner:
         Session`` passes its mobility state; defaults to the APs of the
         last static plan).  Returns an :class:`EvacuationReport`, also
         kept as ``self.last_evacuation``."""
-        topo = self.topo
-        up = topo.server_available()
-        t = float(getattr(batch, "t", 0.0))
-
-        self._hold = np.maximum(self._hold - 1, 0)
-        if len(batch.server_up):
-            self._hold[np.asarray(batch.server_up, np.int64)] = \
-                self.recovery_hold_steps
-
-        retried = self._retry_stale_pending(devices, fleet, up)
-
-        if user_aps is None:
-            user_aps = self._last_user_aps
-        if user_aps is None:          # never planned: nothing to evacuate
-            rep = EvacuationReport(t=t, users=np.zeros(0, np.int64),
-                                   retried=retried)
-            self.last_evacuation = rep
-            return rep
-        user_aps = np.asarray(user_aps)
-
-        offl = fleet.split < self.profile.num_layers
-        on_down = ~up[fleet.server]
-        unreachable = offl & ~np.isfinite(np.asarray(
-            topo.hops[user_aps, fleet.server], np.float64))
-        affected = (on_down & offl) | unreachable
-        assoc_only = on_down & ~offl
-
-        reassociated = 0
-        if assoc_only.any() and up.any():
-            fleet.server[assoc_only] = self._nearest_up(
-                user_aps[assoc_only], up)
-            reassociated = int(assoc_only.sum())
-
-        evac_idx = np.nonzero(affected)[0]
-        if len(evac_idx) == 0:
-            rep = EvacuationReport(t=t, users=evac_idx, retried=retried,
-                                   reassociated=reassociated)
-            self.last_evacuation = rep
-            return rep
-
-        evacuated, degraded, admission = self._evacuate(
-            devices, fleet, user_aps, evac_idx, up)
-        rep = EvacuationReport(t=t, users=evac_idx, evacuated=evacuated,
-                               degraded=degraded,
-                               reassociated=reassociated,
-                               retried=retried, admission=admission)
-        self.last_evacuation = rep
-        return rep
-
-    def _evacuate(self, devices: Devices, fleet: FleetState,
-                  user_aps: np.ndarray, evac_idx: np.ndarray,
-                  up: np.ndarray) -> tuple:
-        """Re-admit ``evac_idx`` onto surviving servers under residual
-        budgets; degrade the rest to device-only.  Returns
-        (evacuated, degraded, AdmissionReport-or-None)."""
-        topo = self.topo
-        K = min(max(self.candidates_k, 1), topo.num_servers)
-        aps_e = user_aps[evac_idx]
-        t_ag = self.t_ag_estimate
-
-        held = self._hold > 0
-        cand = topo.candidates(K)[aps_e]                       # (A, K)
-        K = cand.shape[1]
-        hops = np.asarray(topo.hops[aps_e[:, None], cand], np.float64)
-        valid = up[cand] & np.isfinite(hops)
-        # hysteresis: prefer non-held targets, but a held server beats
-        # device-only when it is a user's only survivor in reach
-        strict = valid & ~held[cand]
-        use = np.where(strict.any(axis=1)[:, None], strict, valid)
-        has = use.any(axis=1)
-
-        evacuated = 0
-        degraded = 0
-        admission = None
-        solve_rows = np.nonzero(has)[0]
-        if len(solve_rows):
-            cand_s = cand[solve_rows]
-            hops_s = hops[solve_rows]
-            use_s = use[solve_rows]
-            ri = np.arange(len(solve_rows))
-            first = np.argmax(use_s, axis=1)
-            cand_s = np.where(use_s, cand_s, cand_s[ri, first][:, None])
-            hops_s = np.where(use_s, hops_s, hops_s[ri, first][:, None])
-
-            A = len(solve_rows)
-            fleet_rows = evac_idx[solve_rows]
-            dev_rows = gather_devices(devices, np.repeat(fleet_rows, K))
-            dev_rows["hops"] = jnp.asarray(hops_s.reshape(-1),
-                                           jnp.float32)
-            dev_rows["t_ag"] = jnp.full((A * K,), t_ag, jnp.float32)
-            edge_rows = self._edges_for(cand_s.reshape(-1))
-            pad = _pow2_bucket(A * K) - A * K
-            res = self._solve_static(_pad_axis0(dev_rows, pad),
-                                     _pad_axis0(edge_rows, pad), None)
-            jax.block_until_ready(res.U)
-            if pad:
-                res = jax.tree.map(lambda a: np.asarray(a)[:A * K], res)
-
-            offl_s = (np.asarray(res.split).reshape(A, K)
-                      < self.profile.num_layers)
-            rem_r, rem_B = self._residual_budgets(fleet, evac_idx, up)
-            report = admit_waterfill(
-                cand_s, np.asarray(res.U, np.float64).reshape(A, K),
-                np.asarray(res.r, np.float64).reshape(A, K) * offl_s,
-                np.asarray(res.B, np.float64).reshape(A, K) * offl_s,
-                topo.num_servers, rem_r, rem_B)
-            admission = report
-
-            flat = np.arange(A) * K + np.where(report.rejected, 0,
-                                               report.choice)
-            res_sel = jax.tree.map(lambda a: np.asarray(a)[flat], res)
-            dev_only = (np.asarray(res_sel.split)
-                        >= self.profile.num_layers)
-            if dev_only.any():
-                B = np.array(res_sel.B)
-                r = np.array(res_sel.r)
-                B[dev_only] = 0.0
-                r[dev_only] = 0.0
-                res_sel = res_sel._replace(B=B, r=r)
-            if report.rejected.any():
-                res_sel = self._device_only_fallback(
-                    res_sel, devices, report.rejected, t_ag,
-                    rows=fleet_rows)
-            fleet.scatter(fleet_rows, report.server, res_sel, R=0)
-            evacuated = int((~report.rejected).sum())
-            degraded += int(report.rejected.sum())
-
-        no_cand = np.nonzero(~has)[0]
-        if len(no_cand):
-            # graceful degradation: nothing reachable -> device-only
-            idx = evac_idx[no_cand]
-            T, E, U = self._device_only_plan(devices, idx, t_ag)
-            srv = fleet.server[idx]
-            if up.any():
-                srv = self._nearest_up(user_aps[idx], up)
-            res_d = SimpleNamespace(
-                split=np.full(len(idx), self.profile.num_layers,
-                              np.int64),
-                B=0.0, r=0.0, U=U, T=T, E=E, C=0.0, R=0)
-            fleet.scatter(idx, srv, res_d, R=0)
-            degraded += len(no_cand)
-        return evacuated, degraded, admission
-
-    def _residual_budgets(self, fleet: FleetState, evac_idx: np.ndarray,
-                          up: np.ndarray) -> tuple:
-        """Surviving budgets minus what unaffected users keep holding —
-        an evacuation must fit in the headroom, not the full capacity."""
-        topo = self.topo
-        if topo.r_capacity is None and topo.B_capacity is None:
-            return None, None
-        keep = np.ones(len(fleet), bool)
-        keep[evac_idx] = False
-        keep &= (fleet.split < self.profile.num_layers) \
-            & up[fleet.server]
-
-        def resid(capacity, col):
-            if capacity is None:
-                return None
-            rem = np.asarray(capacity, np.float64).copy()
-            np.subtract.at(rem, fleet.server[keep], col[keep])
-            return np.maximum(rem, 0.0)
-
-        return (resid(topo.r_capacity, fleet.r),
-                resid(topo.B_capacity, fleet.B))
+        events = StepEvents(t=float(getattr(batch, "t", 0.0)),
+                            handoffs=HandoffBatch.empty(
+                                float(getattr(batch, "t", 0.0))),
+                            faults=batch)
+        outcome = self.on_events(events, devices, fleet,
+                                 user_aps=user_aps, sync=True)
+        return outcome.evacuation
 
     def _nearest_up(self, aps: np.ndarray, up: np.ndarray) -> np.ndarray:
         """Nearest up & reachable server per AP (live hop counts); falls
@@ -864,48 +1148,51 @@ class MCSAPlanner:
 
     def _retry_stale_pending(self, devices: Devices, fleet: FleetState,
                              up: np.ndarray) -> int:
-        """Async-dispatch fault safety: split the in-flight replan into
+        """Async-dispatch fault safety: split every in-flight replan into
         rows whose decided server survived (applied as usual) and rows
         decided onto a now-dead server (re-dispatched synchronously
         against the updated topology — the retry half of the
         retry-with-backoff wrapper; ``max_replan_retries`` is the
         backoff bound, after which rows fall through to evacuation).
         Returns the number of retried rows."""
-        p = self._pending
-        if p is None or up.all():
+        if not self._inflight or up.all():
             return 0
-        final = np.where(np.asarray(p.res.R, bool), p.orig_servers,
-                         np.asarray(p.new_server))
-        final = np.asarray(final, np.int64)
-        stale = ~up[final]
-        if not stale.any():
-            return 0                  # applies at the next call/drain
-        self._pending = None
-        res_np = jax.tree.map(np.asarray, p.res)
-        good = np.nonzero(~stale)[0]
-        if len(good):
-            fleet.scatter(p.users[good], final[good],
-                          jax.tree.map(lambda a: a[good], res_np))
-        if p.batch is None or p.attempts >= self.max_replan_retries \
-                or not up.any():
-            return 0                  # out of retries: evacuation owns them
-        bad = np.nonzero(stale)[0]
-        new_ap = p.batch.new_ap[bad]
-        tgt = self._nearest_up(new_ap, up)
-        old = np.asarray(fleet.server[p.users[bad]], np.int64)
-        retry = HandoffBatch(
-            t=p.batch.t, user=p.users[bad],
-            old_server=old,
-            new_server=np.asarray(tgt, np.int64),
-            new_ap=np.asarray(new_ap, np.int64),
-            hops_new=clamp_hops(
-                self.topo.hops[new_ap, tgt]).astype(np.int64),
-            hops_back=clamp_hops(
-                self.topo.hops[new_ap, old]).astype(np.int64))
-        self.replan_retries += len(bad)
-        self.on_handoffs(retry, devices, fleet, sync=True,
-                         _attempts=p.attempts + 1)
-        return len(bad)
+        entries, self._inflight = self._inflight, []
+        retried = 0
+        for p in entries:
+            final = np.where(np.asarray(p.res.R, bool), p.orig_servers,
+                             np.asarray(p.new_server))
+            final = np.asarray(final, np.int64)
+            stale = ~up[final]
+            if not stale.any():
+                self._inflight.append(p)  # applies at the next call/drain
+                continue
+            res_np = jax.tree.map(np.asarray, p.res)
+            good = np.nonzero(~stale)[0]
+            if len(good):
+                fleet.scatter(p.users[good], final[good],
+                              jax.tree.map(lambda a: a[good], res_np))
+            if p.batch is None or p.attempts >= self.max_replan_retries \
+                    or not up.any():
+                continue              # out of retries: evacuation owns them
+            bad = np.nonzero(stale)[0]
+            new_ap = p.batch.new_ap[bad]
+            tgt = self._nearest_up(new_ap, up)
+            old = np.asarray(fleet.server[p.users[bad]], np.int64)
+            retry = HandoffBatch(
+                t=p.batch.t, user=p.users[bad],
+                old_server=old,
+                new_server=np.asarray(tgt, np.int64),
+                new_ap=np.asarray(new_ap, np.int64),
+                hops_new=clamp_hops(
+                    self.topo.hops[new_ap, tgt]).astype(np.int64),
+                hops_back=clamp_hops(
+                    self.topo.hops[new_ap, old]).astype(np.int64))
+            self.replan_retries += len(bad)
+            retried += len(bad)
+            self.on_handoffs(retry, devices, fleet, sync=True,
+                             _attempts=p.attempts + 1)
+        return retried
 
     # ------------------------------------------------------------------
     def run_baseline(self, name: str, devices: Devices,

@@ -1,0 +1,351 @@
+"""The incremental event pipeline: dirty-set last-wins semantics, the
+budget ledger vs the legacy residual sweep (the duplicated accounting
+the ledger replaced), switch hysteresis on border-oscillating users,
+capacity-churn drains, and the multi-step async horizon.
+
+See docs/ARCHITECTURE.md, "Event lifecycle".
+"""
+import numpy as np
+import pytest
+
+from repro.configs.chain_cnns import nin
+from repro.core.costs import DeviceFleet
+from repro.core.events import (DRAIN, EVACUATE, HANDOFF, DirtySet,
+                               StepEvents, last_wins_indices)
+from repro.core.faults import HOP_UNREACHABLE, FaultBatch, clamp_hops
+from repro.core.ligd import LiGDConfig
+from repro.core.mobility import HandoffBatch, RandomWaypointMobility
+from repro.core.network import build_topology
+from repro.core.planner import MCSAPlanner
+from repro.core.profile import profile_of
+
+CFG = LiGDConfig(max_iters=60)
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_of(nin())
+
+
+def _fleet_of(n, lo=3e9, hi=8e9):
+    return DeviceFleet(c_dev=np.linspace(lo, hi, n))
+
+
+def _kill(z, t=0.0):
+    b = FaultBatch.empty(t)
+    b.server_down = np.asarray([z] if np.isscalar(z) else z, np.int64)
+    return b
+
+
+def _handoff_to(topo, fleet, user, new_ap, t=0.0):
+    """One admitted-keyed handoff event moving ``user`` to ``new_ap``."""
+    user = np.asarray([user], np.int64)
+    new_ap = np.asarray([new_ap], np.int64)
+    old = np.asarray(fleet.server[user], np.int64)
+    tgt = np.asarray(topo.ap_server[new_ap], np.int64)
+    return HandoffBatch(
+        t=t, user=user, old_server=old, new_server=tgt, new_ap=new_ap,
+        hops_new=clamp_hops(topo.hops[new_ap, tgt]).astype(np.int64),
+        hops_back=clamp_hops(topo.hops[new_ap, old]).astype(np.int64))
+
+
+def _legacy_residual_sweep(topo, fleet, M, affected=None):
+    """The OLD ``MCSAPlanner._residual_budgets`` accounting, verbatim:
+    capacity minus what unaffected live offloaded users hold, clipped at
+    zero.  Kept here as the regression oracle for the ledger."""
+    up = topo.server_available()
+    keep = (np.asarray(fleet.split) < M) & up[np.asarray(fleet.server)]
+    if affected is not None:
+        keep &= ~affected
+    out = []
+    for cap, col in ((topo.r_capacity, fleet.r),
+                     (topo.B_capacity, fleet.B)):
+        if cap is None:
+            out.append(None)
+            continue
+        rem = np.asarray(cap, np.float64).copy()
+        np.subtract.at(rem, np.asarray(fleet.server)[keep],
+                       np.asarray(col, np.float64)[keep])
+        out.append(np.maximum(rem, 0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# last-wins dedup (satellite: same user enqueued twice in one step)
+# ---------------------------------------------------------------------------
+def test_last_wins_identity_without_duplicates():
+    users = np.asarray([7, 3, 9, 0, 12])
+    np.testing.assert_array_equal(last_wins_indices(users),
+                                  np.arange(len(users)))
+    assert len(last_wins_indices(np.zeros(0, np.int64))) == 0
+
+
+def test_last_wins_keeps_last_occurrence_in_entry_order():
+    users = np.asarray([4, 7, 4, 2, 7, 4])
+    keep = last_wins_indices(users)
+    # one surviving entry per user, each the LAST occurrence, in order
+    np.testing.assert_array_equal(users[keep], [2, 7, 4])
+    np.testing.assert_array_equal(keep, [3, 4, 5])
+
+
+def test_dirty_set_handoff_supersedes_same_tick_evacuation():
+    # the same user is evacuated by a fault AND handed off by mobility
+    # in one tick: the handoff (enqueued last, fresher AP) must win, and
+    # the user must appear exactly once in the flushed batch
+    ds = DirtySet()
+    ds.enqueue_evacuations(users=[5, 9], old_server=[2, 2],
+                           new_server=[0, 1], new_ap=[3, 4],
+                           hops_new=[1, 2], t=30.0)
+    hb = HandoffBatch(t=30.0, user=np.asarray([5]),
+                      old_server=np.asarray([2]),
+                      new_server=np.asarray([1]), new_ap=np.asarray([8]),
+                      hops_new=np.asarray([1]), hops_back=np.asarray([3]))
+    ds.enqueue_handoffs(hb)
+    batch = ds.flush()
+    assert len(batch) == 2
+    assert sorted(batch.user.tolist()) == [5, 9]
+    row5 = int(np.nonzero(batch.user == 5)[0][0])
+    row9 = int(np.nonzero(batch.user == 9)[0][0])
+    assert batch.kind[row5] == HANDOFF          # the handoff won
+    assert batch.new_ap[row5] == 8              # ...with the fresher AP
+    assert batch.hops_back[row5] == 3           # relay-back still priced
+    assert batch.kind[row9] == EVACUATE
+    assert batch.hops_back[row9] == HOP_UNREACHABLE
+    assert len(ds.flush()) == 0                 # flush cleared the queue
+
+
+def test_on_events_same_tick_fault_and_handoff_replans_once(prof):
+    # end-to-end: kill a user's serving server AND move the user in the
+    # same tick; on_events must solve the user exactly once (handoff row
+    # wins), land it on a live server, and still count it as evacuated
+    topo = build_topology(9, 3, seed=0)
+    devs = _fleet_of(12)
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=2)
+    mob = RandomWaypointMobility(topo, 12, seed=3)
+    _, _, fleet = planner.plan_static(devs, mob.ap)
+
+    victim = 0
+    dead = int(fleet.server[victim])
+    batch = _kill(dead, t=30.0)
+    topo.apply_faults(batch)
+    # move the victim to some AP whose nearest server survived
+    up = topo.server_available()
+    new_ap = int(np.nonzero(up[topo.ap_server])[0][0])
+    hb = _handoff_to(topo, fleet, victim, new_ap, t=30.0)
+
+    outcome = planner.on_events(
+        StepEvents(t=30.0, handoffs=hb, faults=batch),
+        devs, fleet, user_aps=mob.ap)
+    # exactly one dirty row for the victim, and it is the handoff
+    rows = np.nonzero(outcome.dirty.user == victim)[0]
+    assert len(rows) == 1
+    assert outcome.dirty.kind[rows[0]] == HANDOFF
+    # nobody is left offloading to the dead server
+    offl = fleet.split < prof.num_layers
+    assert not (offl & (fleet.server == dead)).any()
+    # the victim still counts toward the evacuation report
+    rep = outcome.evacuation
+    assert rep is not None and victim in rep.users.tolist()
+    assert rep.evacuated + rep.degraded == len(rep.users)
+
+
+# ---------------------------------------------------------------------------
+# ledger vs legacy residual sweep (satellite: the duplicated accounting)
+# ---------------------------------------------------------------------------
+def test_ledger_matches_legacy_residual_sweep(prof):
+    # the ledger's delta-updated residuals must equal the full fleet
+    # sweep the old `_residual_budgets` (and admit_waterfill's caller)
+    # recomputed per call — proving the two accountings agreed all along
+    topo = build_topology(16, 4, seed=0, r_capacity=200.0,
+                          B_capacity=5e8)
+    devs = _fleet_of(60)
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+    mob = RandomWaypointMobility(topo, 60, seed=7,
+                                 speed_range=(20.0, 40.0))
+    _, _, fleet = planner.plan_static(devs, mob.ap)
+    M = prof.num_layers
+
+    r_res, B_res = _legacy_residual_sweep(topo, fleet, M)
+    np.testing.assert_allclose(planner.ledger.residual_r(), r_res,
+                               atol=1e-9)
+    np.testing.assert_allclose(planner.ledger.residual_B(), B_res,
+                               atol=1e-6)
+
+    # ...and stays equal through incremental handoff replans
+    for i in range(3):
+        batch = mob.step(30.0, 30.0 * i, admitted=fleet.server)
+        if len(batch):
+            planner.on_handoffs(batch, devs, fleet, sync=True)
+        assert planner.ledger.drift(fleet, M) < 1e-6
+        r_res, _ = _legacy_residual_sweep(topo, fleet, M)
+        np.testing.assert_allclose(planner.ledger.residual_r(), r_res,
+                                   atol=1e-6)
+
+    # ...and through a fault evacuation (the old on_faults call site)
+    dead = int(np.bincount(fleet.server,
+                           minlength=topo.num_servers).argmax())
+    topo.apply_faults(_kill(dead, t=90.0))
+    planner.on_faults(_kill(dead, t=90.0), devs, fleet, user_aps=mob.ap)
+    assert planner.ledger.drift(fleet, M) < 1e-6
+    r_res, B_res = _legacy_residual_sweep(topo, fleet, M)
+    np.testing.assert_allclose(planner.ledger.residual_r(), r_res,
+                               atol=1e-6)
+    np.testing.assert_allclose(planner.ledger.residual_B(), B_res,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# switch hysteresis (satellite: border oscillation)
+# ---------------------------------------------------------------------------
+def _border_world():
+    """Two equal servers with a modest backhaul, and the symmetric
+    border-AP pair (1 hop to the own server, 2 to the other): crossing
+    the border makes the re-split marginally cheaper than relaying (a
+    few percent), which is exactly the ping-pong regime hysteresis
+    exists for.  (With the default 1 Gb/s backhaul the relay hop is so
+    cheap the MLi-GD relay vertex always wins and nobody flaps.)"""
+    from repro.core.costs import EdgeParams
+    edges = [EdgeParams(B_backhaul=1e8), EdgeParams(B_backhaul=1e8)]
+    topo = build_topology(9, 2, seed=0, heterogeneity=0.0,
+                          edge_params=edges)
+    h = np.asarray(topo.hops)
+    a0 = int(np.nonzero((topo.ap_server == 0) & (h[:, 0] == 1)
+                        & (h[:, 1] == 2))[0][0])
+    a1 = int(np.nonzero((topo.ap_server == 1) & (h[:, 1] == 1)
+                        & (h[:, 0] == 2))[0][0])
+    return topo, a0, a1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_hysteresis_border_user_one_replan_per_dwell(prof, seed):
+    # property (seeded device draws): a user ping-ponging across a cell
+    # border between two nearly-equal servers switches servers on EVERY
+    # flip without a margin, and at most once over the whole oscillation
+    # with one — one replan per dwell, not one per step
+    topo, a0, a1 = _border_world()
+    rng = np.random.default_rng(seed)
+    devs = DeviceFleet(c_dev=np.asarray([rng.uniform(3e9, 8e9)]))
+
+    def run(hysteresis):
+        # per_iter_time=0: no strategy-recalculation CBR penalty, so the
+        # flip decision isolates the transmission/rent trade-off
+        planner = MCSAPlanner(prof, topo, CFG, per_iter_time=0.0,
+                              hysteresis=hysteresis)
+        _, _, fleet = planner.plan_static(devs, np.asarray([a0]))
+        switches = 0
+        prev = int(fleet.server[0])
+        for i in range(8):
+            ap = a1 if i % 2 == 0 else a0
+            hb = _handoff_to(topo, fleet, 0, ap, t=30.0 * (i + 1))
+            planner.on_handoffs(hb, devs, fleet, sync=True)
+            cur = int(fleet.server[0])
+            switches += int(cur != prev)
+            prev = cur
+        return switches
+
+    flappy = run(0.0)
+    steady = run(0.30)
+    assert flappy >= 4          # margin-free: flaps on (almost) every flip
+    assert steady <= 1          # with margin: at most one switch per dwell
+
+
+def test_hysteresis_stays_are_counted_and_row_untouched(prof):
+    topo, a0, a1 = _border_world()
+    devs = _fleet_of(1)
+    planner = MCSAPlanner(prof, topo, CFG, per_iter_time=0.0,
+                          hysteresis=0.5)
+    _, _, fleet = planner.plan_static(devs, np.asarray([a0]))
+    before = {f: np.array(getattr(fleet, f)) for f in
+              ("server", "split", "B", "r", "U")}
+    hb = _handoff_to(topo, fleet, 0, a1, t=30.0)
+    outcome = planner.on_events(hb, devs, fleet, sync=True)
+    assert outcome.stays == 1
+    for f, v in before.items():   # the stay keeps the plan row bit-for-bit
+        np.testing.assert_array_equal(getattr(fleet, f), v)
+    assert outcome.relays == 1    # a stay counts as a kept (relay-ish) plan
+
+
+# ---------------------------------------------------------------------------
+# capacity-churn drains
+# ---------------------------------------------------------------------------
+def test_capacity_churn_drains_overflow(prof):
+    topo = build_topology(16, 4, seed=0, r_capacity=200.0)
+    devs = _fleet_of(80)
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+    mob = RandomWaypointMobility(topo, 80, seed=11)
+    _, _, fleet = planner.plan_static(devs, mob.ap)
+    M = prof.num_layers
+
+    # shrink every server's effective compute budget by 2/3
+    batch = FaultBatch.empty(30.0)
+    batch.r_scale = np.full(topo.num_servers, 1.0 / 3.0)
+    topo.apply_faults(batch)
+    rep = planner.on_faults(batch, devs, fleet, user_aps=mob.ap)
+
+    assert rep.drained > 0
+    # post-drain loads respect the shrunken effective capacities
+    offl = fleet.split < M
+    r_load = np.bincount(fleet.server[offl], weights=fleet.r[offl],
+                         minlength=topo.num_servers)
+    assert np.all(r_load <= np.asarray(topo.r_capacity) + 1e-9)
+    assert planner.ledger.drift(fleet, M) < 1e-6
+    assert not planner.ledger.overloaded().any()
+
+
+def test_drain_rows_use_drain_kind(prof):
+    # the dirty set records DRAIN (not EVACUATE) for capacity overflow
+    topo = build_topology(16, 4, seed=0, r_capacity=200.0)
+    devs = _fleet_of(80)
+    planner = MCSAPlanner(prof, topo, CFG, candidates_k=3)
+    mob = RandomWaypointMobility(topo, 80, seed=11)
+    _, _, fleet = planner.plan_static(devs, mob.ap)
+    batch = FaultBatch.empty(30.0)
+    batch.r_scale = np.full(topo.num_servers, 1.0 / 3.0)
+    topo.apply_faults(batch)
+    outcome = planner.on_events(
+        StepEvents(t=30.0, handoffs=HandoffBatch.empty(30.0),
+                   faults=batch), devs, fleet, user_aps=mob.ap)
+    assert outcome.dirty.count(DRAIN) > 0
+    assert outcome.dirty.count(EVACUATE) == 0    # nothing died
+
+
+# ---------------------------------------------------------------------------
+# multi-step async horizon
+# ---------------------------------------------------------------------------
+def test_async_horizon_bounds_inflight_queue(prof):
+    topo = build_topology(16, 4, seed=0)
+    devs = _fleet_of(32)
+    planner = MCSAPlanner(prof, topo, CFG, async_replanning=True,
+                          async_horizon=2)
+    mob = RandomWaypointMobility(topo, 32, seed=3,
+                                 speed_range=(10.0, 30.0))
+    _, _, fleet = planner.plan_static(devs, mob.ap)
+    depths = []
+    for i in range(5):
+        batch = mob.step(30.0, 30.0 * i)
+        if len(batch):
+            planner.on_handoffs(batch, devs, fleet)
+            depths.append(len(planner._inflight))
+    assert depths and max(depths) <= 2       # never deeper than horizon
+    assert max(depths) == 2                  # ...and actually overlapped
+    assert planner.pending
+    planner.drain(fleet)
+    assert not planner.pending and len(planner._inflight) == 0
+    # every decision eventually landed: all plan rows stay consistent
+    assert np.isfinite(fleet.U).all()
+
+
+def test_async_horizon_one_is_classic_one_step_stale(prof):
+    # horizon=1 must behave exactly like the historical path: the entry
+    # of each on_handoffs call applies the previous dispatch
+    topo = build_topology(16, 4, seed=0)
+    devs = _fleet_of(32)
+    planner = MCSAPlanner(prof, topo, CFG, async_replanning=True)
+    mob = RandomWaypointMobility(topo, 32, seed=3,
+                                 speed_range=(10.0, 30.0))
+    _, _, fleet = planner.plan_static(devs, mob.ap)
+    for i in range(4):
+        batch = mob.step(30.0, 30.0 * i)
+        if len(batch):
+            planner.on_handoffs(batch, devs, fleet)
+            assert len(planner._inflight) == 1
