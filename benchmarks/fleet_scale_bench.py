@@ -495,7 +495,10 @@ def run(users: int = 10_000, big_users: int = 100_000, steps: int = 5,
     matrix = {}
     for name in list_scenarios():
         sc = get_scenario(name)
-        sc = sc.replace(num_users=min(sc.num_users, matrix_users), steps=1)
+        # planner-scale matrix: skip the serving data plane (it has its
+        # own bench, benchmarks/serve_closed_loop.py)
+        sc = sc.replace(num_users=min(sc.num_users, matrix_users),
+                        steps=1, serving=None)
         sess = Session(sc)
         sess.run(1)
         assert np.isfinite(sess.fleet.U).all(), f"{name}: non-finite plan"

@@ -15,7 +15,7 @@ import numpy as np
 
 from . import (fig3_5_static, fig6_8_static_vs_partitioners,
                fig9_14_mobility, fig15_hops, fig16_load, ligd_convergence,
-               solver_bench, split_serving_bench)
+               serve_closed_loop, solver_bench, split_serving_bench)
 
 SUITES = (
     ("fig3_5", fig3_5_static),
@@ -26,6 +26,7 @@ SUITES = (
     ("ligd_convergence", ligd_convergence),
     ("solver_bench", solver_bench),
     ("split_serving", split_serving_bench),
+    ("serve_closed_loop", serve_closed_loop),
 )
 
 

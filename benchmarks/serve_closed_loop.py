@@ -1,0 +1,138 @@
+"""Closed-loop serving benchmark: the data plane at fleet scale on CPU.
+
+Two tracks, both seeded and virtual-time deterministic
+(docs/ARCHITECTURE.md, "Serving data plane"):
+
+* **closed_loop** — a burst workload (thousands of Poisson arrivals
+  against 4 x 512-slot pools) that saturates the fleet: the acceptance
+  bar is >= 1k *concurrent* real decode streams at peak, with p50/p99
+  token latency and per-step queue-depth tracks recorded.
+* **chaos** — the ``serve_chaos_k3`` preset verbatim: a scripted
+  mid-decode kill of the heaviest server; the bar is zero lost requests
+  (every in-flight stream fails over or degrades to device-only) with
+  at least one mid-stream failover actually exercised.
+
+Results go to stdout as CSV rows and to ``--out`` (default
+BENCH_serve.json) as machine-readable JSON so the serving perf
+trajectory is tracked across PRs.
+
+Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python benchmarks/serve_closed_loop.py
+      PYTHONPATH=src python benchmarks/serve_closed_loop.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List
+
+from repro.api import ServeConfig, Session, get_scenario
+
+# Burst workload: min_slots == max_slots pins every pool at 512 slots
+# (2048 fleet-wide); queue_limit is sized so nothing sheds and the
+# admission loop can fill the slots as the virtual clock sweeps the
+# arrival window.  token_time_scale stretches service across the step
+# boundary so concurrency accumulates instead of draining instantly.
+BURST = ServeConfig(
+    arrival_rate=220.0, arrival_seed=7, max_requests=6000,
+    prompt_len=6, max_new=6, cache_len=64,
+    deadline_s=600.0, max_retries=2, backoff_s=5.0,
+    queue_limit=4096, r_per_slot=8.0, min_slots=512, max_slots=512,
+    token_time_scale=10_000.0)
+
+SMOKE_BURST = dataclasses.replace(
+    BURST, arrival_rate=20.0, max_requests=300, min_slots=32,
+    max_slots=32, queue_limit=512)
+
+
+def _run_track(sc) -> dict:
+    t0 = time.perf_counter()
+    sess = Session(sc)
+    for _ in range(sc.steps):
+        sess.step()
+    m = sess.run(0)                  # drains planner + data plane
+    wall = time.perf_counter() - t0
+    out = dict(m.serving)
+    out["tracks"] = sess.dataplane.tracks
+    out["wall_s"] = wall
+    out["serve_wall_s"] = sess.timings["serve_s"]
+    if m.faults and "serving_failovers" in m.faults:
+        out["serving_failovers"] = m.faults["serving_failovers"]
+    return out
+
+
+def run(out: str = "BENCH_serve.json", smoke: bool = False) -> List[str]:
+    import jax
+
+    chaos_sc = get_scenario("serve_chaos_k3")
+    burst_sc = chaos_sc.replace(name="serve_burst", faults=None,
+                                serving=SMOKE_BURST if smoke else BURST,
+                                steps=3)
+    if smoke:
+        burst_sc = burst_sc.replace(num_users=128)
+        chaos_sc = chaos_sc.replace(num_users=128)
+
+    results = {"meta": {"backend": jax.default_backend(),
+                        "smoke": bool(smoke)}}
+
+    # ---- closed-loop burst: fill the fleet's decode slots -------------
+    cl = _run_track(burst_sc)
+    results["closed_loop"] = cl
+    print(f"[closed_loop] {cl['submitted']} reqs -> "
+          f"{cl['completed']} done / {cl['device']} device / "
+          f"{cl['degraded']} degraded, "
+          f"peak {cl['peak_concurrent_streams']} streams, "
+          f"queue peak {cl['queue_depth_peak']}, "
+          f"tok p50/p99 {cl['token_latency_p50_s']}/"
+          f"{cl['token_latency_p99_s']} s "
+          f"(wall {cl['wall_s']:.1f}s)")
+    assert cl["lost"] == 0, "closed_loop track lost requests"
+    if not smoke:
+        assert cl["peak_concurrent_streams"] >= 1000, \
+            (f"expected >= 1000 concurrent decode streams, got "
+             f"{cl['peak_concurrent_streams']}")
+
+    # ---- chaos: scripted mid-decode server kill -----------------------
+    ch = _run_track(chaos_sc)
+    results["chaos"] = ch
+    print(f"[chaos] {ch['submitted']} reqs -> "
+          f"{ch['completed']} done / {ch['device']} device / "
+          f"{ch['degraded']} degraded, "
+          f"{ch['failover_events']} mid-stream failover(s), "
+          f"relay {ch['relay_s_total'] * 1e3:.2f} ms "
+          f"(wall {ch['wall_s']:.1f}s)")
+    assert ch["lost"] == 0, "chaos track lost requests"
+    if not smoke:
+        assert ch["failover_events"] >= 1, \
+            "scripted kill produced no mid-stream failover"
+
+    rows = []
+    for track, r in (("closed_loop", cl), ("chaos", ch)):
+        for metric in ("submitted", "completed", "device", "degraded",
+                       "shed", "failover_events",
+                       "peak_concurrent_streams", "queue_depth_peak",
+                       "tokens_emitted"):
+            rows.append(f"serve,{track},mcsa,{metric},{r[metric]}")
+        for metric in ("token_latency_p50_s", "token_latency_p99_s",
+                       "ttft_p50_s", "ttft_p99_s", "wall_s"):
+            v = r[metric]
+            if v is not None:
+                rows.append(f"serve,{track},mcsa,{metric},{v:.4f}")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: small fleet, small burst, no "
+                         "concurrency/failover floor asserts")
+    args = ap.parse_args()
+    for r in run(args.out, args.smoke):
+        print(r)

@@ -19,6 +19,11 @@ Three pieces (docs/ARCHITECTURE.md "API surface" has the full map):
   run the fault-injection layer each step: server crashes, link cuts,
   and capacity churn flow through ``Topology.apply_faults`` and the
   policy's evacuation replan (docs/ARCHITECTURE.md, "Failure handling").
+  Scenarios carrying a :class:`ServeConfig` (``serving`` field;
+  ``serve_chaos_k3`` preset) also drive the closed-loop serving data
+  plane — per-server engine pools, Poisson arrivals, deadlines,
+  backpressure, mid-stream failover — and report per-request QoS in
+  ``metrics().serving`` (docs/ARCHITECTURE.md, "Serving data plane").
 
 The 60-second version::
 
@@ -42,6 +47,7 @@ from repro.core.events import (DirtyBatch, DirtySet, EventOutcome,
 from repro.core.faults import (EvacuationReport, FaultBatch, FaultConfig,
                                FaultModel)
 from repro.core.ledger import BudgetLedger
+from repro.serving.dataplane import ServeConfig, ServingDataPlane
 
 from .policies import (POLICIES, BaselinePolicy, CloudPolicy,
                        DNNSurgeryPolicy, DeviceOnlyPolicy, EdgeOnlyPolicy,
@@ -61,4 +67,5 @@ __all__ = [
     "FaultConfig", "FaultModel", "FaultBatch", "EvacuationReport",
     "StepEvents", "EventOutcome", "DirtyBatch", "DirtySet",
     "BudgetLedger",
+    "ServeConfig", "ServingDataPlane",
 ]

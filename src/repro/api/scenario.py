@@ -33,6 +33,7 @@ from repro.core.ligd import LiGDConfig
 from repro.core.mobility import RandomWaypointMobility, StaticMobility
 from repro.core.network import Topology, build_topology
 from repro.core.profile import profile_of
+from repro.serving.dataplane import ServeConfig
 
 #: mobility-model registry: name -> class with the
 #: (topo, num_users, *, seed, speed_range-ignorable) constructor surface
@@ -73,6 +74,12 @@ class Scenario:
                 churn, scripted kills).  None (the default) disables
                 fault injection entirely; see the ``chaos_*`` presets
                 and docs/ARCHITECTURE.md ("Failure handling")
+    serving   : optional :class:`repro.serving.dataplane.ServeConfig` —
+                the closed-loop serving data plane (Poisson arrivals,
+                per-server engine pools, deadlines/backpressure/
+                failover).  None (the default) keeps the session purely
+                analytic; see the ``serve_*`` presets and
+                docs/ARCHITECTURE.md ("Serving data plane")
     schedule  : ``steps`` mobility steps of ``dt`` seconds each
     """
     name: str = "custom"
@@ -104,6 +111,8 @@ class Scenario:
     admission_aware_handoffs: Optional[bool] = None
     # --- fault injection (None = chaos off) ---
     faults: Optional[FaultConfig] = None
+    # --- closed-loop serving (None = analytic only) ---
+    serving: Optional[ServeConfig] = None
     # --- schedule ---
     steps: int = 30
     dt: float = 60.0
@@ -121,6 +130,8 @@ class Scenario:
         d["ligd"] = {k: (list(v) if isinstance(v, tuple) else v)
                      for k, v in dataclasses.asdict(self.ligd).items()}
         d["faults"] = None if self.faults is None else self.faults.to_dict()
+        d["serving"] = (None if self.serving is None
+                        else self.serving.to_dict())
         return d
 
     @classmethod
@@ -142,6 +153,9 @@ class Scenario:
         faults = d.get("faults")
         if isinstance(faults, dict):
             d["faults"] = FaultConfig.from_dict(faults)
+        serving = d.get("serving")
+        if isinstance(serving, dict):
+            d["serving"] = ServeConfig.from_dict(serving)
         for k in ("c_dev_range", "speed_range"):
             if k in d:
                 d[k] = tuple(d[k])
@@ -282,6 +296,36 @@ register_scenario(Scenario(
     ligd=LiGDConfig(max_iters=100),
     faults=FaultConfig(schedule=(("server_down", 30.0, 2),
                                  ("server_up", 150.0, 2))),
+    steps=8, dt=30.0))
+
+# Closed-loop serving under chaos: the chaos_singlefail_k3 schedule
+# (scripted kill + recovery) with a live data plane — seeded Poisson
+# arrivals feed per-server engine pools sized from the admission
+# r-budgets; token_time_scale stretches streams across step boundaries
+# so the kill at t=30 s lands mid-decode.  The world diverges from
+# chaos_singlefail_k3 in three deliberate ways: slower devices
+# (1-2 GHz) so edge genuinely wins and evacuation re-admits rather
+# than trivially degrading, looser r budgets (2000) so the survivors
+# hold residual capacity for the evacuees' streams, and the kill
+# targets server 0 — the heaviest pool under this plan — so the outage
+# is guaranteed to catch live decode streams.  All three robustness
+# paths fire deterministically: mid-stream failovers with priced
+# relay-back, queue backpressure shedding on the hottest pool, and the
+# zero-lost invariant after drain (submitted == done+device+degraded).
+register_scenario(Scenario(
+    name="serve_chaos_k3", num_aps=25, num_servers=4, topo_seed=0,
+    model="nin", num_users=500, r_capacity=2000.0, candidates_k=3,
+    c_dev_range=(1e9, 2e9),
+    speed_range=(8.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=100),
+    faults=FaultConfig(schedule=(("server_down", 30.0, 0),
+                                 ("server_up", 150.0, 0))),
+    serving=ServeConfig(arrival_rate=4.0, arrival_seed=11,
+                        max_requests=800,
+                        prompt_len=6, max_new=6, cache_len=64,
+                        deadline_s=60.0, max_retries=2, backoff_s=5.0,
+                        queue_limit=32, r_per_slot=8.0, min_slots=4,
+                        max_slots=64, token_time_scale=10_000.0),
     steps=8, dt=30.0))
 
 # Chaos: sustained stochastic churn — servers crash/recover on an

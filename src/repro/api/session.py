@@ -77,6 +77,9 @@ class StepReport:
                 something changed this step (None otherwise)
     evacuation: the step's EvacuationReport when the policy ran an
                 evacuation replan (None otherwise)
+    serving   : the closed-loop data plane's track sample for this step
+                (active/queued/completed streams) when the scenario
+                carries a ServeConfig (None otherwise)
     """
     t: float
     events: HandoffBatch
@@ -84,6 +87,7 @@ class StepReport:
     in_flight: bool = False
     faults: Optional[object] = None
     evacuation: Optional[object] = None
+    serving: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -110,7 +114,19 @@ class SessionMetrics:
                           device-only (None when fault injection is off)
     faults              : summary dict (min availability, totals,
                           per-outage time-to-recover) or None when fault
-                          injection is off
+                          injection is off.  When serving-side failovers
+                          happened (data-plane migrations off dead
+                          servers, or reports folded in via
+                          :meth:`Session.record_failover`), it carries a
+                          ``serving_failovers`` entry — events/relay
+                          seconds/tokens preserved — even if fault
+                          injection itself is off
+    serving             : the data plane's end-of-run summary
+                          (:meth:`repro.serving.dataplane.
+                          ServingDataPlane.summary`: request outcomes,
+                          p50/p99 token latency, queue depth, peak
+                          concurrent streams) or None when the scenario
+                          has no ServeConfig
     """
     t: np.ndarray
     handoffs: np.ndarray
@@ -124,6 +140,7 @@ class SessionMetrics:
     evacuated: Optional[np.ndarray] = None
     degraded: Optional[np.ndarray] = None
     faults: Optional[dict] = None
+    serving: Optional[dict] = None
 
 
 def _fleet_mean(fleet, field: str) -> float:
@@ -145,15 +162,21 @@ class Session:
     topo / profile / devices / mobility : optional prebuilt components
                overriding the scenario's builders (benchmarks share one
                topology across many sessions; tests inject fixtures)
+    dataplane : optional prebuilt ServingDataPlane overriding the one
+               the scenario's ``serving`` config would build (tests
+               inject fake-engine planes; None + no ServeConfig keeps
+               the session purely analytic)
 
     Attributes: ``fleet`` (the live plan table), ``policy``, ``topo``,
-    ``profile``, ``devices``, ``mobility``, ``steps_taken``,
-    ``total_handoffs``, ``timings`` ({"plan_s", "steps_s", "drain_s"}
-    cumulative wall-clock inside the component calls).
+    ``profile``, ``devices``, ``mobility``, ``dataplane``,
+    ``steps_taken``, ``total_handoffs``, ``timings`` ({"plan_s",
+    "steps_s", "drain_s", "faults_s", "serve_s"} cumulative wall-clock
+    inside the component calls).
     """
 
     def __init__(self, scenario: Scenario, policy=None, *,
-                 topo=None, profile=None, devices=None, mobility=None):
+                 topo=None, profile=None, devices=None, mobility=None,
+                 dataplane=None):
         self.scenario = scenario
         self.topo = topo if topo is not None else scenario.build_topology()
         self.profile = (profile if profile is not None
@@ -178,7 +201,8 @@ class Session:
         self.steps_taken = 0
         self.total_handoffs = 0
         self.timings = {"plan_s": 0.0, "steps_s": 0.0, "drain_s": 0.0,
-                        "faults_s": 0.0}
+                        "faults_s": 0.0, "serve_s": 0.0}
+        self._failover_reports: list = []   # via record_failover()
         self._log = {k: [] for k in ("t", "handoffs", "resplits", "relays",
                                      "mean_T", "mean_E", "mean_C",
                                      "availability", "evacuated",
@@ -189,6 +213,39 @@ class Session:
         self.fleet = self.policy.plan(self.devices, aps)
         self.timings["plan_s"] = time.perf_counter() - t0
         self.admission = self._admission_summary()
+
+        # closed-loop serving data plane (lazy import: the module is
+        # numpy-light but the engines it builds are not)
+        self.dataplane = dataplane
+        if self.dataplane is None and scenario.serving is not None:
+            from repro.serving.dataplane import ServingDataPlane
+            self.dataplane = ServingDataPlane(
+                scenario.serving, self.topo,
+                num_layers=self.profile.num_layers,
+                slots=self._serving_slots(),
+                slots_fn=self._serving_slots)
+
+    def _serving_slots(self) -> np.ndarray:
+        """(Z,) engine slots per server from the admission r-budgets:
+        the policy's BudgetLedger when it keeps one, else an audit of
+        the live fleet table (both through
+        :func:`repro.core.ledger.slots_from_usage`)."""
+        sv = self.scenario.serving
+        ledger = getattr(self.policy, "ledger", None)
+        if ledger is not None:
+            return ledger.slot_counts(sv.r_per_slot,
+                                      min_slots=sv.min_slots,
+                                      max_slots=sv.max_slots)
+        from repro.core.ledger import slots_from_usage
+        Z = self.topo.num_servers
+        srv = np.asarray(self.fleet.server)
+        offl = np.asarray(self.fleet.split) < self.profile.num_layers
+        r_used = np.bincount(srv[offl],
+                             weights=np.asarray(self.fleet.r)[offl],
+                             minlength=Z)
+        return slots_from_usage(r_used, sv.r_per_slot,
+                                min_slots=sv.min_slots,
+                                max_slots=sv.max_slots)
 
     # ------------------------------------------------------------------
     def _admission_summary(self) -> Optional[dict]:
@@ -320,6 +377,16 @@ class Session:
             # servers (drain() would no-op, so it can't refresh for us)
             self.refresh_admission()
 
+        serving = None
+        if self.dataplane is not None:
+            # runs AFTER evacuation/replanning: fleet.server already
+            # names the evacuation targets, so mid-stream failover lands
+            # on the server the planner actually chose
+            t0 = time.perf_counter()
+            serving = self.dataplane.step(sc.dt, t, fleet=self.fleet,
+                                          faults=fault_batch)
+            self.timings["serve_s"] += time.perf_counter() - t0
+
         self.steps_taken += 1
         self.total_handoffs += len(batch)
         log = self._log
@@ -350,7 +417,7 @@ class Session:
             self._fault_retried += int(evacuation.retried)
         return StepReport(t=t, events=batch, result=result,
                           in_flight=in_flight, faults=fault_batch,
-                          evacuation=evacuation)
+                          evacuation=evacuation, serving=serving)
 
     def _dispatch_faults(self, batch):
         """Route one applied FaultBatch to the policy.  Fault-aware
@@ -407,7 +474,20 @@ class Session:
         for _ in range(n):
             self.step()
         self.drain()
+        if self.dataplane is not None:
+            t0 = time.perf_counter()
+            self.dataplane.drain()   # zero-lost invariant enforced here
+            self.timings["serve_s"] += time.perf_counter() - t0
         return self.metrics()
+
+    def record_failover(self, report) -> None:
+        """Fold a driver-side :class:`repro.serving.failover.
+        FailoverReport` (e.g. from ``SplitServer.generate_with_failover``)
+        into this session's fault accounting: its events surface in
+        ``metrics().faults["serving_failovers"]`` alongside the data
+        plane's own failovers, so serving-side retries are visible to
+        the control plane, not just the driver that ran them."""
+        self._failover_reports.append(report)
 
     def drain(self):
         """Force + scatter any in-flight async replan (no-op for
@@ -445,6 +525,26 @@ class Session:
                     if self._recovery_times else 0.0),
                 "still_down": sorted(self._down_since),
             }
+        # serving-side failovers: the data plane's migration events plus
+        # any driver reports recorded via record_failover().  The entry
+        # (and, without chaos, the faults dict itself) only appears when
+        # failovers actually happened, so fault summaries of serving-free
+        # sessions are unchanged.
+        fo_events = []
+        if self.dataplane is not None:
+            fo_events.extend(self.dataplane.events)
+        for rep in self._failover_reports:
+            fo_events.extend(rep.events)
+        if fo_events:
+            from repro.serving.failover import FailoverReport
+            rep = FailoverReport(events=fo_events)
+            if faults is None:
+                faults = {}
+            faults["serving_failovers"] = {
+                "events": rep.retries,
+                "relay_s": rep.relay_s,
+                "tokens_preserved": rep.tokens_preserved,
+            }
         return SessionMetrics(
             t=np.asarray(log["t"], np.float64),
             handoffs=np.asarray(log["handoffs"], np.int64),
@@ -457,4 +557,6 @@ class Session:
             availability=avail if chaos else None,
             evacuated=evac if chaos else None,
             degraded=degr if chaos else None,
-            faults=faults)
+            faults=faults,
+            serving=(self.dataplane.summary()
+                     if self.dataplane is not None else None))

@@ -27,6 +27,31 @@ from typing import Optional, Tuple
 import numpy as np
 
 
+def slots_from_usage(r_used: np.ndarray, r_per_slot: float,
+                     min_slots: int = 2, max_slots: int = 512) -> np.ndarray:
+    """Derive per-server engine slot counts from admitted r usage.
+
+    Each slot serves one concurrent decode stream; a server that has
+    admitted ``r_used[z]`` compute units provisions
+    ``ceil(r_used / r_per_slot)`` streams, floored at ``min_slots`` (so
+    a freshly-empty server can still take traffic), rounded UP to a
+    power of two (slot counts are a static batch dim of the compiled
+    decode program — pow2 bucketing bounds the number of distinct
+    compiles across the fleet), and capped at ``max_slots``.
+
+    See docs/ARCHITECTURE.md ("Serving data plane") for how the
+    closed-loop data plane sizes its engine pools with this.
+    """
+    if r_per_slot <= 0:
+        raise ValueError("r_per_slot must be positive")
+    raw = np.ceil(np.asarray(r_used, np.float64) / r_per_slot)
+    raw = np.maximum(raw.astype(np.int64), int(min_slots))
+    out = np.empty_like(raw)
+    for i, n in enumerate(np.ravel(raw)):
+        out.flat[i] = 1 << (int(n) - 1).bit_length() if n > 1 else 1
+    return np.minimum(out, int(max_slots))
+
+
 class BudgetLedger:
     """Delta-updated per-server (r, B) usage against a topology's live
     effective capacities.
@@ -116,6 +141,14 @@ class BudgetLedger:
     def residuals(self) -> Tuple[Optional[np.ndarray],
                                  Optional[np.ndarray]]:
         return self.residual_r(), self.residual_B()
+
+    # -- serving pool sizing --------------------------------------------
+    def slot_counts(self, r_per_slot: float, min_slots: int = 2,
+                    max_slots: int = 512) -> np.ndarray:
+        """(Z,) int — engine slots per server from current r usage
+        (see :func:`slots_from_usage`)."""
+        return slots_from_usage(self.r_used, r_per_slot,
+                                min_slots=min_slots, max_slots=max_slots)
 
     # -- capacity-churn overflow ----------------------------------------
     def overloaded(self, rtol: float = 1e-9) -> np.ndarray:

@@ -1038,6 +1038,15 @@ class MCSAPlanner:
         last applied MLiGDResult, or None when nothing was pending."""
         return self._apply_inflight(fleet, keep=0)
 
+    def engine_slots(self, r_per_slot: float, min_slots: int = 2,
+                     max_slots: int = 512) -> np.ndarray:
+        """(Z,) int — per-server serving slot counts derived from the
+        ledger's admitted r usage (see ``BudgetLedger.slot_counts``).
+        The closed-loop data plane sizes its engine pools with this so
+        serving capacity tracks what admission actually granted."""
+        return self.ledger.slot_counts(r_per_slot, min_slots=min_slots,
+                                       max_slots=max_slots)
+
     def _apply_inflight(self, fleet: FleetState,
                         keep: int = 0) -> Optional[MLiGDResult]:
         """Apply in-flight replans FIFO until at most ``keep`` remain

@@ -1,8 +1,17 @@
-"""Serving layer: batched prefill/decode engine + MCSA split serving."""
-from .engine import DecodeState, InferenceEngine
-from .split import (FailoverEvent, FailoverReport, ServerLostError,
-                    SplitServer, device_prefix, edge_suffix, layer_params)
+"""Serving layer: batched prefill/decode engine, MCSA split serving,
+and the closed-loop data plane (docs/ARCHITECTURE.md, "Serving data
+plane").
 
-__all__ = ["DecodeState", "InferenceEngine", "SplitServer",
-           "ServerLostError", "FailoverEvent", "FailoverReport",
-           "device_prefix", "edge_suffix", "layer_params"]
+Import note: ``repro.serving.dataplane`` and ``repro.serving.failover``
+are numpy-light (config-level code imports ServeConfig through them);
+this package ``__init__`` pulls in the jax-backed engine, so scenario
+code imports the submodules directly.
+"""
+from .engine import DecodeState, IncompleteRunError, InferenceEngine
+from .failover import FailoverEvent, FailoverReport, ServerLostError
+from .split import SplitServer, device_prefix, edge_suffix, layer_params
+
+__all__ = ["DecodeState", "InferenceEngine", "IncompleteRunError",
+           "SplitServer", "ServerLostError", "FailoverEvent",
+           "FailoverReport", "device_prefix", "edge_suffix",
+           "layer_params"]

@@ -1,0 +1,666 @@
+"""Closed-loop serving data plane: one engine pool per edge server.
+
+The control plane (``MCSAPlanner`` behind ``repro.api.Session``) decides
+*where* each user's stream runs and how much compute it gets; this
+module is the loop that actually serves the streams and feeds quality
+signals back.  Per edge server z it keeps an :class:`EnginePool` — a
+continuous-batching :class:`repro.serving.engine.InferenceEngine` whose
+slot count is derived from the admission r-budgets
+(:func:`repro.core.ledger.slots_from_usage`) — and drives it in
+*virtual time*: each decode step advances the pool clock by the slowest
+active stream's per-token delay, which comes from the planner's own
+cost model (``FleetState.T``).  Virtual time makes the loop
+deterministic and seed-reproducible (compute scales with tokens
+emitted, not wall clock) while still letting thousands of real decode
+streams run on CPU.
+
+Robustness semantics (the headline — see docs/ARCHITECTURE.md,
+"Serving data plane"):
+
+* **deadlines** — every request carries ``t_submit + deadline_s``; a
+  stream that blows it is cancelled (tokens preserved) and retried with
+  exponential backoff, at most ``max_retries`` times, then *degraded*
+  to device-only.  Never silently dropped.
+* **backpressure** — a pool whose queue is at ``queue_limit`` sheds the
+  newcomer to device-only execution, deterministically.
+* **mid-stream failover** — when a ``FaultBatch`` kills a server, every
+  in-flight stream re-prefills (prompt + produced tokens) on the
+  evacuation target the planner chose, paying the relay-back price of
+  MLi-GD's Eq. 41 (activation bits x hops / backhaul bandwidth); each
+  such move is a :class:`repro.serving.failover.FailoverEvent` surfaced
+  into ``SessionMetrics``.
+
+Requests arrive open-loop (seeded Poisson, a ``Scenario`` knob via
+:class:`ServeConfig`) and end in exactly one of three terminal states:
+``done`` (edge-completed), ``device`` (planner-chosen device-only), or
+``degraded`` (forced fallback).  ``drain`` audits the invariant
+``submitted == done + device + degraded`` and raises if any request was
+lost.
+
+Top-level imports here are deliberately light (numpy only) so scenario
+code can import :class:`ServeConfig`; jax/model imports happen lazily
+inside the default engine factory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.faults import HOP_UNREACHABLE, clamp_hops
+from repro.core.ledger import slots_from_usage  # noqa: F401  (re-export)
+
+from .failover import FailoverEvent, FailoverReport
+
+# Terminal request statuses.  DEVICE is the *planner's* choice (split ==
+# M at submission / replan); DEGRADED is the data plane forcing a device
+# fallback (shed, timeout budget exhausted, or no live server to run on).
+DONE = "done"
+DEVICE = "device"
+DEGRADED = "degraded"
+TERMINAL = (DONE, DEVICE, DEGRADED)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Declarative serving workload for one scenario (JSON-safe).
+
+    Arrivals (open-loop Poisson, seeded — the whole request trajectory
+    is a pure function of the config):
+
+    arrival_rate : fleet-wide request arrival rate (req/s)
+    arrival_seed : rng seed for counts, times, users, and prompts
+    max_requests : hard cap on total submissions (None = unbounded)
+    prompt_len   : prompt tokens per request
+    max_new      : tokens generated per request
+
+    Robustness:
+
+    deadline_s   : per-attempt completion deadline (s, virtual time)
+    max_retries  : timeout retries before degrading to device-only
+    backoff_s    : retry backoff base; doubles per attempt
+    queue_limit  : per-pool queue bound — arrivals beyond it are shed
+                   (degraded to device-only, deterministically)
+
+    Pool sizing (see :func:`repro.core.ledger.slots_from_usage`):
+
+    r_per_slot   : admitted compute units per decode slot
+    min_slots    : floor so empty servers can still take traffic
+    max_slots    : per-server slot cap (pow2-rounded in between)
+
+    Engine & pricing:
+
+    token_time_scale : multiplies the planner's per-user delay T into
+                   the virtual per-token service time (T * scale /
+                   max_new) — tune so streams span the step boundaries
+                   you care about
+    engine_arch  : model registry name for the real decode engine
+    engine_layers : layer count passed to ``reduced`` (CPU-scale)
+    cache_len    : engine KV cache length (>= prompt_len + max_new)
+    relay_bits_per_token : failover relay payload per token; None
+                   derives d_model * 16 from the engine config
+    """
+    arrival_rate: float = 2.0
+    arrival_seed: int = 0
+    max_requests: Optional[int] = None
+    prompt_len: int = 8
+    max_new: int = 8
+    deadline_s: float = 60.0
+    max_retries: int = 2
+    backoff_s: float = 1.0
+    queue_limit: int = 64
+    r_per_slot: float = 4.0
+    min_slots: int = 2
+    max_slots: int = 512
+    token_time_scale: float = 1.0
+    engine_arch: str = "starcoder2-3b"
+    engine_layers: int = 2
+    cache_len: int = 64
+    relay_bits_per_token: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if self.cache_len < self.prompt_len + self.max_new:
+            raise ValueError("cache_len must cover prompt_len + max_new")
+
+    # -- serialization (mirrors FaultConfig.to_dict/from_dict) ---------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise TypeError(f"unknown ServeConfig fields: {sorted(unknown)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One request's lifecycle through the data plane."""
+    rid: int
+    user: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new: int
+    t_submit: float
+    deadline: float
+    token_s: float                # virtual per-token service time
+    t_ready: float                # earliest admissible time (backoff/relay)
+    t_last: float                 # last token emission time
+    status: str = "queued"
+    attempts: int = 1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    server: int = -1
+    engine_rid: Optional[int] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+    relay_s: float = 0.0
+    failovers: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.tokens)
+
+
+class _DefaultEngineFactory:
+    """Builds real ``InferenceEngine``s lazily (one shared param set, a
+    fresh engine per pool / slot count).  jax/model imports live here so
+    merely importing this module — or configuring a Scenario — stays
+    light."""
+
+    def __init__(self, cfg: ServeConfig):
+        self._scfg = cfg
+        self._mcfg = None
+        self._built = None
+
+    def model_cfg(self):
+        if self._mcfg is None:
+            from repro.configs import get_config, reduced
+            self._mcfg = reduced(get_config(self._scfg.engine_arch),
+                                 layers=self._scfg.engine_layers)
+        return self._mcfg
+
+    @property
+    def d_model(self) -> int:
+        return int(self.model_cfg().d_model)
+
+    def __call__(self, slots: int):
+        if self._built is None:
+            import jax
+
+            from repro.models import transformer as tfm
+            from repro.runtime.meshenv import CPU_ENV
+            cfg = self.model_cfg()
+            params, _ = tfm.init_lm(cfg, jax.random.PRNGKey(0), CPU_ENV)
+            self._built = (params, CPU_ENV)
+        from repro.serving.engine import InferenceEngine
+        params, env = self._built
+        return InferenceEngine(self.model_cfg(), params, env=env,
+                               slots=int(slots),
+                               cache_len=self._scfg.cache_len)
+
+
+def default_engine_factory(cfg: ServeConfig) -> Callable[[int], Any]:
+    return _DefaultEngineFactory(cfg)
+
+
+class EnginePool:
+    """One edge server's serving state: a (lazily built) engine, a FIFO
+    admission queue, a virtual clock, and liveness."""
+
+    def __init__(self, z: int, slots: int, make_engine: Callable[[int], Any]):
+        self.z = z
+        self.slots = int(slots)
+        self._make = make_engine
+        self.engine: Any = None
+        self.queue: deque = deque()
+        self.active: Dict[int, ServeRequest] = {}   # engine rid -> request
+        self.clock = 0.0
+        self.up = True
+        self.peak = 0           # max concurrent streams this step window
+        self.queue_peak = 0     # max queue depth this step window
+
+    def get_engine(self):
+        if self.engine is None:
+            self.engine = self._make(self.slots)
+        return self.engine
+
+    def note_depth(self):
+        self.queue_peak = max(self.queue_peak, len(self.queue))
+
+    def fail(self) -> List:
+        """Server died: drop the engine, return every in-flight request
+        as (request, was_running) for migration.  Running streams keep
+        their produced tokens (mirrored at emission time)."""
+        out = []
+        for req in self.active.values():
+            req.engine_rid = None
+            out.append((req, True))
+        self.active.clear()
+        out.extend((req, False) for req in self.queue)
+        self.queue.clear()
+        self.engine = None
+        self.up = False
+        return out
+
+    def revive(self, slots: int) -> None:
+        """Server recovered: mark live with a fresh slot budget; the
+        engine itself is rebuilt lazily on first admission."""
+        self.slots = int(slots)
+        self.engine = None
+        self.up = True
+
+
+class ServingDataPlane:
+    """The closed loop: Poisson arrivals -> pool queues -> real decode
+    under deadlines/backpressure/failover, in virtual time.
+
+    Driven by ``repro.api.Session`` once per control step, *after* fault
+    evacuation and replanning — so ``fleet.server`` already names the
+    evacuation targets when a ``FaultBatch`` arrives here.
+    """
+
+    def __init__(self, cfg: ServeConfig, topo, *, num_layers: int,
+                 slots: np.ndarray,
+                 slots_fn: Optional[Callable[[], np.ndarray]] = None,
+                 engine_factory: Optional[Callable[[int], Any]] = None):
+        self.cfg = cfg
+        self.topo = topo
+        self.num_layers = int(num_layers)
+        if engine_factory is None:
+            engine_factory = default_engine_factory(cfg)
+        self._factory = engine_factory
+        self._slots_fn = slots_fn
+        slots = np.asarray(slots, np.int64)
+        self.pools = [EnginePool(z, int(slots[z]), engine_factory)
+                      for z in range(topo.num_servers)]
+        self._B_backhaul = np.asarray(
+            [e.B_backhaul for e in topo.edges], np.float64)
+        bits = cfg.relay_bits_per_token
+        if bits is None:
+            bits = 16.0 * float(getattr(engine_factory, "d_model", 64))
+        self._bits_per_token = float(bits)
+
+        self._rng = np.random.default_rng(cfg.arrival_seed)
+        self._next_rid = 0
+        self.requests: Dict[int, ServeRequest] = {}
+        self.events: List[FailoverEvent] = []
+        self.counters = dict(submitted=0, completed=0, device=0,
+                             degraded=0, shed=0, timeouts=0, retries=0,
+                             relays=0, relay_s_total=0.0)
+        self._tok_lat: List[float] = []
+        self._ttft: List[float] = []
+        self.tracks: List[dict] = []
+        self.peak_concurrent = 0
+        self._queue_depth_peak = 0
+        self._t0: Optional[float] = None
+
+    # -- one control step ----------------------------------------------
+    def step(self, dt: float, t: float, *, fleet,
+             faults=None) -> dict:
+        """Advance the data plane over [t, t+dt): fold fault transitions,
+        reconcile in-flight streams against the (re)planned fleet table,
+        draw arrivals, and run every pool to the step boundary.  Returns
+        this step's track sample."""
+        if self._t0 is None:
+            self._t0 = float(t)
+        t_end = t + dt
+        for pool in self.pools:
+            pool.peak = len(pool.active)
+            pool.queue_peak = len(pool.queue)
+        if faults is not None:
+            self._apply_faults(faults, t, fleet)
+        self._reconcile(t, fleet)
+        self._arrivals(dt, t, fleet)
+        for pool in self.pools:
+            self._run_pool(pool, t, t_end, hard=False)
+        return self._record_track(t_end)
+
+    def drain(self) -> None:
+        """Run every pool until empty (deadlines still apply, so this
+        terminates: each request ends within ``max_retries`` attempts).
+        Raises if any request failed to reach a terminal state — the
+        zero-lost invariant is enforced loudly, not assumed."""
+        for pool in self.pools:
+            if pool.up:
+                self._run_pool(pool, pool.clock, float("inf"), hard=True)
+        lost = [r.rid for r in self.requests.values()
+                if r.status not in TERMINAL]
+        if lost:
+            raise RuntimeError(
+                f"data plane lost {len(lost)} request(s): {lost[:8]}...")
+
+    # -- fault transitions ----------------------------------------------
+    def _apply_faults(self, batch, t: float, fleet) -> None:
+        server = np.asarray(fleet.server)
+        split = np.asarray(fleet.split)
+        for z in np.asarray(batch.server_up, np.int64):
+            pool = self.pools[int(z)]
+            if not pool.up:
+                pool.revive(self._slots_for(int(z)))
+        for z in np.asarray(batch.server_down, np.int64):
+            pool = self.pools[int(z)]
+            if not pool.up:
+                continue
+            now = max(pool.clock, t)
+            for req, was_running in pool.fail():
+                if int(split[req.user]) >= self.num_layers:
+                    self._finish_device(req, now, DEVICE)
+                    continue
+                self._route(req, int(server[req.user]), now=now,
+                            relay=was_running,
+                            lost=int(z) if was_running else None)
+
+    # -- handoff continuation -------------------------------------------
+    def _reconcile(self, t: float, fleet) -> None:
+        """Move in-flight streams whose user the planner re-routed:
+        queued requests move free; running streams pay the relay-back
+        price and re-prefill on the new server (decode continues across
+        the handoff — same greedy stream, new KV cache)."""
+        server = np.asarray(fleet.server)
+        split = np.asarray(fleet.split)
+        for pool in self.pools:
+            if not pool.up:
+                continue
+            for _ in range(len(pool.queue)):
+                req = pool.queue.popleft()
+                z_new = int(server[req.user])
+                if int(split[req.user]) >= self.num_layers:
+                    self._finish_device(req, max(t, req.t_ready), DEVICE)
+                elif z_new != pool.z:
+                    self._route(req, z_new, now=max(t, req.t_ready),
+                                relay=False, lost=None)
+                else:
+                    pool.queue.append(req)
+            for erid, req in list(pool.active.items()):
+                z_new = int(server[req.user])
+                dev = int(split[req.user]) >= self.num_layers
+                if not dev and z_new == pool.z:
+                    continue
+                pool.get_engine().cancel(erid)
+                del pool.active[erid]
+                req.engine_rid = None
+                now = max(pool.clock, t)
+                if dev:
+                    self._finish_device(req, now, DEVICE)
+                else:
+                    self._route(req, z_new, now=now, relay=True, lost=None)
+
+    # -- arrivals --------------------------------------------------------
+    def _arrivals(self, dt: float, t: float, fleet) -> None:
+        cfg = self.cfg
+        n = int(self._rng.poisson(cfg.arrival_rate * dt))
+        if cfg.max_requests is not None:
+            n = min(n, cfg.max_requests - self.counters["submitted"])
+        if n <= 0:
+            return
+        server = np.asarray(fleet.server)
+        split = np.asarray(fleet.split)
+        T = np.asarray(fleet.T, np.float64)
+        X = len(server)
+        times = t + np.sort(self._rng.uniform(0.0, dt, n))
+        users = self._rng.integers(0, X, n)
+        prompts = self._rng.integers(1, 200, (n, cfg.prompt_len),
+                                     dtype=np.int32)
+        for i in range(n):
+            u = int(users[i])
+            t_arr = float(times[i])
+            token_s = (max(float(T[u]), 1e-9) * cfg.token_time_scale
+                       / cfg.max_new)
+            req = ServeRequest(
+                rid=self._next_rid, user=u, prompt=prompts[i],
+                max_new=cfg.max_new, t_submit=t_arr,
+                deadline=t_arr + cfg.deadline_s, token_s=token_s,
+                t_ready=t_arr, t_last=t_arr)
+            self._next_rid += 1
+            self.requests[req.rid] = req
+            self.counters["submitted"] += 1
+            if int(split[u]) >= self.num_layers:
+                self._finish_device(req, t_arr, DEVICE)
+                continue
+            pool = self.pools[int(server[u])]
+            if not pool.up:
+                self._finish_device(req, t_arr, DEGRADED)
+                continue
+            if len(pool.queue) >= cfg.queue_limit:
+                self.counters["shed"] += 1
+                self._finish_device(req, t_arr, DEGRADED)
+                continue
+            req.server = pool.z
+            pool.queue.append(req)
+            pool.note_depth()
+
+    # -- routing / terminal helpers -------------------------------------
+    def _finish_device(self, req: ServeRequest, now: float,
+                       status: str) -> None:
+        """Complete a request on the user's own device in virtual time.
+        Tokens are not materialized (the device runs the full model; the
+        stream identity question only exists for edge engines)."""
+        req.status = status
+        req.server = -1
+        req.t_done = now + req.remaining * req.token_s
+        self.counters[status] += 1
+
+    def _route(self, req: ServeRequest, z_new: int, *, now: float,
+               relay: bool, lost: Optional[int]) -> None:
+        """Re-queue a request on server ``z_new``.  ``relay=True`` prices
+        the KV relay-back (prompt + produced re-prefilled there);
+        ``lost`` names a dead source server, making this a failover
+        event rather than a planned handoff."""
+        pool = self.pools[z_new]
+        if not pool.up:
+            self._finish_device(req, now, DEGRADED)
+            return
+        relay_s = 0.0
+        if relay:
+            z_old = lost if lost is not None else req.server
+            h = self._relay_hops(z_old, z_new)
+            if h >= HOP_UNREACHABLE:
+                self._finish_device(req, now, DEGRADED)
+                return
+            bits = self._bits_per_token * (len(req.prompt)
+                                           + len(req.tokens))
+            relay_s = float(bits * h / self._B_backhaul[z_new])
+            req.relay_s += relay_s
+            self.counters["relays"] += 1
+            self.counters["relay_s_total"] += relay_s
+            if lost is not None:
+                req.failovers += 1
+                self.events.append(FailoverEvent(
+                    lost=f"server{z_old}", tokens_done=len(req.tokens),
+                    relay_s=relay_s, relay_bits=bits))
+        req.server = z_new
+        req.t_ready = now + relay_s
+        req.t_last = max(req.t_last, req.t_ready)
+        # Migrants bypass the queue_limit: they are already-admitted work
+        # being preserved, not new load — shedding them would drop them.
+        pool.queue.append(req)
+        pool.note_depth()
+
+    def _relay_hops(self, z_old: int, z_new: int) -> float:
+        ap = int(self.topo.server_aps[z_old])
+        h = float(clamp_hops(self.topo.hops[ap, z_new]))
+        return h if h >= HOP_UNREACHABLE else max(h, 1.0)
+
+    def _slots_for(self, z: int) -> int:
+        if self._slots_fn is not None:
+            return int(np.asarray(self._slots_fn())[z])
+        return self.pools[z].slots
+
+    # -- the pool run loop ----------------------------------------------
+    def _run_pool(self, pool: EnginePool, t_start: float, t_end: float,
+                  hard: bool) -> None:
+        """Advance one pool's virtual clock to ``t_end`` (or to empty,
+        when ``hard``): admit ready requests FIFO, one fused decode per
+        iteration, deadline checks between decodes."""
+        if not pool.up:
+            return
+        pool.clock = max(pool.clock, t_start)
+        while True:
+            self._timeouts(pool)
+            self._admit_pool(pool)
+            if not pool.active:
+                if not pool.queue:
+                    return
+                nxt = min(r.t_ready for r in pool.queue)
+                if not hard and nxt > t_end:
+                    return
+                pool.clock = max(pool.clock, nxt)
+                continue
+            if not hard and pool.clock >= t_end:
+                return
+            emitted = pool.get_engine().step()
+            pool.clock += max(r.token_s for r in pool.active.values())
+            for erid, tok in emitted:
+                req = pool.active.get(erid)
+                if req is None:
+                    continue
+                self._stamp(req, tok, pool.clock)
+                if req.remaining <= 0:
+                    pool.get_engine().pop_result(erid)
+                    del pool.active[erid]
+                    req.engine_rid = None
+                    req.status = DONE
+                    req.t_done = req.t_last
+                    self.counters["completed"] += 1
+
+    def _admit_pool(self, pool: EnginePool) -> None:
+        if not pool.queue:
+            return
+        eng = pool.get_engine()
+        free = eng.free_slots
+        pool.note_depth()
+        for _ in range(len(pool.queue)):
+            req = pool.queue.popleft()
+            if free <= 0 or req.t_ready > pool.clock:
+                pool.queue.append(req)   # order-preserving rotation
+                continue
+            free -= 1
+            tokens = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.tokens, np.int32)])
+            erid = eng.submit(tokens, req.remaining)
+            eng.admit()
+            # prefill emits the first token synchronously at admission
+            tok = eng.requests[erid].out[-1]
+            self._stamp(req, tok, pool.clock + req.token_s)
+            if req.remaining <= 0:
+                eng.pop_result(erid)
+                req.status = DONE
+                req.t_done = req.t_last
+                self.counters["completed"] += 1
+            else:
+                req.engine_rid = erid
+                req.status = "running"
+                pool.active[erid] = req
+        pool.peak = max(pool.peak, len(pool.active))
+
+    def _timeouts(self, pool: EnginePool) -> None:
+        now = pool.clock
+        for _ in range(len(pool.queue)):
+            req = pool.queue.popleft()
+            if now >= req.deadline:
+                self._timeout(req, now)
+            else:
+                pool.queue.append(req)
+        for erid, req in list(pool.active.items()):
+            if now >= req.deadline:
+                pool.get_engine().cancel(erid)
+                del pool.active[erid]
+                req.engine_rid = None
+                self._timeout(req, now)
+
+    def _timeout(self, req: ServeRequest, now: float) -> None:
+        self.counters["timeouts"] += 1
+        if req.attempts > self.cfg.max_retries:
+            self._finish_device(req, now, DEGRADED)
+            return
+        delay = self.cfg.backoff_s * (2.0 ** (req.attempts - 1))
+        req.attempts += 1
+        self.counters["retries"] += 1
+        req.t_ready = now + delay
+        req.deadline = req.t_ready + self.cfg.deadline_s
+        req.t_last = max(req.t_last, req.t_ready)
+        req.status = "queued"
+        pool = self.pools[req.server]
+        pool.queue.append(req)     # same server: the planner still maps
+        pool.note_depth()          # the user there; reconcile moves it
+
+    def _stamp(self, req: ServeRequest, tok: int, t_tok: float) -> None:
+        req.tokens.append(int(tok))
+        if req.t_first is None:
+            req.t_first = t_tok
+            self._ttft.append(t_tok - req.t_submit)
+        else:
+            self._tok_lat.append(max(t_tok - req.t_last, 0.0))
+        req.t_last = t_tok
+
+    # -- telemetry -------------------------------------------------------
+    def _record_track(self, t_end: float) -> dict:
+        peak = sum(p.peak for p in self.pools)
+        depth = max((p.queue_peak for p in self.pools), default=0)
+        self.peak_concurrent = max(self.peak_concurrent, peak)
+        self._queue_depth_peak = max(self._queue_depth_peak, depth)
+        sample = dict(
+            t=float(t_end),
+            active=sum(len(p.active) for p in self.pools),
+            queued=sum(len(p.queue) for p in self.pools),
+            peak_active=int(peak),
+            queue_depth_max=int(depth),
+            submitted=int(self.counters["submitted"]),
+            completed=int(self.counters["completed"]))
+        self.tracks.append(sample)
+        return sample
+
+    def in_flight(self) -> int:
+        return sum(1 for r in self.requests.values()
+                   if r.status not in TERMINAL)
+
+    def failover_report(self) -> FailoverReport:
+        return FailoverReport(events=list(self.events))
+
+    def summary(self) -> dict:
+        c = self.counters
+        tl = np.asarray(self._tok_lat, np.float64)
+        tf = np.asarray(self._ttft, np.float64)
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else None
+
+        tokens = int(tl.size + tf.size)
+        clocks = [p.clock for p in self.pools]
+        span = (max(clocks) - self._t0) if (clocks and
+                                            self._t0 is not None) else 0.0
+        qmeans = [s["queued"] for s in self.tracks]
+        return {
+            "submitted": int(c["submitted"]),
+            "completed": int(c["completed"]),
+            "device": int(c["device"]),
+            "degraded": int(c["degraded"]),
+            "lost": int(c["submitted"] - c["completed"] - c["device"]
+                        - c["degraded"]),
+            "shed": int(c["shed"]),
+            "timeouts": int(c["timeouts"]),
+            "retries": int(c["retries"]),
+            "relays": int(c["relays"]),
+            "relay_s_total": float(c["relay_s_total"]),
+            "failover_events": len(self.events),
+            "tokens_emitted": tokens,
+            "peak_concurrent_streams": int(self.peak_concurrent),
+            "queue_depth_peak": int(self._queue_depth_peak),
+            "queue_depth_mean": (float(np.mean(qmeans)) if qmeans
+                                 else 0.0),
+            "token_latency_p50_s": pct(tl, 50),
+            "token_latency_p99_s": pct(tl, 99),
+            "ttft_p50_s": pct(tf, 50),
+            "ttft_p99_s": pct(tf, 99),
+            "virtual_time_s": float(span),
+            "virtual_tok_per_s": (float(tokens / span) if span > 0
+                                  else None),
+            "slots": [int(p.slots) for p in self.pools],
+            "servers_up": int(sum(p.up for p in self.pools)),
+        }

@@ -10,7 +10,10 @@ This is the edge-server role of the MCSA system: the planner (Li-GD)
 decides per-user split points and the resource share r_i; the engine is
 what actually burns those compute units.  ``InferenceEngine`` also serves
 unsplit models — the Edge-Only baseline — and is exercised CPU-scale in
-examples/serve_split.py.
+examples/serve_split.py.  The closed-loop data plane
+(:mod:`repro.serving.dataplane`) runs one engine per edge server with
+slot counts derived from admission r-budgets; see docs/ARCHITECTURE.md
+("Serving data plane").
 """
 from __future__ import annotations
 
@@ -47,6 +50,23 @@ class DecodeState:
     last_token: jnp.ndarray         # (B, 1)
     pos: np.ndarray                 # (B,) per-slot positions
     active: np.ndarray              # (B,) bool
+
+
+class IncompleteRunError(RuntimeError):
+    """``run_to_completion`` ran out of steps with work still in flight.
+
+    Carries the surviving request ids so callers can recover or account
+    for them instead of silently losing requests.  ``partial`` holds the
+    outputs produced so far for every request the engine has seen."""
+
+    def __init__(self, queued: List[int], active: List[int],
+                 partial: Dict[int, List[int]]):
+        super().__init__(
+            f"run_to_completion exhausted max_steps with "
+            f"{len(queued)} queued and {len(active)} active request(s)")
+        self.queued = queued
+        self.active = active
+        self.partial = partial
 
 
 def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -94,6 +114,11 @@ class InferenceEngine:
         self._decode_fn = _decode
 
     # ------------------------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        """Number of slots not currently running a request."""
+        return int(self.slots - self.state.active.sum())
+
     def submit(self, tokens: np.ndarray, max_new: int) -> int:
         rid = self._next_rid
         self._next_rid += 1
@@ -101,7 +126,11 @@ class InferenceEngine:
                                    max_new=max_new))
         return rid
 
-    def _admit(self):
+    def admit(self) -> List[int]:
+        """Admit queued requests into free slots, FIFO.  Each admission
+        prefills the prompt and emits the first token.  Returns the rids
+        admitted this call, in admission order."""
+        admitted: List[int] = []
         free = [i for i in range(self.slots) if not self.state.active[i]]
         while free and self._queue:
             slot = free.pop(0)
@@ -129,13 +158,51 @@ class InferenceEngine:
             self.state.pos[slot] = S
             self.state.active[slot] = True
             self.requests[req.rid] = req
-            self.slot_of[req.rid] = slot
+            if req.done:
+                # max_new == 1: the prefill token satisfied the request
+                # (the data plane hits this re-prefilling a migrated
+                # stream with one token left) — free the slot at once.
+                self.state.active[slot] = False
+                free.insert(0, slot)
+            else:
+                self.slot_of[req.rid] = slot
+            admitted.append(req.rid)
+        return admitted
+
+    # Kept for callers/tests predating the public ``admit``.
+    _admit = admit
+
+    def cancel(self, rid: int) -> List[int]:
+        """Abort a request (queued or active), freeing its slot.
+
+        Returns the tokens produced so far (empty if it never left the
+        queue).  The request is forgotten entirely — used by the data
+        plane for deadline timeouts and mid-stream migration, where the
+        produced prefix is re-prefilled elsewhere."""
+        for i, req in enumerate(self._queue):
+            if req.rid == rid:
+                self._queue.pop(i)
+                return list(req.out)
+        slot = self.slot_of.pop(rid, None)
+        if slot is not None:
+            self.state.active[slot] = False
+        req = self.requests.pop(rid, None)
+        if req is None:
+            raise KeyError(f"unknown rid {rid}")
+        return list(req.out)
+
+    def pop_result(self, rid: int) -> List[int]:
+        """Remove a finished (or cancelled-from-queue) request and return
+        its output tokens, releasing the engine's reference to it."""
+        req = self.requests.pop(rid)
+        self.slot_of.pop(rid, None)
+        return list(req.out)
 
     # ------------------------------------------------------------------
     def step(self) -> List[Tuple[int, int]]:
         """Admit + one decode for all active slots.
         Returns [(rid, token)] emitted this step."""
-        self._admit()
+        self.admit()
         if not self.state.active.any():
             return []
         logits, nxt, caches = self._decode_fn(
@@ -143,12 +210,13 @@ class InferenceEngine:
             jnp.asarray(self.state.pos, jnp.int32), self.state.caches)
         self.state.caches = caches
         self.state.last_token = nxt[:, None]
+        nxt_np = np.asarray(nxt)
         emitted = []
         for rid, slot in list(self.slot_of.items()):
             if not self.state.active[slot]:
                 continue
             req = self.requests[rid]
-            tok = int(nxt[slot])
+            tok = int(nxt_np[slot])
             req.out.append(tok)
             self.state.pos[slot] += 1
             emitted.append((rid, tok))
@@ -157,10 +225,28 @@ class InferenceEngine:
                 del self.slot_of[rid]
         return emitted
 
-    def run_to_completion(self, max_steps: int = 10_000):
+    def run_to_completion(self, max_steps: int = 10_000, *,
+                          strict: bool = True):
+        """Step until every submitted request finishes.
+
+        Raises :class:`IncompleteRunError` if ``max_steps`` is exhausted
+        with requests still queued or active — requests are never
+        silently dropped.  Pass ``strict=False`` to get the partial
+        outputs back instead (in-flight requests stay resident and a
+        further call can finish them)."""
         while (self._queue or self.state.active.any()) and max_steps:
             self.step()
             max_steps -= 1
+        if self._queue or self.state.active.any():
+            partial = {rid: list(req.out)
+                       for rid, req in self.requests.items()}
+            for req in self._queue:
+                partial[req.rid] = list(req.out)
+            if strict:
+                raise IncompleteRunError(
+                    queued=[r.rid for r in self._queue],
+                    active=sorted(self.slot_of), partial=partial)
+            return partial
         return {rid: req.out for rid, req in self.requests.items()}
 
 

@@ -1,0 +1,74 @@
+"""Failover accounting types shared by the serving layer.
+
+Two consumers produce these records:
+
+* :meth:`repro.serving.split.SplitServer.generate_with_failover` — the
+  driver-side retry loop for one split stream (PR 6);
+* :class:`repro.serving.dataplane.ServingDataPlane` — the closed-loop
+  data plane, which migrates every in-flight stream off a dead engine
+  pool onto the evacuation target the planner chose.
+
+Both feed the same ``FailoverReport`` shape into
+``repro.api.SessionMetrics`` (the ``serving_failovers`` entry of the
+faults summary), so serving-side failovers are visible to the control
+plane no matter which path handled them.  This module is deliberately
+dependency-light (no jax, no models) so config-level code can import it.
+
+See docs/ARCHITECTURE.md ("Serving data plane" and "Failure handling").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+class ServerLostError(RuntimeError):
+    """The edge server disappeared mid-stream (crash / cut backhaul).
+
+    Raised by the edge half of a split call when the server is down;
+    ``server`` names the lost server.  Drivers catch it and relay the
+    stream to a surviving server — see
+    :meth:`repro.serving.split.SplitServer.generate_with_failover`."""
+
+    def __init__(self, server: str):
+        super().__init__(f"edge server {server!r} lost mid-stream")
+        self.server = server
+
+
+@dataclasses.dataclass
+class FailoverEvent:
+    """One mid-stream server loss handled by a failover driver.
+
+    lost        : name of the server that died
+    tokens_done : tokens already generated when it died (all preserved —
+                  the fallback re-prefills the prefix + generated text)
+    relay_s     : relay-back transmission delay paid for this failover:
+                  the full activation stream re-shipped over ``hops_back``
+                  backhaul hops at ``bandwidth_hz`` (the H₂ relay path
+                  of MLi-GD's Eq. 41 pricing)
+    relay_bits  : size of that re-shipped w_s payload (bits)
+    """
+    lost: str
+    tokens_done: int
+    relay_s: float
+    relay_bits: float
+
+
+@dataclasses.dataclass
+class FailoverReport:
+    """Accounting of one failover-capable run: the failovers that
+    happened (empty = clean run) and the total relay-back delay they
+    cost."""
+    events: List[FailoverEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def retries(self) -> int:
+        return len(self.events)
+
+    @property
+    def relay_s(self) -> float:
+        return sum(e.relay_s for e in self.events)
+
+    @property
+    def tokens_preserved(self) -> int:
+        return sum(e.tokens_done for e in self.events)

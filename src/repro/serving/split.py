@@ -44,6 +44,13 @@ from repro.models.layers import rms_norm
 from repro.models.sharded_ops import sharded_argmax, unembed_logits
 from repro.runtime.meshenv import CPU_ENV, MeshEnv
 
+from .failover import FailoverEvent, FailoverReport, ServerLostError
+
+__all__ = ["SplitServer", "ServerLostError", "FailoverEvent",
+           "FailoverReport", "layer_params", "layer_type_of",
+           "device_prefix", "edge_suffix", "activation_bits",
+           "init_range_caches"]
+
 Params = Dict[str, Any]
 
 
@@ -145,52 +152,9 @@ def activation_bits(cfg: ModelConfig, batch: int, tokens: int) -> float:
     return float(batch * tokens * cfg.d_model * 16)
 
 
-class ServerLostError(RuntimeError):
-    """The edge server disappeared mid-stream (crash / cut backhaul).
-
-    Raised by the edge half of a split call when the server is down;
-    ``server`` names the lost server.  Drivers catch it and relay the
-    stream to a surviving server — see
-    :meth:`SplitServer.generate_with_failover`."""
-
-    def __init__(self, server: str):
-        super().__init__(f"edge server {server!r} lost mid-stream")
-        self.server = server
-
-
-@dataclasses.dataclass
-class FailoverEvent:
-    """One mid-stream server loss handled by the failover driver.
-
-    lost        : name of the server that died
-    tokens_done : tokens already generated when it died (all preserved —
-                  the fallback re-prefills the prefix + generated text)
-    relay_s     : relay-back transmission delay paid for this failover:
-                  the full activation stream re-shipped over ``hops_back``
-                  backhaul hops at ``bandwidth_hz`` (the H₂ relay path
-                  of MLi-GD's Eq. 41 pricing)
-    relay_bits  : size of that re-shipped w_s payload (bits)
-    """
-    lost: str
-    tokens_done: int
-    relay_s: float
-    relay_bits: float
-
-
-@dataclasses.dataclass
-class FailoverReport:
-    """Accounting of one :meth:`SplitServer.generate_with_failover` run:
-    the failovers that happened (empty = clean run) and the total
-    relay-back delay they cost."""
-    events: List[FailoverEvent] = dataclasses.field(default_factory=list)
-
-    @property
-    def retries(self) -> int:
-        return len(self.events)
-
-    @property
-    def relay_s(self) -> float:
-        return sum(e.relay_s for e in self.events)
+# ServerLostError / FailoverEvent / FailoverReport live in
+# repro.serving.failover (dependency-light, shared with the closed-loop
+# data plane) and are re-exported here for compatibility.
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,379 @@
+"""Closed-loop serving data plane: deterministic arrivals, backpressure,
+deadlines, and mid-stream failover (docs/ARCHITECTURE.md, "Serving data
+plane").
+
+Most tests drive :class:`ServingDataPlane` against a deterministic
+``FakeEngine`` whose token rule is ``next = last(prompt ++ out) + 1`` —
+a migrated stream that keeps extending the same arithmetic sequence
+proves stream identity across re-prefill without a model.  One test
+repeats the migration against the real :class:`InferenceEngine` and
+checks the failed-over stream is token-identical to an uninterrupted
+run."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.api import Session, get_scenario
+from repro.core.faults import HOP_UNREACHABLE
+from repro.core.ledger import BudgetLedger, slots_from_usage
+from repro.serving.dataplane import DEGRADED, DEVICE, DONE, ServeConfig, \
+    ServeRequest, ServingDataPlane
+from repro.serving.failover import FailoverEvent, FailoverReport
+
+NUM_LAYERS = 4          # split >= 4 means device-only
+
+
+# ---------------------------------------------------------------------
+# deterministic fake engine (dataplane's engine protocol)
+# ---------------------------------------------------------------------
+class _FakeReq:
+    def __init__(self, rid, tokens, max_new):
+        self.rid = rid
+        self.tokens = np.asarray(tokens)
+        self.max_new = max_new
+        self.out = []
+
+    @property
+    def done(self):
+        return len(self.out) >= self.max_new
+
+    @property
+    def last(self):
+        return int(self.out[-1]) if self.out else int(self.tokens[-1])
+
+
+class FakeEngine:
+    """Next token = last(prompt ++ out) + 1: pure, instant, and
+    migration-consistent (re-prefilling prompt + produced continues the
+    same sequence)."""
+
+    def __init__(self, slots):
+        self.slots = int(slots)
+        self.requests = {}
+        self._active = {}
+        self._queue = []
+        self._next_rid = 0
+
+    @property
+    def free_slots(self):
+        return self.slots - len(self._active)
+
+    def submit(self, tokens, max_new):
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_FakeReq(rid, tokens, max_new))
+        return rid
+
+    def admit(self):
+        admitted = []
+        while self._queue and self.free_slots > 0:
+            req = self._queue.pop(0)
+            req.out.append(req.last + 1)       # prefill emits token #1
+            self.requests[req.rid] = req
+            if not req.done:
+                self._active[req.rid] = req
+            admitted.append(req.rid)
+        return admitted
+
+    def step(self):
+        self.admit()
+        emitted = []
+        for rid, req in list(self._active.items()):
+            req.out.append(req.last + 1)
+            emitted.append((rid, req.out[-1]))
+            if req.done:
+                del self._active[rid]
+        return emitted
+
+    def cancel(self, rid):
+        for i, req in enumerate(self._queue):
+            if req.rid == rid:
+                self._queue.pop(i)
+                return list(req.out)
+        self._active.pop(rid, None)
+        return list(self.requests.pop(rid).out)
+
+    def pop_result(self, rid):
+        self._active.pop(rid, None)
+        return list(self.requests.pop(rid).out)
+
+
+# ---------------------------------------------------------------------
+# stub world (numpy-only: no planner, no jax)
+# ---------------------------------------------------------------------
+def _topo(Z=2, backhaul=1e6):
+    return SimpleNamespace(
+        num_servers=Z,
+        edges=[SimpleNamespace(B_backhaul=backhaul) for _ in range(Z)],
+        server_aps=np.arange(Z, dtype=np.int64),
+        hops=np.ones((Z, Z), np.float64))
+
+
+def _fleet(servers, splits, T=None):
+    servers = np.asarray(servers, np.int64)
+    T = np.ones(len(servers)) if T is None else np.asarray(T, np.float64)
+    return SimpleNamespace(server=servers,
+                           split=np.asarray(splits, np.int64), T=T)
+
+
+def _cfg(**kw):
+    base = dict(arrival_rate=2.0, arrival_seed=3, max_requests=8,
+                prompt_len=4, max_new=4, cache_len=16, deadline_s=100.0,
+                max_retries=2, backoff_s=1.0, queue_limit=64,
+                min_slots=2, max_slots=8, token_time_scale=4.0)
+    base.update(kw)
+    return ServeConfig(**base)      # token_s = T * 4.0 / 4 = T seconds
+
+
+def _plane(cfg, Z=2, slots=2, topo=None):
+    return ServingDataPlane(cfg, topo or _topo(Z), num_layers=NUM_LAYERS,
+                            slots=np.full(Z, slots),
+                            engine_factory=FakeEngine)
+
+
+_DOWN0 = SimpleNamespace(server_down=np.asarray([0], np.int64),
+                         server_up=np.asarray([], np.int64))
+
+
+# ---------------------------------------------------------------------
+# config + slot sizing
+# ---------------------------------------------------------------------
+def test_serve_config_roundtrip():
+    cfg = _cfg(relay_bits_per_token=128.0)
+    assert ServeConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(TypeError):
+        ServeConfig.from_dict({"arrival_rate": 1.0, "bogus": 2})
+    with pytest.raises(ValueError):
+        ServeConfig(prompt_len=8, max_new=8, cache_len=8)
+    with pytest.raises(ValueError):
+        ServeConfig(max_new=0)
+
+
+def test_slots_from_usage_pow2():
+    got = slots_from_usage([0.0, 7.9, 8.1, 1000.0], 4.0,
+                           min_slots=2, max_slots=64)
+    np.testing.assert_array_equal(got, [2, 2, 4, 64])
+    # the min floor is applied before pow2 rounding
+    np.testing.assert_array_equal(
+        slots_from_usage([0.0], 4.0, min_slots=3, max_slots=64), [4])
+    with pytest.raises(ValueError):
+        slots_from_usage([1.0], 0.0)
+
+
+def test_ledger_slot_counts():
+    ledger = BudgetLedger(_topo(3))
+    ledger.charge(np.asarray([0, 1, 1]), np.asarray([5.0, 9.0, 9.0]),
+                  np.zeros(3))
+    np.testing.assert_array_equal(
+        ledger.slot_counts(4.0, min_slots=2, max_slots=8), [2, 8, 2])
+
+
+# ---------------------------------------------------------------------
+# arrivals: seeded determinism and terminal routing
+# ---------------------------------------------------------------------
+def test_arrivals_deterministic_across_planes():
+    fleet = _fleet([0, 1, 0, 1], [1, 2, NUM_LAYERS, 1])
+    runs = []
+    for _ in range(2):
+        dp = _plane(_cfg())
+        for i in range(3):
+            dp.step(10.0, 10.0 * i, fleet=fleet)
+        dp.drain()
+        runs.append({r.rid: (r.user, r.status, tuple(r.tokens),
+                             r.prompt.tolist())
+                     for r in dp.requests.values()})
+    assert runs[0] == runs[1]
+    assert len(runs[0]) == 8            # max_requests honored
+
+
+def test_device_split_users_never_touch_pools():
+    fleet = _fleet([0, 0], [NUM_LAYERS, NUM_LAYERS + 1])
+    dp = _plane(_cfg())
+    dp.step(10.0, 0.0, fleet=fleet)
+    dp.drain()
+    s = dp.summary()
+    assert s["device"] == s["submitted"] > 0
+    assert s["tokens_emitted"] == 0 and s["lost"] == 0
+    assert all(r.status == DEVICE and r.t_done is not None
+               for r in dp.requests.values())
+
+
+# ---------------------------------------------------------------------
+# backpressure + deadlines
+# ---------------------------------------------------------------------
+def test_backpressure_sheds_to_device_never_drops():
+    cfg = _cfg(arrival_rate=40.0, max_requests=40, queue_limit=2)
+    dp = _plane(cfg, slots=1)
+    fleet = _fleet([0], [1])
+    dp.step(1.0, 0.0, fleet=fleet)
+    dp.drain()
+    s = dp.summary()
+    assert s["shed"] > 0
+    assert s["degraded"] == s["shed"]   # shed -> device-only, not lost
+    assert s["lost"] == 0
+    assert s["submitted"] == s["completed"] + s["degraded"]
+
+
+def test_deadline_timeout_retries_then_degrades():
+    # token_s = 10s against a 2s deadline: every attempt blows it
+    # (max_new = 8 keeps the retry long enough to time out again —
+    # deadlines are checked between decodes)
+    cfg = _cfg(arrival_rate=5.0, max_requests=1, deadline_s=2.0,
+               max_retries=1, backoff_s=1.0, max_new=8,
+               token_time_scale=80.0)
+    dp = _plane(cfg, slots=1)
+    fleet = _fleet([0], [1])
+    dp.step(1.0, 0.0, fleet=fleet)
+    dp.drain()
+    s = dp.summary()
+    (req,) = dp.requests.values()
+    assert req.status == DEGRADED and req.attempts == 2
+    assert s["timeouts"] == 2 and s["retries"] == 1
+    assert s["lost"] == 0
+
+
+# ---------------------------------------------------------------------
+# mid-stream failover
+# ---------------------------------------------------------------------
+def test_midstream_failover_continues_the_same_stream():
+    cfg = _cfg(arrival_rate=5.0, max_requests=1, max_new=6,
+               token_time_scale=6.0, cache_len=16)
+    dp = _plane(cfg)
+    dp.step(3.0, 0.0, fleet=_fleet([0], [1]))      # stream starts on z0
+    assert dp.in_flight() == 1
+    # server 0 dies mid-decode; the planner has moved the user to z1
+    dp.step(3.0, 3.0, fleet=_fleet([1], [1]), faults=_DOWN0)
+    dp.drain()
+    (req,) = dp.requests.values()
+    assert req.status == DONE and req.failovers == 1
+    assert req.server == 1 and req.relay_s > 0.0
+    # stream identity: one arithmetic run, no gap and no repeat
+    first = int(req.prompt[-1]) + 1
+    assert req.tokens == list(range(first, first + 6))
+    s = dp.summary()
+    assert s["failover_events"] == 1 and s["relays"] == 1
+    (ev,) = dp.events
+    assert ev.lost == "server0" and ev.tokens_done > 0
+    assert dp.failover_report().tokens_preserved == ev.tokens_done
+
+
+def test_failover_with_no_live_target_degrades():
+    cfg = _cfg(arrival_rate=5.0, max_requests=2, max_new=6,
+               token_time_scale=6.0, cache_len=16)
+    dp = _plane(cfg, Z=1, slots=2)
+    dp.step(3.0, 0.0, fleet=_fleet([0, 0], [1, 1]))
+    # the only server dies and the planner has nowhere else to point
+    dp.step(3.0, 3.0, fleet=_fleet([0, 0], [1, 1]), faults=_DOWN0)
+    dp.drain()
+    s = dp.summary()
+    assert s["lost"] == 0 and s["failover_events"] == 0
+    assert all(r.status in (DONE, DEGRADED)
+               for r in dp.requests.values())
+    assert s["degraded"] > 0
+
+
+def test_unreachable_relay_degrades_running_stream():
+    topo = _topo(2)
+    topo.hops[0, 1] = HOP_UNREACHABLE       # z0's AP cannot reach z1
+    cfg = _cfg(arrival_rate=5.0, max_requests=1, max_new=6,
+               token_time_scale=6.0, cache_len=16)
+    dp = _plane(cfg, topo=topo)
+    dp.step(3.0, 0.0, fleet=_fleet([0], [1]))
+    assert dp.in_flight() == 1
+    dp.step(3.0, 3.0, fleet=_fleet([1], [1]), faults=_DOWN0)
+    dp.drain()
+    (req,) = dp.requests.values()
+    assert req.status == DEGRADED           # relay priced as unreachable
+    assert dp.summary()["failover_events"] == 0
+
+
+def test_drain_raises_on_lost_request():
+    dp = _plane(_cfg())
+    dp.requests[99] = ServeRequest(
+        rid=99, user=0, prompt=np.asarray([1, 2], np.int32), max_new=4,
+        t_submit=0.0, deadline=10.0, token_s=1.0, t_ready=0.0, t_last=0.0)
+    with pytest.raises(RuntimeError, match="lost 1 request"):
+        dp.drain()
+
+
+# ---------------------------------------------------------------------
+# real engine: failed-over stream is token-identical
+# ---------------------------------------------------------------------
+def test_real_engine_failover_matches_uninterrupted_run():
+    cfg = ServeConfig(arrival_rate=5.0, arrival_seed=2, max_requests=1,
+                      prompt_len=4, max_new=6, cache_len=32,
+                      token_time_scale=6.0, min_slots=2, max_slots=2)
+    topo = _topo(2)
+
+    def run(kill):
+        dp = ServingDataPlane(cfg, topo, num_layers=NUM_LAYERS,
+                              slots=np.asarray([2, 2]))
+        dp.step(3.0, 0.0, fleet=_fleet([0], [1]))
+        if kill:
+            assert dp.in_flight() == 1
+            dp.step(3.0, 3.0, fleet=_fleet([1], [1]), faults=_DOWN0)
+        dp.drain()
+        (req,) = dp.requests.values()
+        return req
+
+    intact, failed_over = run(kill=False), run(kill=True)
+    assert intact.status == DONE and intact.failovers == 0
+    assert failed_over.status == DONE and failed_over.failovers == 1
+    # greedy decode is deterministic: re-prefilling prompt + produced on
+    # the fallback server must continue the exact same token stream
+    assert failed_over.tokens == intact.tokens
+
+
+# ---------------------------------------------------------------------
+# Session integration
+# ---------------------------------------------------------------------
+def _tiny_scenario(**kw):
+    base = get_scenario("serve_chaos_k3").replace(
+        num_users=24, steps=2, serving=None, faults=None)
+    return base.replace(**kw) if kw else base
+
+
+def test_session_drives_injected_dataplane():
+    sess = Session(_tiny_scenario())
+    cfg = _cfg(max_requests=6)
+    sess.dataplane = ServingDataPlane(
+        cfg, sess.topo, num_layers=sess.profile.num_layers,
+        slots=np.full(sess.topo.num_servers, 2), engine_factory=FakeEngine)
+    rep = None
+    for _ in range(sess.scenario.steps):
+        rep = sess.step()
+    assert rep.serving is not None and "active" in rep.serving
+    m = sess.run(0)                     # drains the data plane too
+    assert m.serving is not None and m.serving["lost"] == 0
+    assert m.serving["submitted"] == 6
+
+
+def test_session_slot_counts_follow_admission_budgets():
+    sc = _tiny_scenario()
+    sess = Session(sc.replace(serving=_cfg(r_per_slot=8.0, min_slots=4,
+                                           max_slots=64)))
+    slots = np.asarray([p.slots for p in sess.dataplane.pools])
+    expect = sess.policy.ledger.slot_counts(8.0, min_slots=4,
+                                            max_slots=64)
+    np.testing.assert_array_equal(slots, expect)
+    assert np.all(slots >= 4) and np.all(slots <= 64)
+
+
+def test_record_failover_surfaces_into_metrics():
+    sess = Session(_tiny_scenario(steps=1))
+    sess.record_failover(FailoverReport(events=[
+        FailoverEvent(lost="edge0", tokens_done=3, relay_s=0.5,
+                      relay_bits=4096.0)]))
+    fo = sess.metrics().faults["serving_failovers"]
+    assert fo["events"] == 1 and fo["tokens_preserved"] == 3
+    assert fo["relay_s"] == pytest.approx(0.5)
+
+
+def test_serving_free_session_unchanged():
+    sess = Session(_tiny_scenario(steps=1))
+    rep = sess.step()
+    assert rep.serving is None
+    m = sess.metrics()
+    assert m.serving is None
+    assert m.faults is None or "serving_failovers" not in m.faults

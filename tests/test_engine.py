@@ -8,7 +8,8 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import transformer as tfm
 from repro.runtime.meshenv import CPU_ENV as env
-from repro.serving.engine import InferenceEngine
+from repro.serving.engine import IncompleteRunError, InferenceEngine, \
+    _bucket
 
 
 @pytest.fixture(scope="module")
@@ -68,3 +69,87 @@ def test_more_requests_than_slots(model):
     assert len(results) == 4
     for rid, p in zip(rids, prompts):
         assert results[rid] == _reference(cfg, params, jnp.asarray(p), 4)
+
+
+def test_bucket_boundaries():
+    """Prefill pad buckets: exact boundaries stay put, one past rounds
+    up, and beyond the largest bucket rounds to a multiple of 4096."""
+    assert _bucket(1) == 64
+    assert _bucket(64) == 64
+    assert _bucket(65) == 128
+    assert _bucket(4096) == 4096
+    assert _bucket(4097) == 8192
+    assert _bucket(10_000) == 12_288
+
+
+def test_slots_freed_and_reused_after_completion(model):
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=2, cache_len=512)
+    eng.submit(np.asarray([1, 2, 3], np.int32), max_new=2)
+    eng.submit(np.asarray([4, 5], np.int32), max_new=3)
+    assert eng.free_slots == 2          # nothing admitted yet
+    eng.admit()
+    assert eng.free_slots == 0
+    eng.run_to_completion()
+    assert eng.free_slots == 2          # completion releases the slots
+    p = np.asarray([7, 8, 9], np.int32)
+    r3 = eng.submit(p, max_new=2)       # reused slot: fresh cache state
+    out = eng.run_to_completion()
+    assert out[r3] == _reference(cfg, params, jnp.asarray(p), 2)
+
+
+def test_admission_is_fifo_and_deterministic(model):
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=2, cache_len=512)
+    rids = [eng.submit(np.asarray([i + 1, i + 2], np.int32), max_new=3)
+            for i in range(4)]
+    assert eng.admit() == rids[:2]      # submission order into free slots
+    assert eng.admit() == []            # no slots free
+    eng.run_to_completion()
+    assert all(len(eng.requests[r].out) == 3 for r in rids)
+
+
+def test_run_to_completion_never_silently_drops(model):
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=1, cache_len=512)
+    p1 = np.asarray([1, 2], np.int32)
+    r1 = eng.submit(p1, max_new=5)
+    r2 = eng.submit(np.asarray([3, 4], np.int32), max_new=5)
+    with pytest.raises(IncompleteRunError) as ei:
+        eng.run_to_completion(max_steps=2)
+    err = ei.value
+    assert err.queued == [r2] and err.active == [r1]
+    assert 0 < len(err.partial[r1]) < 5 and err.partial[r2] == []
+    partial = eng.run_to_completion(max_steps=1, strict=False)
+    assert len(partial[r1]) < 5 or len(partial[r2]) < 5
+    done = eng.run_to_completion()      # survivors finish correctly
+    assert done[r1] == _reference(cfg, params, jnp.asarray(p1), 5)
+    assert len(done[r2]) == 5
+
+
+def test_cancel_returns_partial_and_frees_slot(model):
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=1, cache_len=512)
+    r1 = eng.submit(np.asarray([1, 2, 3], np.int32), max_new=4)
+    r2 = eng.submit(np.asarray([6, 7], np.int32), max_new=4)
+    eng.step()                          # admit r1 (prefill) + one decode
+    assert eng.cancel(r1) and eng.free_slots == 1
+    with pytest.raises(KeyError):
+        eng.cancel(r1)                  # forgotten entirely
+    assert eng.cancel(r2) == []         # still queued: no tokens yet
+    assert eng.run_to_completion() == {}
+
+
+def test_max_new_one_completes_at_prefill(model):
+    """The prefill token satisfies a max_new == 1 request; the slot is
+    released at admission (the data plane hits this re-prefilling a
+    migrated stream with one token left)."""
+    cfg, params = model
+    eng = InferenceEngine(cfg, params, slots=1, cache_len=512)
+    p = np.asarray([5, 6, 7], np.int32)
+    rid = eng.submit(p, max_new=1)
+    assert eng.admit() == [rid]
+    assert eng.free_slots == 1
+    assert eng.pop_result(rid) == _reference(cfg, params,
+                                             jnp.asarray(p), 1)
+    assert eng.step() == []             # no overproduction afterwards

@@ -83,7 +83,9 @@ def main(argv=None) -> int:
     matrix: dict[str, dict[str, dict]] = {}
     for sname in scenarios:
         sc = get_scenario(sname)
-        changes = {}
+        # the matrix compares PLANNING policies; the serving data plane
+        # is covered by its own smoke/bench (tools/serve_smoke.py)
+        changes = {} if sc.serving is None else {"serving": None}
         if args.max_users is not None and sc.num_users > args.max_users:
             changes["num_users"] = args.max_users
         if args.steps is not None and sc.steps > args.steps:
