@@ -7,10 +7,17 @@ Two tracks, both seeded and virtual-time deterministic
   against 4 x 512-slot pools) that saturates the fleet: the acceptance
   bar is >= 1k *concurrent* real decode streams at peak, with p50/p99
   token latency and per-step queue-depth tracks recorded.
-* **chaos** — the ``serve_chaos_k3`` preset verbatim: a scripted
-  mid-decode kill of the heaviest server; the bar is zero lost requests
-  (every in-flight stream fails over or degrades to device-only) with
-  at least one mid-stream failover actually exercised.
+* **chaos** — the ``serve_chaos_k3`` preset verbatim (its
+  ``failover_mode="auto"`` prices KV-cache migration against
+  re-prefill per stream): a scripted mid-decode kill of the heaviest
+  server; the bar is zero lost requests (every in-flight stream fails
+  over or degrades to device-only) with at least one mid-stream
+  failover actually exercised.
+* **failover_modes** — the same chaos world re-run under each forced
+  mechanism (``migrate`` / ``reprefill``) next to the ``auto`` run, so
+  BENCH_serve.json records the migration-vs-re-prefill comparison:
+  per-mode failover counts, relay seconds, recompute seconds, and
+  outcome mix — all three with zero lost requests.
 
 Results go to stdout as CSV rows and to ``--out`` (default
 BENCH_serve.json) as machine-readable JSON so the serving perf
@@ -107,6 +114,37 @@ def run(out: str = "BENCH_serve.json", smoke: bool = False) -> List[str]:
         assert ch["failover_events"] >= 1, \
             "scripted kill produced no mid-stream failover"
 
+    # ---- migrate vs re-prefill: the same chaos world under each ------
+    # forced failover mechanism (the auto run above is the third column)
+    CMP_KEYS = ("submitted", "completed", "device", "degraded",
+                "failover_events", "failovers_migrate",
+                "failovers_reprefill", "relay_s_migrate",
+                "relay_s_reprefill", "relay_s_total", "recompute_s_total",
+                "token_latency_p50_s", "token_latency_p99_s", "wall_s")
+    mode_runs = {"auto": ch}
+    for mode in ("migrate", "reprefill"):
+        sc = chaos_sc.replace(
+            name=f"serve_chaos_{mode}",
+            serving=dataclasses.replace(chaos_sc.serving,
+                                        failover_mode=mode))
+        r = _run_track(sc)
+        mode_runs[mode] = r
+        assert r["lost"] == 0, f"failover_modes[{mode}] lost requests"
+        print(f"[failover:{mode}] "
+              f"{r['failover_events']} failover(s) "
+              f"(migrate={r['failovers_migrate']} "
+              f"reprefill={r['failovers_reprefill']}), "
+              f"relay {r['relay_s_total'] * 1e3:.2f} ms, "
+              f"recompute {r['recompute_s_total']:.1f} s, "
+              f"degraded {r['degraded']} (wall {r['wall_s']:.1f}s)")
+    if not smoke:
+        assert mode_runs["auto"]["failovers_migrate"] >= 1, \
+            "auto never chose migration despite cheap cache bytes"
+        assert mode_runs["reprefill"]["failovers_migrate"] == 0, \
+            "forced reprefill still migrated"
+    results["failover_modes"] = {
+        m: {k: r[k] for k in CMP_KEYS} for m, r in mode_runs.items()}
+
     rows = []
     for track, r in (("closed_loop", cl), ("chaos", ch)):
         for metric in ("submitted", "completed", "device", "degraded",
@@ -119,6 +157,13 @@ def run(out: str = "BENCH_serve.json", smoke: bool = False) -> List[str]:
             v = r[metric]
             if v is not None:
                 rows.append(f"serve,{track},mcsa,{metric},{v:.4f}")
+    for mode, r in results["failover_modes"].items():
+        for metric in ("failover_events", "failovers_migrate",
+                       "failovers_reprefill", "degraded"):
+            rows.append(f"serve,failover_{mode},mcsa,{metric},{r[metric]}")
+        for metric in ("relay_s_total", "recompute_s_total"):
+            rows.append(f"serve,failover_{mode},mcsa,{metric},"
+                        f"{r[metric]:.6f}")
 
     if out:
         with open(out, "w") as f:

@@ -325,7 +325,8 @@ register_scenario(Scenario(
                         prompt_len=6, max_new=6, cache_len=64,
                         deadline_s=60.0, max_retries=2, backoff_s=5.0,
                         queue_limit=32, r_per_slot=8.0, min_slots=4,
-                        max_slots=64, token_time_scale=10_000.0),
+                        max_slots=64, token_time_scale=10_000.0,
+                        failover_mode="auto"),
     steps=8, dt=30.0))
 
 # Chaos: sustained stochastic churn — servers crash/recover on an

@@ -544,6 +544,8 @@ class Session:
                 "events": rep.retries,
                 "relay_s": rep.relay_s,
                 "tokens_preserved": rep.tokens_preserved,
+                "by_mode": rep.by_mode,
+                "relay_s_by_mode": rep.relay_s_by_mode,
             }
         return SessionMetrics(
             t=np.asarray(log["t"], np.float64),

@@ -179,6 +179,17 @@ def t_transmit(dev, edge, w_bits, m_bits, B, hops=None):
     return t_up + t_relay
 
 
+def relay_seconds(bits, hops, B_backhaul):
+    """The backhaul relay term of Eq. (5) / Eq. (41)'s H₂ path on an
+    arbitrary payload: ship ``bits`` over ``hops`` AP→server hops at
+    ``B_backhaul`` bit/s each.  The serving layer prices BOTH mid-stream
+    failover mechanisms with this one formula — token activations for a
+    re-prefill, the actual KV-cache leaves for a migration — so the
+    data plane's bytes-vs-recompute decision uses the planner's own
+    cost model (see :mod:`repro.serving.failover`)."""
+    return float(bits) * float(hops) / float(B_backhaul)
+
+
 def cbr_calc(dev):
     """Eq. (7): strategy-calculation cost-benefit ratio T_Ag / k."""
     return dev["t_ag"] / dev["k_rounds"]

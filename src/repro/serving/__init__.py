@@ -7,11 +7,16 @@ are numpy-light (config-level code imports ServeConfig through them);
 this package ``__init__`` pulls in the jax-backed engine, so scenario
 code imports the submodules directly.
 """
-from .engine import DecodeState, IncompleteRunError, InferenceEngine
-from .failover import FailoverEvent, FailoverReport, ServerLostError
+from .engine import (CacheOverflowError, DecodeState, IncompleteRunError,
+                     InferenceEngine)
+from .failover import (FAILOVER_MODES, MIGRATE, REPREFILL, FailoverEvent,
+                       FailoverReport, ServerLostError, leaf_bits,
+                       migration_price, reprefill_price)
 from .split import SplitServer, device_prefix, edge_suffix, layer_params
 
 __all__ = ["DecodeState", "InferenceEngine", "IncompleteRunError",
-           "SplitServer", "ServerLostError", "FailoverEvent",
-           "FailoverReport", "device_prefix", "edge_suffix",
+           "CacheOverflowError", "SplitServer", "ServerLostError",
+           "FailoverEvent", "FailoverReport", "FAILOVER_MODES",
+           "MIGRATE", "REPREFILL", "leaf_bits", "migration_price",
+           "reprefill_price", "device_prefix", "edge_suffix",
            "layer_params"]

@@ -24,11 +24,19 @@ Robustness semantics (the headline — see docs/ARCHITECTURE.md,
 * **backpressure** — a pool whose queue is at ``queue_limit`` sheds the
   newcomer to device-only execution, deterministically.
 * **mid-stream failover** — when a ``FaultBatch`` kills a server, every
-  in-flight stream re-prefills (prompt + produced tokens) on the
-  evacuation target the planner chose, paying the relay-back price of
-  MLi-GD's Eq. 41 (activation bits x hops / backhaul bandwidth); each
-  such move is a :class:`repro.serving.failover.FailoverEvent` surfaced
-  into ``SessionMetrics``.
+  in-flight stream moves to the evacuation target the planner chose, by
+  one of two mechanisms the plane prices against each other per stream
+  (``ServeConfig.failover_mode``): **re-prefill** ships the raw token
+  stream back (Eq. 41's activation-bits relay price) and recomputes the
+  KV cache there (the context length at the planner's own per-token
+  delay), while **migrate** ships the stream's actual KV-cache leaves
+  (:meth:`repro.serving.engine.InferenceEngine.export_cache` /
+  ``import_cache``) at the same Eq. 41 bytes-over-backhaul price with
+  zero recompute.  ``auto`` picks whichever is cheaper (ties go to
+  re-prefill); each move is a
+  :class:`repro.serving.failover.FailoverEvent` carrying its mode,
+  surfaced into ``SessionMetrics``.  Planned handoff continuations
+  (:meth:`_reconcile`) price and choose the same way.
 
 Requests arrive open-loop (seeded Poisson, a ``Scenario`` knob via
 :class:`ServeConfig`) and end in exactly one of three terminal states:
@@ -52,7 +60,9 @@ import numpy as np
 from repro.core.faults import HOP_UNREACHABLE, clamp_hops
 from repro.core.ledger import slots_from_usage  # noqa: F401  (re-export)
 
-from .failover import FailoverEvent, FailoverReport
+from .failover import (FAILOVER_MODES, MIGRATE, REPREFILL, FailoverEvent,
+                       FailoverReport, leaf_bits, migration_price,
+                       reprefill_price)
 
 # Terminal request statuses.  DEVICE is the *planner's* choice (split ==
 # M at submission / replan); DEGRADED is the data plane forcing a device
@@ -101,6 +111,19 @@ class ServeConfig:
     cache_len    : engine KV cache length (>= prompt_len + max_new)
     relay_bits_per_token : failover relay payload per token; None
                    derives d_model * 16 from the engine config
+
+    Failover mechanism (docs/ARCHITECTURE.md, "Serving data plane"):
+
+    failover_mode : how a live stream moves servers mid-decode —
+                   ``"reprefill"`` (PR 8's mechanism: relay the tokens,
+                   recompute the KV cache on the target),
+                   ``"migrate"`` (ship the actual KV-cache leaves, no
+                   recompute), or ``"auto"`` (price both per stream via
+                   :func:`repro.serving.failover.migration_price` /
+                   ``reprefill_price`` and take the cheaper; ties go to
+                   re-prefill).  Streams without an exportable cache
+                   (still queued, or an engine lacking ``export_cache``)
+                   always re-prefill, whatever the mode says.
     """
     arrival_rate: float = 2.0
     arrival_seed: int = 0
@@ -119,12 +142,18 @@ class ServeConfig:
     engine_layers: int = 2
     cache_len: int = 64
     relay_bits_per_token: Optional[float] = None
+    failover_mode: str = "auto"
 
     def __post_init__(self):
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
         if self.cache_len < self.prompt_len + self.max_new:
             raise ValueError("cache_len must cover prompt_len + max_new")
+        if self.failover_mode not in ("auto",) + FAILOVER_MODES:
+            raise ValueError(
+                f"failover_mode must be one of "
+                f"{('auto',) + FAILOVER_MODES}, got "
+                f"{self.failover_mode!r}")
 
     # -- serialization (mirrors FaultConfig.to_dict/from_dict) ---------
     def to_dict(self) -> dict:
@@ -160,6 +189,10 @@ class ServeRequest:
     t_done: Optional[float] = None
     relay_s: float = 0.0
     failovers: int = 0
+    cache: Optional[tuple] = None   # (leaves, pos) awaiting import —
+    #   set when a relay chose MIGRATE; survives queued moves/retries
+    #   (content is a pure function of prompt + tokens, so it stays
+    #   valid until imported) and is cleared on import or re-prefill
 
     @property
     def remaining(self) -> int:
@@ -291,7 +324,10 @@ class ServingDataPlane:
         self.events: List[FailoverEvent] = []
         self.counters = dict(submitted=0, completed=0, device=0,
                              degraded=0, shed=0, timeouts=0, retries=0,
-                             relays=0, relay_s_total=0.0)
+                             relays=0, relay_s_total=0.0,
+                             relays_migrate=0, relays_reprefill=0,
+                             relay_s_migrate=0.0, relay_s_reprefill=0.0,
+                             recompute_s_total=0.0)
         self._tok_lat: List[float] = []
         self._ttft: List[float] = []
         self.tracks: List[dict] = []
@@ -347,13 +383,20 @@ class ServingDataPlane:
             if not pool.up:
                 continue
             now = max(pool.clock, t)
+            # snapshot live streams' KV caches BEFORE fail() drops the
+            # engine — the evacuation ships them iff migration wins the
+            # price comparison in _route (or is forced)
+            exported = {req.rid: self._export(pool, erid)
+                        for erid, req in pool.active.items()
+                        if int(split[req.user]) < self.num_layers}
             for req, was_running in pool.fail():
                 if int(split[req.user]) >= self.num_layers:
                     self._finish_device(req, now, DEVICE)
                     continue
                 self._route(req, int(server[req.user]), now=now,
                             relay=was_running,
-                            lost=int(z) if was_running else None)
+                            lost=int(z) if was_running else None,
+                            cache=exported.get(req.rid))
 
     # -- handoff continuation -------------------------------------------
     def _reconcile(self, t: float, fleet) -> None:
@@ -381,6 +424,7 @@ class ServingDataPlane:
                 dev = int(split[req.user]) >= self.num_layers
                 if not dev and z_new == pool.z:
                     continue
+                cache = None if dev else self._export(pool, erid)
                 pool.get_engine().cancel(erid)
                 del pool.active[erid]
                 req.engine_rid = None
@@ -388,7 +432,8 @@ class ServingDataPlane:
                 if dev:
                     self._finish_device(req, now, DEVICE)
                 else:
-                    self._route(req, z_new, now=now, relay=True, lost=None)
+                    self._route(req, z_new, now=now, relay=True,
+                                lost=None, cache=cache)
 
     # -- arrivals --------------------------------------------------------
     def _arrivals(self, dt: float, t: float, fleet) -> None:
@@ -435,6 +480,18 @@ class ServingDataPlane:
             pool.note_depth()
 
     # -- routing / terminal helpers -------------------------------------
+    def _export(self, pool: EnginePool, erid: int):
+        """Snapshot one running stream's cache leaves for a possible
+        migration, or None when the mode forbids it / the engine can't
+        (``reprefill`` mode skips the export entirely — forcing PR 8's
+        mechanism also skips its cost)."""
+        if self.cfg.failover_mode == REPREFILL:
+            return None
+        eng = pool.engine
+        if eng is None or getattr(eng, "export_cache", None) is None:
+            return None
+        return eng.export_cache(erid)
+
     def _finish_device(self, req: ServeRequest, now: float,
                        status: str) -> None:
         """Complete a request on the user's own device in virtual time.
@@ -446,35 +503,64 @@ class ServingDataPlane:
         self.counters[status] += 1
 
     def _route(self, req: ServeRequest, z_new: int, *, now: float,
-               relay: bool, lost: Optional[int]) -> None:
+               relay: bool, lost: Optional[int],
+               cache: Optional[tuple] = None) -> None:
         """Re-queue a request on server ``z_new``.  ``relay=True`` prices
-        the KV relay-back (prompt + produced re-prefilled there);
-        ``lost`` names a dead source server, making this a failover
-        event rather than a planned handoff."""
+        the move and picks the mechanism: re-prefill (token relay-back +
+        context recompute at the planner's per-token delay) vs KV-cache
+        migration (the exported ``cache`` leaves' actual bits over the
+        backhaul, no recompute) — forced by ``cfg.failover_mode``, or
+        cheapest-wins under ``auto`` with ties to re-prefill.  ``lost``
+        names a dead source server, making this a failover event rather
+        than a planned handoff.  ``relay=False`` moves (still-queued
+        requests) are free and keep any earlier migration stash — its
+        content is server-independent."""
         pool = self.pools[z_new]
         if not pool.up:
             self._finish_device(req, now, DEGRADED)
             return
-        relay_s = 0.0
+        delay = 0.0
         if relay:
             z_old = lost if lost is not None else req.server
             h = self._relay_hops(z_old, z_new)
             if h >= HOP_UNREACHABLE:
                 self._finish_device(req, now, DEGRADED)
                 return
-            bits = self._bits_per_token * (len(req.prompt)
-                                           + len(req.tokens))
-            relay_s = float(bits * h / self._B_backhaul[z_new])
+            ctx = len(req.prompt) + len(req.tokens)
+            bw = float(self._B_backhaul[z_new])
+            re_price = reprefill_price(ctx, self._bits_per_token, h, bw,
+                                       req.token_s)
+            mode = REPREFILL
+            if cache is not None:
+                cache_b = leaf_bits(cache[0])
+                mig_price = migration_price(cache_b, h, bw)
+                if self.cfg.failover_mode == MIGRATE or (
+                        self.cfg.failover_mode == "auto"
+                        and mig_price < re_price):
+                    mode = MIGRATE
+            if mode == MIGRATE:
+                bits = cache_b
+                relay_s = delay = mig_price
+                req.cache = cache
+            else:
+                bits = self._bits_per_token * ctx
+                relay_s = float(bits * h / bw)
+                recompute_s = ctx * req.token_s
+                delay = relay_s + recompute_s
+                self.counters["recompute_s_total"] += recompute_s
+                req.cache = None
             req.relay_s += relay_s
             self.counters["relays"] += 1
+            self.counters[f"relays_{mode}"] += 1
             self.counters["relay_s_total"] += relay_s
+            self.counters[f"relay_s_{mode}"] += relay_s
             if lost is not None:
                 req.failovers += 1
                 self.events.append(FailoverEvent(
                     lost=f"server{z_old}", tokens_done=len(req.tokens),
-                    relay_s=relay_s, relay_bits=bits))
+                    relay_s=relay_s, relay_bits=bits, mode=mode))
         req.server = z_new
-        req.t_ready = now + relay_s
+        req.t_ready = now + delay
         req.t_last = max(req.t_last, req.t_ready)
         # Migrants bypass the queue_limit: they are already-admitted work
         # being preserved, not new load — shedding them would drop them.
@@ -543,6 +629,19 @@ class ServingDataPlane:
             tokens = np.concatenate(
                 [np.asarray(req.prompt, np.int32),
                  np.asarray(req.tokens, np.int32)])
+            if req.cache is not None:
+                # migrated stream: insert the shipped KV prefix and
+                # resume decode — no prefill, no token at admission
+                # (the next token comes from the next decode step,
+                # exactly as on the source engine)
+                leaves, pos = req.cache
+                erid = eng.import_cache(tokens, req.remaining, leaves,
+                                        pos)
+                req.cache = None
+                req.engine_rid = erid
+                req.status = "running"
+                pool.active[erid] = req
+                continue
             erid = eng.submit(tokens, req.remaining)
             eng.admit()
             # prefill emits the first token synchronously at admission
@@ -648,7 +747,16 @@ class ServingDataPlane:
             "retries": int(c["retries"]),
             "relays": int(c["relays"]),
             "relay_s_total": float(c["relay_s_total"]),
+            "relays_migrate": int(c["relays_migrate"]),
+            "relays_reprefill": int(c["relays_reprefill"]),
+            "relay_s_migrate": float(c["relay_s_migrate"]),
+            "relay_s_reprefill": float(c["relay_s_reprefill"]),
+            "recompute_s_total": float(c["recompute_s_total"]),
             "failover_events": len(self.events),
+            "failovers_migrate": sum(
+                1 for e in self.events if e.mode == MIGRATE),
+            "failovers_reprefill": sum(
+                1 for e in self.events if e.mode == REPREFILL),
             "tokens_emitted": tokens,
             "peak_concurrent_streams": int(self.peak_concurrent),
             "queue_depth_peak": int(self._queue_depth_peak),

@@ -52,6 +52,18 @@ class DecodeState:
     active: np.ndarray              # (B,) bool
 
 
+class CacheOverflowError(RuntimeError):
+    """A migrated cache prefix does not fit the target slot's cache.
+
+    Raised by :meth:`InferenceEngine.import_cache` when the imported
+    prefix would leave no room for the remaining decode writes
+    (``pos + max_new > cache_len`` — "exactly fills" counts: position
+    ``pos`` itself must still be writable), and by the per-slot cache
+    write when an incoming leaf exceeds the pool leaf along any axis.
+    Silently cropping either case would corrupt the stream's KV state,
+    so both fail loudly instead (see tests/test_engine.py)."""
+
+
 class IncompleteRunError(RuntimeError):
     """``run_to_completion`` ran out of steps with work still in flight.
 
@@ -88,6 +100,11 @@ class InferenceEngine:
         self.requests: Dict[int, Request] = {}
         self.slot_of: Dict[int, int] = {}
         caches, _ = tfm.init_caches(cfg, env, slots, cache_len)
+        # single-slot template with the SAME cache_len: leaf shapes match
+        # the pool everywhere except the slot axis, which is how
+        # export/import find the slot and cache-length axes per leaf
+        # (recurrent-state leaves have no cache-length axis and ship whole)
+        self._tmpl, _ = tfm.init_caches(cfg, env, 1, cache_len)
         self.state = DecodeState(
             caches=caches,
             last_token=jnp.zeros((slots, 1), jnp.int32),
@@ -198,6 +215,92 @@ class InferenceEngine:
         self.slot_of.pop(rid, None)
         return list(req.out)
 
+    # -- KV-cache migration --------------------------------------------
+    def export_cache(self, rid: int):
+        """Extract an active stream's cache leaves for migration.
+
+        Returns ``(leaves, pos)``: the request's per-slot cache pytree,
+        each leaf sliced to its slot and cropped to the ``pos`` filled
+        positions along the cache-length axis (leaves without one — e.g.
+        recurrent state, local-attention windows — ship whole).  The
+        engine state is untouched; pair with :meth:`cancel` to actually
+        evict the stream.  A peer engine resumes it bit-for-bit via
+        :meth:`import_cache` — the data plane uses this to *migrate* a
+        KV cache instead of re-prefilling (docs/ARCHITECTURE.md,
+        "Serving data plane")."""
+        slot = self.slot_of.get(rid)
+        if slot is None:
+            raise KeyError(f"rid {rid} has no active slot")
+        pos = int(self.state.pos[slot])
+
+        def take(pool, tmpl):
+            s_ax, c_ax = _cache_axes(pool.shape, tmpl.shape, self.slots,
+                                     self.cache_len)
+            idx = [slice(None)] * pool.ndim
+            idx[s_ax] = slice(slot, slot + 1)
+            if c_ax is not None:
+                idx[c_ax] = slice(0, pos)
+            return pool[tuple(idx)]
+
+        leaves = jax.tree.map(take, self.state.caches, self._tmpl)
+        return leaves, pos
+
+    def import_cache(self, tokens: np.ndarray, max_new: int, leaves,
+                     pos: int) -> int:
+        """Resume a migrated stream from its shipped cache prefix.
+
+        ``tokens`` is the full context so far (prompt + produced — its
+        last entry becomes the decode input), ``max_new`` the tokens
+        still to generate, ``(leaves, pos)`` what the source engine's
+        :meth:`export_cache` returned.  Each leaf is zero-padded from
+        ``pos`` back to this pool's ``cache_len`` and written into a
+        free slot; decode then continues exactly where the source
+        stopped (no prefill recompute — that is the point).
+
+        Raises :class:`CacheOverflowError` when the prefix plus the
+        remaining decode writes do not fit (``pos + max_new >
+        cache_len``; a prefix that *exactly fills* the cache already
+        overflows, because position ``pos`` must still be written), and
+        ``RuntimeError`` when no slot is free — callers gate on
+        :attr:`free_slots` like they do for :meth:`admit`."""
+        pos = int(pos)
+        tokens = np.asarray(tokens)
+        if max_new < 1:
+            raise ValueError("import_cache needs max_new >= 1 (a "
+                             "finished stream has nothing to migrate)")
+        if pos < 1 or len(tokens) < 1:
+            raise ValueError("import_cache needs a non-empty prefix")
+        if pos + max_new > self.cache_len:
+            raise CacheOverflowError(
+                f"migrated prefix (pos={pos}) + {max_new} decode "
+                f"position(s) exceed cache_len={self.cache_len}")
+        free = [i for i in range(self.slots) if not self.state.active[i]]
+        if not free:
+            raise RuntimeError("import_cache: no free slot")
+        slot = free[0]
+
+        def put(pool, tmpl, one):
+            s_ax, c_ax = _cache_axes(pool.shape, tmpl.shape, self.slots,
+                                     self.cache_len)
+            if c_ax is not None and one.shape[c_ax] < pool.shape[c_ax]:
+                pads = [(0, 0)] * pool.ndim
+                pads[c_ax] = (0, pool.shape[c_ax] - one.shape[c_ax])
+                one = jnp.pad(one, pads)
+            return _slot_write(pool, one, slot, self.slots)
+
+        self.state.caches = jax.tree.map(put, self.state.caches,
+                                         self._tmpl, leaves)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, tokens=tokens, max_new=max_new)
+        self.state.last_token = self.state.last_token.at[slot, 0].set(
+            int(tokens[-1]))
+        self.state.pos[slot] = pos
+        self.state.active[slot] = True
+        self.requests[rid] = req
+        self.slot_of[rid] = slot
+        return rid
+
     # ------------------------------------------------------------------
     def step(self) -> List[Tuple[int, int]]:
         """Admit + one decode for all active slots.
@@ -250,13 +353,39 @@ class InferenceEngine:
         return {rid: req.out for rid, req in self.requests.items()}
 
 
+def _cache_axes(pool_shape, tmpl_shape, slots: int, cache_len: int):
+    """(slot_axis, cache_axis) of one pool cache leaf.
+
+    ``tmpl_shape`` is the same leaf from a single-slot ``init_caches``
+    with the same ``cache_len``: the slot axis is the first axis where
+    the template is 1 and the pool is ``slots``-wide (tail leaves: 0;
+    scan-stacked leaves: 1).  The cache-length axis is the first axis
+    AFTER it sized ``cache_len`` — searching after the slot axis keeps
+    a ``head_dim == cache_len`` coincidence from shadowing it; None for
+    leaves without one (recurrent state, local-attention windows)."""
+    s_ax = 0
+    for i, (p, o) in enumerate(zip(pool_shape, tmpl_shape)):
+        if o == 1 and p == slots:
+            s_ax = i
+            break
+    c_ax = None
+    for j in range(s_ax + 1, len(pool_shape)):
+        if pool_shape[j] == cache_len:
+            c_ax = j
+            break
+    return s_ax, c_ax
+
+
 def _slot_write(pool, one, slot: int, slots: int):
     """Write a single-request cache leaf into slot ``slot`` of the pool.
 
     Handles both tail leaves (batch axis 0: pool (slots, L, ...), request
     (1, L, ...)) and scan-stacked leaves (batch axis 1: pool
-    (n_sb, slots, L, ...), request (n_sb, 1, L, ...)); other dims are
-    padded/cropped (e.g. shorter prefill caches)."""
+    (n_sb, slots, L, ...), request (n_sb, 1, L, ...)); shorter dims are
+    zero-padded (e.g. shorter prefill caches).  A source dim LONGER than
+    the pool's raises :class:`CacheOverflowError` — silently cropping
+    would throw away live KV state (the migrated-prefix boundary bug
+    pinned in tests/test_engine.py)."""
     ax = 0
     for i, (p, o) in enumerate(zip(pool.shape, one.shape)):
         if o == 1 and p == slots:
@@ -264,11 +393,14 @@ def _slot_write(pool, one, slot: int, slots: int):
             break
     target = list(pool.shape)
     target[ax] = 1
-    pads, slices = [], []
-    for a, b in zip(one.shape, target):
-        pads.append((0, max(0, b - a)))
-        slices.append(slice(0, b))
-    fitted = jnp.pad(one, pads)[tuple(slices)].astype(pool.dtype)
+    over = [(i, a, b) for i, (a, b) in enumerate(zip(one.shape, target))
+            if a > b]
+    if over:
+        raise CacheOverflowError(
+            f"cache leaf {tuple(one.shape)} exceeds pool slot "
+            f"{tuple(target)} on axes {[i for i, _, _ in over]}")
+    pads = [(0, b - a) for a, b in zip(one.shape, target)]
+    fitted = jnp.pad(one, pads).astype(pool.dtype)
     idx = [slice(None)] * pool.ndim
     idx[ax] = slice(slot, slot + 1)
     return pool.at[tuple(idx)].set(fitted)

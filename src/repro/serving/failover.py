@@ -19,7 +19,15 @@ See docs/ARCHITECTURE.md ("Serving data plane" and "Failure handling").
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List
+
+#: the two mid-stream failover mechanisms the data plane can choose
+#: between (docs/ARCHITECTURE.md, "Serving data plane"):
+#: ``reprefill`` ships the raw token stream back and recomputes the KV
+#: cache on the target; ``migrate`` ships the actual cache leaves.
+REPREFILL = "reprefill"
+MIGRATE = "migrate"
+FAILOVER_MODES = (REPREFILL, MIGRATE)
 
 
 class ServerLostError(RuntimeError):
@@ -46,12 +54,20 @@ class FailoverEvent:
                   the full activation stream re-shipped over ``hops_back``
                   backhaul hops at ``bandwidth_hz`` (the H₂ relay path
                   of MLi-GD's Eq. 41 pricing)
-    relay_bits  : size of that re-shipped w_s payload (bits)
+    relay_bits  : size of that re-shipped payload (bits) — token
+                  activations under ``reprefill``, the actual cache
+                  leaves under ``migrate``
+    mode        : which mechanism moved the stream — ``"reprefill"``
+                  (re-prefill prompt + produced on the target, paying
+                  recompute) or ``"migrate"`` (ship the KV cache leaves,
+                  paying bytes); see :func:`migration_price` /
+                  :func:`reprefill_price` for how the data plane picks
     """
     lost: str
     tokens_done: int
     relay_s: float
     relay_bits: float
+    mode: str = REPREFILL
 
 
 @dataclasses.dataclass
@@ -72,3 +88,62 @@ class FailoverReport:
     @property
     def tokens_preserved(self) -> int:
         return sum(e.tokens_done for e in self.events)
+
+    @property
+    def by_mode(self) -> Dict[str, int]:
+        """Event counts per failover mechanism (missing ``mode`` attrs
+        from pre-migration producers count as ``reprefill``)."""
+        out = {m: 0 for m in FAILOVER_MODES}
+        for e in self.events:
+            out[getattr(e, "mode", REPREFILL)] += 1
+        return out
+
+    @property
+    def relay_s_by_mode(self) -> Dict[str, float]:
+        out = {m: 0.0 for m in FAILOVER_MODES}
+        for e in self.events:
+            out[getattr(e, "mode", REPREFILL)] += e.relay_s
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Cache-bytes accounting + the migrate-vs-reprefill price comparison
+# ---------------------------------------------------------------------------
+def leaf_bits(leaves) -> float:
+    """Total payload bits of a cache-leaf pytree.
+
+    Walks any nesting of dicts/lists/tuples whose leaves are arrays
+    (numpy or jax — anything with ``.size`` and ``.dtype.itemsize``),
+    so this module stays jax-free.  The data plane prices a migration
+    on the ACTUAL leaves :meth:`repro.serving.engine.InferenceEngine.
+    export_cache` returned — cropped to the stream's filled prefix —
+    not on a nominal per-token estimate."""
+    if isinstance(leaves, dict):
+        return sum(leaf_bits(v) for v in leaves.values())
+    if isinstance(leaves, (list, tuple)):
+        return sum(leaf_bits(v) for v in leaves)
+    return float(leaves.size) * float(leaves.dtype.itemsize) * 8.0
+
+
+def migration_price(cache_bits: float, hops: float,
+                    bandwidth_hz: float) -> float:
+    """Seconds to ship a stream's KV-cache leaves to the target server:
+    Eq. 41's H₂ relay pricing applied to the cache payload — pure
+    transmission, no recompute (the cache arrives ready to decode)."""
+    from repro.core.costs import relay_seconds
+    return relay_seconds(cache_bits, hops, bandwidth_hz)
+
+
+def reprefill_price(ctx_tokens: int, bits_per_token: float, hops: float,
+                    bandwidth_hz: float, token_s: float) -> float:
+    """Seconds to re-prefill a stream on the target server: the token
+    activations relayed back over the backhaul (Eq. 41's H₂ path, as
+    PR 8 priced it) PLUS the prefill recompute of the whole context at
+    the planner's own per-token delay for this user (``token_s`` — the
+    cost model's ``T`` scaled to virtual token time).  This is the
+    communication–computation trade-off of Shao & Zhang (arXiv
+    2006.02166) at the relay vertex: ``auto`` mode migrates exactly
+    when :func:`migration_price` undercuts this."""
+    from repro.core.costs import relay_seconds
+    return (relay_seconds(ctx_tokens * bits_per_token, hops, bandwidth_hz)
+            + ctx_tokens * float(token_s))

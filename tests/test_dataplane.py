@@ -17,86 +17,12 @@ import pytest
 from repro.api import Session, get_scenario
 from repro.core.faults import HOP_UNREACHABLE
 from repro.core.ledger import BudgetLedger, slots_from_usage
-from repro.serving.dataplane import DEGRADED, DEVICE, DONE, ServeConfig, \
-    ServeRequest, ServingDataPlane
+from repro.serving.dataplane import DEGRADED, DEVICE, DONE, TERMINAL, \
+    ServeConfig, ServeRequest, ServingDataPlane
 from repro.serving.failover import FailoverEvent, FailoverReport
+from repro.testing.fake_engine import FakeEngine
 
 NUM_LAYERS = 4          # split >= 4 means device-only
-
-
-# ---------------------------------------------------------------------
-# deterministic fake engine (dataplane's engine protocol)
-# ---------------------------------------------------------------------
-class _FakeReq:
-    def __init__(self, rid, tokens, max_new):
-        self.rid = rid
-        self.tokens = np.asarray(tokens)
-        self.max_new = max_new
-        self.out = []
-
-    @property
-    def done(self):
-        return len(self.out) >= self.max_new
-
-    @property
-    def last(self):
-        return int(self.out[-1]) if self.out else int(self.tokens[-1])
-
-
-class FakeEngine:
-    """Next token = last(prompt ++ out) + 1: pure, instant, and
-    migration-consistent (re-prefilling prompt + produced continues the
-    same sequence)."""
-
-    def __init__(self, slots):
-        self.slots = int(slots)
-        self.requests = {}
-        self._active = {}
-        self._queue = []
-        self._next_rid = 0
-
-    @property
-    def free_slots(self):
-        return self.slots - len(self._active)
-
-    def submit(self, tokens, max_new):
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(_FakeReq(rid, tokens, max_new))
-        return rid
-
-    def admit(self):
-        admitted = []
-        while self._queue and self.free_slots > 0:
-            req = self._queue.pop(0)
-            req.out.append(req.last + 1)       # prefill emits token #1
-            self.requests[req.rid] = req
-            if not req.done:
-                self._active[req.rid] = req
-            admitted.append(req.rid)
-        return admitted
-
-    def step(self):
-        self.admit()
-        emitted = []
-        for rid, req in list(self._active.items()):
-            req.out.append(req.last + 1)
-            emitted.append((rid, req.out[-1]))
-            if req.done:
-                del self._active[rid]
-        return emitted
-
-    def cancel(self, rid):
-        for i, req in enumerate(self._queue):
-            if req.rid == rid:
-                self._queue.pop(i)
-                return list(req.out)
-        self._active.pop(rid, None)
-        return list(self.requests.pop(rid).out)
-
-    def pop_result(self, rid):
-        self._active.pop(rid, None)
-        return list(self.requests.pop(rid).out)
 
 
 # ---------------------------------------------------------------------
@@ -377,3 +303,56 @@ def test_serving_free_session_unchanged():
     m = sess.metrics()
     assert m.serving is None
     assert m.faults is None or "serving_failovers" not in m.faults
+
+
+# ---------------------------------------------------------------------
+# seeded fuzz: the zero-lost invariant enforced by search
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("case", range(20))
+def test_fuzz_zero_lost_invariant(case):
+    """Random (arrival-rate, deadline, fault-schedule, failover-mode)
+    scenarios: whatever chaos hits the pools, every submitted request
+    must reach a terminal state after drain(), and shedding must route
+    to device-degraded (never drop) — the hand-written chaos cases
+    above pin two points of this space, the fuzz sweeps it."""
+    rng = np.random.default_rng(1000 + case)
+    Z = int(rng.integers(2, 4))
+    mode = ("auto", "reprefill", "migrate")[case % 3]
+    cfg = _cfg(
+        arrival_rate=float(rng.uniform(0.5, 20.0)),
+        max_requests=int(rng.integers(4, 40)),
+        deadline_s=float(rng.uniform(2.0, 120.0)),
+        max_retries=int(rng.integers(0, 3)),
+        backoff_s=float(rng.uniform(0.5, 3.0)),
+        queue_limit=int(rng.integers(1, 8)),
+        max_new=int(rng.integers(2, 8)),
+        token_time_scale=float(rng.uniform(1.0, 20.0)),
+        failover_mode=mode,
+        arrival_seed=int(rng.integers(0, 2**31)))
+    dp = _plane(cfg, Z=Z, slots=int(rng.integers(1, 4)))
+    X = int(rng.integers(1, 6))
+    up = np.ones(Z, bool)
+    for i in range(int(rng.integers(2, 6))):
+        servers = rng.integers(0, Z, X)
+        splits = rng.integers(0, NUM_LAYERS + 1, X)
+        fleet = _fleet(servers, splits, T=rng.uniform(0.2, 2.0, X))
+        down = np.flatnonzero((rng.random(Z) < 0.3) & up)
+        rise = np.flatnonzero((rng.random(Z) < 0.5) & ~up)
+        up[down] = False
+        up[rise] = True
+        faults = SimpleNamespace(server_down=down.astype(np.int64),
+                                 server_up=rise.astype(np.int64))
+        dp.step(10.0, 10.0 * i, fleet=fleet, faults=faults)
+    dp.drain()      # raises if any request is non-terminal
+    s = dp.summary()
+    assert s["lost"] == 0
+    assert s["submitted"] == (s["completed"] + s["device"]
+                              + s["degraded"])
+    assert s["shed"] <= s["degraded"]       # shed always lands degraded
+    assert all(r.status in TERMINAL for r in dp.requests.values())
+    assert len(dp.requests) == s["submitted"]
+    # failover accounting is mode-consistent with the forced override
+    if mode == "reprefill":
+        assert s["relays_migrate"] == 0
+    if s["relays"] == 0:
+        assert s["relay_s_total"] == 0.0

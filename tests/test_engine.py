@@ -8,8 +8,8 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import transformer as tfm
 from repro.runtime.meshenv import CPU_ENV as env
-from repro.serving.engine import IncompleteRunError, InferenceEngine, \
-    _bucket
+from repro.serving.engine import CacheOverflowError, IncompleteRunError, \
+    InferenceEngine, _bucket
 
 
 @pytest.fixture(scope="module")
@@ -138,6 +138,75 @@ def test_cancel_returns_partial_and_frees_slot(model):
         eng.cancel(r1)                  # forgotten entirely
     assert eng.cancel(r2) == []         # still queued: no tokens yet
     assert eng.run_to_completion() == {}
+
+
+def test_export_import_continues_the_stream(model):
+    """KV migration round-trip: export a running stream mid-decode,
+    import it into a DIFFERENT engine (even one with a smaller cache),
+    and the continued greedy decode matches the uninterrupted
+    reference bit for bit."""
+    cfg, params = model
+    src = InferenceEngine(cfg, params, slots=2, cache_len=512)
+    p = np.asarray([5, 9, 2, 7], np.int32)
+    ref = _reference(cfg, params, jnp.asarray(p), 8)
+    rid = src.submit(p, max_new=8)
+    src.admit()                         # prefill emits token #1
+    src.step()
+    src.step()                          # tokens #2, #3
+    produced = list(src.requests[rid].out)
+    assert len(produced) == 3
+    leaves, pos = src.export_cache(rid)
+    # last produced token is not yet written to the cache
+    assert pos == len(p) + len(produced) - 1
+    # import pads the cropped leaves back out to the target's cache_len
+    # (16 here: 4 prompt + 3 produced + 10 remaining exactly fills when
+    # the final decode writes position 15 — the boundary case)
+    dst = InferenceEngine(cfg, params, slots=2, cache_len=16)
+    ctx = np.concatenate([p, np.asarray(produced, np.int32)])
+    rid2 = dst.import_cache(ctx, 8 - len(produced), leaves, pos)
+    out = dst.run_to_completion()
+    assert produced + out[rid2] == ref
+
+
+def test_import_cache_overflow_raises_typed_error(model):
+    cfg, params = model
+    src = InferenceEngine(cfg, params, slots=1, cache_len=512)
+    p = np.asarray([5, 9, 2, 7], np.int32)
+    rid = src.submit(p, max_new=8)
+    src.admit()
+    src.step()
+    leaves, pos = src.export_cache(rid)     # pos = 4 + 2 - 1 = 5
+    ctx = np.concatenate(
+        [p, np.asarray(src.requests[rid].out, np.int32)])
+    dst = InferenceEngine(cfg, params, slots=1, cache_len=8)
+    # pos + max_new > cache_len: 5 + 4 = 9 > 8 must refuse up front —
+    # the old pad/crop path would have silently truncated the cache
+    with pytest.raises(CacheOverflowError, match="cache_len=8"):
+        dst.import_cache(ctx, 4, leaves, pos)
+    # the exact fit (5 + 3 = 8) is legal and decodes to completion
+    rid2 = dst.import_cache(ctx, 3, leaves, pos)
+    assert len(dst.run_to_completion()[rid2]) == 3
+    with pytest.raises(ValueError):
+        dst.import_cache(ctx, 0, leaves, pos)
+
+
+def test_slot_write_backstop_rejects_oversized_leaf(model):
+    """Even if a caller lies about ``pos``, the per-slot cache write
+    itself refuses a leaf larger than the pool slot instead of
+    silently cropping state."""
+    cfg, params = model
+    src = InferenceEngine(cfg, params, slots=1, cache_len=512)
+    rid = src.submit(np.asarray([5, 9, 2, 7], np.int32), max_new=30)
+    src.admit()
+    for _ in range(16):
+        src.step()
+    leaves, pos = src.export_cache(rid)
+    assert pos == 20                        # leaf cache axis is 20 wide
+    ctx = np.concatenate([np.asarray([5, 9, 2, 7], np.int32),
+                          np.asarray(src.requests[rid].out, np.int32)])
+    dst = InferenceEngine(cfg, params, slots=1, cache_len=16)
+    with pytest.raises(CacheOverflowError, match="exceeds pool slot"):
+        dst.import_cache(ctx, 1, leaves, pos=10)   # lie past the check
 
 
 def test_max_new_one_completes_at_prefill(model):

@@ -1,0 +1,184 @@
+"""Differential failover-mode matrix: {migrate, reprefill, auto} ×
+{FakeEngine, real InferenceEngine} × seeds.
+
+The contract under test (docs/ARCHITECTURE.md, "Serving data plane"):
+whatever mechanism moves a stream off a dead server — re-prefill
+(recompute the KV cache from prompt + produced) or KV-cache migration
+(ship the exported leaves) — the greedy token stream must be identical
+to an uninterrupted run.  And under ``failover_mode="auto"`` the data
+plane must pick migrate *exactly* when the priced cache bytes undercut
+the re-prefill price (relay + recompute), ties to re-prefill.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serving.dataplane import DONE, ServeConfig, ServingDataPlane
+from repro.serving.failover import (MIGRATE, REPREFILL, leaf_bits,
+                                    migration_price, reprefill_price)
+from repro.testing.fake_engine import FakeEngine
+
+NUM_LAYERS = 4
+MODES = ("migrate", "reprefill", "auto")
+SEEDS = (2, 7, 13)
+BACKHAUL = 1e6
+
+
+def _topo(Z=2):
+    return SimpleNamespace(
+        num_servers=Z,
+        edges=[SimpleNamespace(B_backhaul=BACKHAUL) for _ in range(Z)],
+        server_aps=np.arange(Z, dtype=np.int64),
+        hops=np.ones((Z, Z), np.float64))
+
+
+def _fleet(servers, splits):
+    return SimpleNamespace(server=np.asarray(servers, np.int64),
+                           split=np.asarray(splits, np.int64),
+                           T=np.ones(len(servers)))
+
+
+_DOWN0 = SimpleNamespace(server_down=np.asarray([0], np.int64),
+                         server_up=np.asarray([], np.int64))
+
+
+def _cfg(mode, seed, **kw):
+    base = dict(arrival_rate=5.0, arrival_seed=seed, max_requests=2,
+                prompt_len=4, max_new=6, cache_len=32, deadline_s=500.0,
+                max_retries=2, backoff_s=1.0, queue_limit=64,
+                min_slots=2, max_slots=4, token_time_scale=6.0,
+                failover_mode=mode)
+    base.update(kw)
+    return ServeConfig(**base)      # token_s = 1.0 s/token (T = 1)
+
+
+def _run(cfg, *, kill, engine_factory=None):
+    """One closed-loop episode: streams start on z0, optionally z0 dies
+    mid-decode with the planner pointing everyone at z1."""
+    dp = ServingDataPlane(cfg, _topo(2), num_layers=NUM_LAYERS,
+                          slots=np.asarray([2, 2]),
+                          engine_factory=engine_factory)
+    dp.step(3.0, 0.0, fleet=_fleet([0, 0], [1, 1]))
+    if kill:
+        assert dp.in_flight() > 0
+        dp.step(3.0, 3.0, fleet=_fleet([1, 1], [1, 1]), faults=_DOWN0)
+    dp.drain()
+    return dp
+
+
+def _streams(dp):
+    return {r.rid: tuple(r.tokens) for r in dp.requests.values()}
+
+
+# ---------------------------------------------------------------------
+# the matrix: token identity on the fake engine
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_fake_engine_failover_token_identical(mode, seed):
+    intact = _run(_cfg(mode, seed), kill=False, engine_factory=FakeEngine)
+    failed = _run(_cfg(mode, seed), kill=True, engine_factory=FakeEngine)
+    assert all(r.status == DONE for r in intact.requests.values())
+    assert all(r.status == DONE for r in failed.requests.values())
+    assert sum(r.failovers for r in failed.requests.values()) > 0
+    assert _streams(failed) == _streams(intact)
+    # forced modes stamp every running-stream failover with that mode;
+    # the fake's tiny cache (64 B/token) makes auto migrate too
+    want = REPREFILL if mode == "reprefill" else MIGRATE
+    assert failed.events and all(e.mode == want for e in failed.events)
+    s = failed.summary()
+    assert s["lost"] == 0
+    assert s[f"relays_{want}"] == len(failed.events)
+    assert s[f"relay_s_{want}"] > 0.0
+
+
+# ---------------------------------------------------------------------
+# the matrix: token identity on the real engine
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_real_engine_failover_token_identical(mode, seed):
+    cfg = _cfg(mode, seed, max_requests=1, min_slots=2, max_slots=2)
+    intact = _run(cfg, kill=False)
+    failed = _run(cfg, kill=True)
+    (ri,) = intact.requests.values()
+    (rf,) = failed.requests.values()
+    assert ri.status == DONE and ri.failovers == 0
+    assert rf.status == DONE and rf.failovers == 1
+    # greedy decode is deterministic: migrated cache or re-prefilled
+    # context must continue the exact same token stream
+    assert rf.tokens == ri.tokens
+    want = REPREFILL if mode == "reprefill" else MIGRATE
+    (ev,) = failed.events
+    assert ev.mode == want and ev.relay_bits > 0
+
+
+# ---------------------------------------------------------------------
+# auto picks migrate exactly when the cache bytes are cheaper
+# ---------------------------------------------------------------------
+class _FatCache(FakeEngine):
+    cache_bytes_per_token = 10 ** 6
+
+
+@pytest.mark.parametrize("engine_cls,want_all",
+                         [(FakeEngine, MIGRATE), (_FatCache, REPREFILL)])
+def test_auto_mode_is_exactly_the_price_comparison(engine_cls, want_all):
+    """For every auto-mode failover event, recompute both prices from
+    the event's own stream state and assert the chosen mode is the
+    cheaper side (ties to re-prefill) — the engines sit on opposite
+    sides of the boundary: 64 B/token migrates, 1 MB/token re-prefills,
+    and either way the stream stays token-identical."""
+    cfg = _cfg("auto", 2)
+    dp = _run(cfg, kill=True, engine_factory=engine_cls)
+    assert dp.events
+    h, bw = 1.0, BACKHAUL
+    bits_per_token = 16.0 * 64          # dataplane default (no d_model)
+    for ev in dp.events:
+        ctx = cfg.prompt_len + ev.tokens_done
+        pos = ctx - 1                   # last token not yet in cache
+        cache_bits = pos * engine_cls.cache_bytes_per_token * 8.0
+        mig = migration_price(cache_bits, h, bw)
+        rep = reprefill_price(ctx, bits_per_token, h, bw, token_s=1.0)
+        want = MIGRATE if mig < rep else REPREFILL
+        assert ev.mode == want == want_all
+        if want == MIGRATE:
+            assert ev.relay_bits == pytest.approx(cache_bits)
+            assert ev.relay_s == pytest.approx(mig)
+        else:
+            assert ev.relay_bits == pytest.approx(ctx * bits_per_token)
+            assert ev.relay_s == pytest.approx(
+                ctx * bits_per_token * h / bw)
+    assert _streams(dp) == _streams(
+        _run(cfg, kill=False, engine_factory=engine_cls))
+
+
+def test_price_helpers_and_tie_break():
+    # Eq. 41 relay pricing: bits × hops / bandwidth (+ recompute for
+    # re-prefill); a tie must NOT migrate (auto uses strict <)
+    assert migration_price(1e6, 2.0, 1e6) == pytest.approx(2.0)
+    assert reprefill_price(10, 1024.0, 2.0, 1e6,
+                           token_s=0.5) == pytest.approx(
+        10 * 1024 * 2 / 1e6 + 5.0)
+    assert not (migration_price(1e6, 1.0, 1e6)
+                < reprefill_price(1e6 // 1024, 1024.0, 1.0, 1e6,
+                                  token_s=0.0))
+    # leaf_bits walks nested pytrees of numpy arrays
+    leaves = {"a": [np.zeros((2, 3), np.float32)],
+              "b": (np.zeros(4, np.int8),)}
+    assert leaf_bits(leaves) == 2 * 3 * 32 + 4 * 8
+
+
+def test_streams_without_cache_always_reprefill():
+    # an engine that cannot export has nothing to migrate: even under
+    # forced "migrate" its evacuations fall back to re-prefill, and the
+    # streams still come back token-identical
+    class _NoExport(FakeEngine):
+        export_cache = None
+
+    cfg = _cfg("migrate", 2)
+    dp = _run(cfg, kill=True, engine_factory=_NoExport)
+    assert dp.events and all(e.mode == REPREFILL for e in dp.events)
+    assert dp.summary()["lost"] == 0
+    assert _streams(dp) == _streams(
+        _run(cfg, kill=False, engine_factory=_NoExport))

@@ -9,6 +9,9 @@ data plane"):
 * the kill actually interrupted live decode streams: at least one
   mid-stream failover event was recorded and surfaced into
   ``metrics().faults["serving_failovers"]``;
+* under ``failover_mode="auto"`` at least one failover chose KV-cache
+  **migration** (the preset's virtual token time makes recompute far
+  pricier than shipping the cache, so auto must pick migrate);
 * shed requests were degraded to device-only, never dropped
   (``shed <= degraded``);
 * real tokens were emitted by the pools that stayed up.
@@ -64,11 +67,20 @@ def main(argv=None) -> int:
         fo = (m.faults or {}).get("serving_failovers")
         assert fo is not None and fo["events"] >= args.min_failovers, \
             f"failovers not surfaced into metrics().faults: {m.faults}"
+        if sc.serving.failover_mode == "auto":
+            assert s["failovers_migrate"] >= 1, \
+                (f"auto mode never chose KV-cache migration: "
+                 f"migrate={s['failovers_migrate']} "
+                 f"reprefill={s['failovers_reprefill']}")
+            assert fo["by_mode"]["migrate"] == s["failovers_migrate"], \
+                f"by_mode split disagrees with summary: {fo['by_mode']}"
 
     print(f"\nSERVE_SMOKE_OK submitted={s['submitted']} "
           f"done={s['completed']} device={s['device']} "
           f"degraded={s['degraded']} lost=0 "
           f"failovers={s['failover_events']} "
+          f"(migrate={s['failovers_migrate']} "
+          f"reprefill={s['failovers_reprefill']}) "
           f"relay_ms={s['relay_s_total'] * 1e3:.2f} "
           f"peak_streams={s['peak_concurrent_streams']}")
     return 0
