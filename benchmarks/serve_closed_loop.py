@@ -18,6 +18,11 @@ Two tracks, both seeded and virtual-time deterministic
   BENCH_serve.json records the migration-vs-re-prefill comparison:
   per-mode failover counts, relay seconds, recompute seconds, and
   outcome mix — all three with zero lost requests.
+* **adaptive** — the ``serve_hotspot_k3`` overload preset on the same
+  seed with telemetry feedback off (open loop) vs on (closed loop,
+  the preset's own setting): the bar is the closed loop strictly
+  degrading fewer requests with a lower p99 virtual token latency
+  (docs/ARCHITECTURE.md, "Telemetry & feedback").
 
 Results go to stdout as CSV rows and to ``--out`` (default
 BENCH_serve.json) as machine-readable JSON so the serving perf
@@ -66,6 +71,8 @@ def _run_track(sc) -> dict:
     out["serve_wall_s"] = sess.timings["serve_s"]
     if m.faults and "serving_failovers" in m.faults:
         out["serving_failovers"] = m.faults["serving_failovers"]
+    if m.telemetry is not None:
+        out["telemetry"] = m.telemetry
     return out
 
 
@@ -145,6 +152,41 @@ def run(out: str = "BENCH_serve.json", smoke: bool = False) -> List[str]:
     results["failover_modes"] = {
         m: {k: r[k] for k in CMP_KEYS} for m, r in mode_runs.items()}
 
+    # ---- adaptive: telemetry feedback off vs on, same seed ------------
+    ADAPT_KEYS = ("submitted", "completed", "device", "degraded", "shed",
+                  "timeouts", "retries", "queue_depth_peak",
+                  "token_latency_p50_s", "token_latency_p99_s",
+                  "ttft_p99_s", "wall_s")
+    hot_sc = get_scenario("serve_hotspot_k3")
+    if smoke:
+        hot_sc = hot_sc.replace(
+            num_users=128, steps=5,
+            serving=dataclasses.replace(hot_sc.serving,
+                                        max_requests=300))
+    adaptive = {}
+    for label, fb in (("open_loop", False), ("closed_loop", True)):
+        sc = hot_sc.replace(
+            name=f"serve_hotspot_{label}",
+            serving=dataclasses.replace(hot_sc.serving, feedback=fb))
+        r = _run_track(sc)
+        assert r["lost"] == 0, f"adaptive[{label}] lost requests"
+        adaptive[label] = {k: r[k] for k in ADAPT_KEYS}
+        if "telemetry" in r:
+            adaptive[label]["telemetry"] = r["telemetry"]
+        print(f"[adaptive:{label}] degraded {r['degraded']}, "
+              f"shed {r['shed']}, timeouts {r['timeouts']}, "
+              f"tok p99 {r['token_latency_p99_s']:.3f}s "
+              f"(wall {r['wall_s']:.1f}s)")
+    if not smoke:
+        o, c = adaptive["open_loop"], adaptive["closed_loop"]
+        assert c["degraded"] < o["degraded"], \
+            (f"closed loop must strictly degrade fewer requests: "
+             f"{c['degraded']} vs {o['degraded']}")
+        assert c["token_latency_p99_s"] < o["token_latency_p99_s"], \
+            (f"closed loop must lower p99 token latency: "
+             f"{c['token_latency_p99_s']} vs {o['token_latency_p99_s']}")
+    results["adaptive"] = adaptive
+
     rows = []
     for track, r in (("closed_loop", cl), ("chaos", ch)):
         for metric in ("submitted", "completed", "device", "degraded",
@@ -164,6 +206,15 @@ def run(out: str = "BENCH_serve.json", smoke: bool = False) -> List[str]:
         for metric in ("relay_s_total", "recompute_s_total"):
             rows.append(f"serve,failover_{mode},mcsa,{metric},"
                         f"{r[metric]:.6f}")
+    for label, r in results["adaptive"].items():
+        for metric in ("degraded", "shed", "timeouts", "completed",
+                       "device"):
+            rows.append(f"serve,adaptive_{label},mcsa,{metric},"
+                        f"{r[metric]}")
+        for metric in ("token_latency_p50_s", "token_latency_p99_s"):
+            if r[metric] is not None:
+                rows.append(f"serve,adaptive_{label},mcsa,{metric},"
+                            f"{r[metric]:.4f}")
 
     if out:
         with open(out, "w") as f:

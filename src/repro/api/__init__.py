@@ -24,6 +24,11 @@ Three pieces (docs/ARCHITECTURE.md "API surface" has the full map):
   plane — per-server engine pools, Poisson arrivals, deadlines,
   backpressure, mid-stream failover — and report per-request QoS in
   ``metrics().serving`` (docs/ARCHITECTURE.md, "Serving data plane").
+  With ``feedback=True`` in the ServeConfig (``serve_hotspot_k3``
+  preset) the session additionally closes the telemetry loop: observed
+  queue delay and slot occupancy flow through
+  :class:`~repro.telemetry.LoadEstimator` back into the planner's
+  pricing (docs/ARCHITECTURE.md, "Telemetry & feedback").
 
 The 60-second version::
 
@@ -48,6 +53,7 @@ from repro.core.faults import (EvacuationReport, FaultBatch, FaultConfig,
                                FaultModel)
 from repro.core.ledger import BudgetLedger
 from repro.serving.dataplane import ServeConfig, ServingDataPlane
+from repro.telemetry import LoadEstimator, LoadSnapshot, TelemetryCollector
 
 from .policies import (POLICIES, BaselinePolicy, CloudPolicy,
                        DNNSurgeryPolicy, DeviceOnlyPolicy, EdgeOnlyPolicy,
@@ -68,4 +74,5 @@ __all__ = [
     "StepEvents", "EventOutcome", "DirtyBatch", "DirtySet",
     "BudgetLedger",
     "ServeConfig", "ServingDataPlane",
+    "TelemetryCollector", "LoadEstimator", "LoadSnapshot",
 ]

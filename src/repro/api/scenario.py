@@ -329,6 +329,34 @@ register_scenario(Scenario(
                         failover_mode="auto"),
     steps=8, dt=30.0))
 
+# Hotspot: the telemetry feedback showcase (docs/ARCHITECTURE.md,
+# "Telemetry & feedback").  Fault-free but overloaded: tiny decode
+# pools (max_slots=8) under a sustained arrival stream make serving
+# slots — which the open-loop planner cannot see — the binding
+# resource, and the U-greedy plan piles most users onto one hot
+# server.  High mobility dirties a large user set every step, so a
+# feedback-on run (this preset) reprices those replans against the
+# observed queue delay / occupancy and spreads load to the quiet
+# pools; the same preset with ``feedback=False`` keeps queueing on the
+# hot server until deadlines blow.  serve-smoke and the BENCH_serve
+# ``adaptive`` track run both and assert on > off (fewer degraded,
+# lower p99 token latency) on the same seed.
+register_scenario(Scenario(
+    name="serve_hotspot_k3", num_aps=25, num_servers=4, topo_seed=0,
+    model="nin", num_users=400, r_capacity=600.0, candidates_k=3,
+    c_dev_range=(1e9, 2e9),
+    speed_range=(8.0, 25.0), mobility_seed=1,
+    ligd=LiGDConfig(max_iters=100),
+    serving=ServeConfig(arrival_rate=3.0, arrival_seed=13,
+                        max_requests=700,
+                        prompt_len=6, max_new=6, cache_len=64,
+                        deadline_s=60.0, max_retries=1, backoff_s=5.0,
+                        queue_limit=24, r_per_slot=8.0, min_slots=2,
+                        max_slots=8, token_time_scale=10_000.0,
+                        failover_mode="auto", feedback=True,
+                        feedback_alpha=0.35, feedback_interval=1),
+    steps=10, dt=30.0))
+
 # Chaos: sustained stochastic churn — servers crash/recover on an
 # exponential MTBF/MTTR clock, fiber links get cut and spliced, and the
 # per-server budgets jitter every step.  The steady-state regime for the

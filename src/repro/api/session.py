@@ -127,6 +127,12 @@ class SessionMetrics:
                           p50/p99 token latency, queue depth, peak
                           concurrent streams) or None when the scenario
                           has no ServeConfig
+    telemetry           : feedback-loop trace when the scenario serves
+                          with ``feedback=True`` — estimator update
+                          count, per-update max congestion multipliers,
+                          and the final LoadSnapshot (None when the
+                          loop is off; the collector still records,
+                          see ``serving["per_server"]``)
     """
     t: np.ndarray
     handoffs: np.ndarray
@@ -141,6 +147,7 @@ class SessionMetrics:
     degraded: Optional[np.ndarray] = None
     faults: Optional[dict] = None
     serving: Optional[dict] = None
+    telemetry: Optional[dict] = None
 
 
 def _fleet_mean(fleet, field: str) -> float:
@@ -201,7 +208,8 @@ class Session:
         self.steps_taken = 0
         self.total_handoffs = 0
         self.timings = {"plan_s": 0.0, "steps_s": 0.0, "drain_s": 0.0,
-                        "faults_s": 0.0, "serve_s": 0.0}
+                        "faults_s": 0.0, "serve_s": 0.0,
+                        "telemetry_s": 0.0}
         self._failover_reports: list = []   # via record_failover()
         self._log = {k: [] for k in ("t", "handoffs", "resplits", "relays",
                                      "mean_T", "mean_E", "mean_C",
@@ -224,6 +232,22 @@ class Session:
                 num_layers=self.profile.num_layers,
                 slots=self._serving_slots(),
                 slots_fn=self._serving_slots)
+
+        # telemetry feedback loop (docs/ARCHITECTURE.md, "Telemetry &
+        # feedback"): only a ServeConfig with feedback=True builds the
+        # estimator — feedback=off sessions never touch the planner's
+        # pricing, keeping their trajectories bit-for-bit identical to
+        # the open-loop plane
+        self.estimator = None
+        self.load_snapshot = None
+        self._telemetry_log = {"t": [], "compute_mult_max": [],
+                               "backhaul_mult_max": []}
+        sv = scenario.serving
+        if self.dataplane is not None and sv is not None and sv.feedback:
+            from repro.telemetry import LoadEstimator
+            self.estimator = LoadEstimator(
+                self.topo.num_servers, alpha=sv.feedback_alpha,
+                max_mult=sv.feedback_max_mult)
 
     def _serving_slots(self) -> np.ndarray:
         """(Z,) engine slots per server from the admission r-budgets:
@@ -387,6 +411,29 @@ class Session:
                                           faults=fault_batch)
             self.timings["serve_s"] += time.perf_counter() - t0
 
+        if serving is not None and self.estimator is not None:
+            # close the loop: harvest this step's samples, fold them
+            # into the EWMA state, hand the snapshot to the planner so
+            # NEXT step's dirty-set replans and admission price against
+            # observed load (docs/ARCHITECTURE.md, "Telemetry &
+            # feedback")
+            coll = getattr(self.dataplane, "collector", None)
+            iv = sc.serving.feedback_interval
+            if coll is not None and (self.steps_taken + 1) % iv == 0:
+                t0 = time.perf_counter()
+                snap = self.estimator.update(coll, t + sc.dt)
+                self.load_snapshot = snap
+                upd = getattr(self.policy, "update_load", None)
+                if upd is not None:
+                    upd(snap)
+                tl = self._telemetry_log
+                tl["t"].append(t + sc.dt)
+                tl["compute_mult_max"].append(
+                    float(snap.compute_mult.max()))
+                tl["backhaul_mult_max"].append(
+                    float(snap.backhaul_mult.max()))
+                self.timings["telemetry_s"] += time.perf_counter() - t0
+
         self.steps_taken += 1
         self.total_handoffs += len(batch)
         log = self._log
@@ -547,6 +594,17 @@ class Session:
                 "by_mode": rep.by_mode,
                 "relay_s_by_mode": rep.relay_s_by_mode,
             }
+        telemetry = None
+        if self.estimator is not None:
+            tl = self._telemetry_log
+            telemetry = {
+                "updates": int(self.estimator.updates),
+                "t": [float(x) for x in tl["t"]],
+                "compute_mult_max": list(tl["compute_mult_max"]),
+                "backhaul_mult_max": list(tl["backhaul_mult_max"]),
+                "last": (self.load_snapshot.to_dict()
+                         if self.load_snapshot is not None else None),
+            }
         return SessionMetrics(
             t=np.asarray(log["t"], np.float64),
             handoffs=np.asarray(log["handoffs"], np.int64),
@@ -561,4 +619,5 @@ class Session:
             degraded=degr if chaos else None,
             faults=faults,
             serving=(self.dataplane.summary()
-                     if self.dataplane is not None else None))
+                     if self.dataplane is not None else None),
+            telemetry=telemetry)

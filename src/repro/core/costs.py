@@ -332,3 +332,39 @@ def stack_edges_np(edges) -> Dict[str, np.ndarray]:
     gathered per user with fancy indexing (no per-user Python)."""
     return {k: np.asarray([getattr(e, k) for e in edges], np.float64)
             for k in EDGE_FIELDS}
+
+
+def apply_congestion(edge_table: Dict[str, np.ndarray],
+                     compute_mult=None,
+                     backhaul_mult=None) -> Dict[str, np.ndarray]:
+    """Congestion-adjusted copy of a :func:`stack_edges_np` table.
+
+    The telemetry loop's belief about realized load enters the cost
+    model here and only here: ``c_min`` (the per-unit compute rate of
+    Eq. 3) is divided by ``compute_mult`` and ``B_backhaul`` (the relay
+    bandwidth of Eq. 5 / Eq. 41) by ``backhaul_mult``, so a congested
+    server *looks slower and farther away* to every downstream cost —
+    t_server, t_transmit, relay_seconds — without touching the formulas
+    themselves.  Multipliers are (Z,) vectors in ``[1, max_mult]``
+    (see :class:`repro.telemetry.LoadSnapshot`); values below 1 are
+    clipped up — observed congestion can only *shrink* believed
+    capacity, never inflate it past the static rating.
+
+    Identity multipliers (or None) return ``edge_table`` itself, same
+    object — the ``feedback=off`` path stays pointer-equal to the
+    static table, which is what pins those trajectories bit-for-bit.
+    """
+    cm = None if compute_mult is None else np.maximum(
+        np.asarray(compute_mult, np.float64), 1.0)
+    bm = None if backhaul_mult is None else np.maximum(
+        np.asarray(backhaul_mult, np.float64), 1.0)
+    if ((cm is None or np.all(cm == 1.0))
+            and (bm is None or np.all(bm == 1.0))):
+        return edge_table
+    out = dict(edge_table)
+    if cm is not None:
+        out["c_min"] = np.asarray(out["c_min"], np.float64) / cm
+    if bm is not None:
+        out["B_backhaul"] = (np.asarray(out["B_backhaul"], np.float64)
+                             / bm)
+    return out

@@ -83,8 +83,9 @@ from types import SimpleNamespace
 
 from .admission import AdmissionReport, admit_waterfill
 from .baselines import run_baseline_batch
-from .costs import (Devices, LayerProfile, gather_devices, rent_cost,
-                    stack_devices, stack_edges_np)
+from .costs import (Devices, LayerProfile, apply_congestion,
+                    gather_devices, rent_cost, stack_devices,
+                    stack_edges_np)
 from .events import (DRAIN, EVACUATE, HANDOFF, DirtyBatch, DirtySet,
                      EventOutcome, StepEvents)
 from .faults import EvacuationReport, FaultBatch, clamp_hops
@@ -290,15 +291,40 @@ class MCSAPlanner:
         self._last_user_aps: Optional[np.ndarray] = None
         # (Z, field) edge table — gathered per user by server id.
         self._edge_table = stack_edges_np(topo.edges)
+        # observed-load view of the same table (repro.telemetry): stays
+        # pointer-equal to _edge_table until update_load() sees a
+        # non-identity LoadSnapshot — the feedback=off path never
+        # diverges from the static pricing
+        self._edge_table_eff = self._edge_table
+        self.load = None                   # latest LoadSnapshot (or None)
         self._sharded_static = {}
 
     # ------------------------------------------------------------------
     def _edges_for(self, servers: np.ndarray) -> dict:
         """Per-user edge dict by gathering the per-topology table —
-        O(fields), not O(users)."""
+        O(fields), not O(users).  Reads the congestion-adjusted view,
+        which IS the static table until feedback supplies a snapshot."""
         servers = np.asarray(servers)
         return {k: jnp.asarray(v[servers], jnp.float32)
-                for k, v in self._edge_table.items()}
+                for k, v in self._edge_table_eff.items()}
+
+    def update_load(self, snapshot) -> None:
+        """Consume a :class:`repro.telemetry.LoadSnapshot`: every
+        subsequent dirty-set solve prices against the congestion-
+        adjusted edge table (:func:`repro.core.costs.apply_congestion`)
+        and ``_admit_dirty`` shrinks the waterfill residuals by the
+        same multipliers — observed residual capacity, not rated.
+        ``None`` (or an identity snapshot) restores static pricing
+        exactly; ``feedback=off`` sessions never call this at all."""
+        self.load = snapshot
+        if snapshot is None:
+            self._edge_table_eff = self._edge_table
+            return
+        self._edge_table_eff = apply_congestion(
+            self._edge_table, snapshot.compute_mult,
+            snapshot.backhaul_mult)
+        if self._edge_table_eff is self._edge_table:
+            self.load = None               # identity: pure static path
 
     def _stacked_devices(self, devices: Devices, hops: np.ndarray) -> dict:
         devs_s = dict(stack_devices(devices))
@@ -845,6 +871,37 @@ class MCSAPlanner:
                                new_server=new_server,
                                orig_servers=orig_servers)
 
+    def _reprice_T_physical(self, res_sel, devices: Devices,
+                            rows: np.ndarray, servers: np.ndarray,
+                            hops: np.ndarray, t_ag: float):
+        """Recompute the selected rows' per-round delay T against the
+        PHYSICAL (uncongested) edge table — Eqs. (1)/(3)/(5)/(7) at the
+        already-chosen (split, B, r, server).  Only called while a
+        LoadSnapshot is active: the congestion-adjusted table steers
+        which plan wins, but the scattered T must stay a service-time
+        estimate, because the serving layer derives its virtual
+        per-token time from it and models queueing explicitly."""
+        M = self.profile.num_layers
+        f_l, f_e, w = self.profile.prefix_tables()
+        split = np.asarray(res_sel.split, np.int64)
+        offl = split < M
+        et = self._edge_table
+        z = np.asarray(servers, np.int64)
+        dv = gather_devices(devices, np.asarray(rows))
+        c_dev = np.asarray(dv["c_dev"], np.float64)
+        k_rounds = np.asarray(dv["k_rounds"], np.float64)
+        B = np.maximum(np.asarray(res_sel.B, np.float64), 1.0)
+        r = np.maximum(np.asarray(res_sel.r, np.float64), 1e-9)
+        h = np.asarray(clamp_hops(np.asarray(hops, np.float64)))
+        h = np.where(np.isfinite(h), h, 1.0)
+        payload = w[split] + float(self.profile.result_bits)
+        t_dev = f_l[split] / c_dev + float(t_ag) / k_rounds
+        t_srv = f_e[split] / (np.power(r, et["lam_a"][z])
+                              * et["c_min"][z])
+        t_tx = payload / B + h * payload / et["B_backhaul"][z]
+        T = t_dev + np.where(offl, t_srv + t_tx, 0.0)
+        return res_sel._replace(T=T)
+
     def _admit_dirty(self, dirty: DirtyBatch, devices: Devices,
                      fleet: FleetState, sol: SimpleNamespace) -> tuple:
         """Ledger-aware admission over the dirty solve: release what the
@@ -927,9 +984,19 @@ class MCSAPlanner:
             B_s = np.where(invalid_s, B_s[ri, first][:, None], B_s)
             U_s[invalid_s] = np.inf
 
+        res_r = self.ledger.residual_r()
+        res_B = self.ledger.residual_B()
+        if self.load is not None:
+            # observed residual capacity: a congested server's headroom
+            # shrinks by the same multiplier that slowed its pricing,
+            # so the waterfill spills load to quiet servers even when
+            # the rated budgets say there is room
+            if res_r is not None:
+                res_r = res_r / np.maximum(self.load.compute_mult, 1.0)
+            if res_B is not None:
+                res_B = res_B / np.maximum(self.load.backhaul_mult, 1.0)
         report = admit_waterfill(serv_s, U_s, r_s, B_s, topo.num_servers,
-                                 self.ledger.residual_r(),
-                                 self.ledger.residual_B())
+                                 res_r, res_B)
         if not has_valid.all():
             report.rejected = report.rejected | ~has_valid
             choice = report.choice.copy()
@@ -957,6 +1024,14 @@ class MCSAPlanner:
             # up server, or the frozen one during a full blackout
             final_srv[nv] = self._nearest_up(dirty.new_ap[sel][nv], up) \
                 if up.any() else old_server[sel][nv]
+        if self.load is not None:
+            # feedback prices the DECISION against observed congestion,
+            # but the table's T column is what the data plane turns
+            # into virtual token time — leaving it inflated would
+            # double-count queueing the engine pools already simulate
+            res_sel = self._reprice_T_physical(
+                res_sel, devices, users[sel], final_srv,
+                self.topo.hops[dirty.new_ap[sel], final_srv], t_ag)
         fleet.scatter(users[sel], final_srv, res_sel)
 
         offl_new = np.asarray(res_sel.split) < M

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core.faults import HOP_UNREACHABLE, clamp_hops
 from repro.core.ledger import slots_from_usage  # noqa: F401  (re-export)
+from repro.telemetry.collector import TelemetryCollector
 
 from .failover import (FAILOVER_MODES, MIGRATE, REPREFILL, FailoverEvent,
                        FailoverReport, leaf_bits, migration_price,
@@ -124,6 +125,30 @@ class ServeConfig:
                    re-prefill).  Streams without an exportable cache
                    (still queued, or an engine lacking ``export_cache``)
                    always re-prefill, whatever the mode says.
+
+    Admission order & feedback (docs/ARCHITECTURE.md, "Telemetry &
+    feedback"):
+
+    admission_order : ``"edf"`` admits ready queued requests earliest-
+                   deadline-first (rid breaks ties, so workloads whose
+                   deadlines are uniform or arrival-ordered admit
+                   exactly like FIFO — the regression pin); ``"fifo"``
+                   keeps strict arrival order.  Either way migrants
+                   still bypass the queue_limit.
+    feedback     : close the loop — ``Session.step`` harvests the data
+                   plane's :class:`repro.telemetry.TelemetryCollector`
+                   through a :class:`repro.telemetry.LoadEstimator` and
+                   hands the ``LoadSnapshot`` to
+                   ``MCSAPlanner.update_load``, so dirty-set replans
+                   and admission price against *observed* load.  Off
+                   (the default) never calls ``update_load``: the
+                   planner prices against the static edge table,
+                   bit-for-bit as before (collection itself is
+                   side-effect-free).
+    feedback_alpha : estimator EWMA smoothing factor, in (0, 1]
+    feedback_interval : control steps between estimator updates
+    feedback_window : ring-buffer capacity per (server, signal)
+    feedback_max_mult : congestion-multiplier cap (>= 1)
     """
     arrival_rate: float = 2.0
     arrival_seed: int = 0
@@ -143,6 +168,12 @@ class ServeConfig:
     cache_len: int = 64
     relay_bits_per_token: Optional[float] = None
     failover_mode: str = "auto"
+    admission_order: str = "edf"
+    feedback: bool = False
+    feedback_alpha: float = 0.25
+    feedback_interval: int = 1
+    feedback_window: int = 64
+    feedback_max_mult: float = 8.0
 
     def __post_init__(self):
         if self.max_new < 1:
@@ -154,6 +185,17 @@ class ServeConfig:
                 f"failover_mode must be one of "
                 f"{('auto',) + FAILOVER_MODES}, got "
                 f"{self.failover_mode!r}")
+        if self.admission_order not in ("edf", "fifo"):
+            raise ValueError(f"admission_order must be 'edf' or 'fifo', "
+                             f"got {self.admission_order!r}")
+        if not (0.0 < self.feedback_alpha <= 1.0):
+            raise ValueError("feedback_alpha must be in (0, 1]")
+        if self.feedback_interval < 1:
+            raise ValueError("feedback_interval must be >= 1")
+        if self.feedback_window < 1:
+            raise ValueError("feedback_window must be >= 1")
+        if self.feedback_max_mult < 1.0:
+            raise ValueError("feedback_max_mult must be >= 1")
 
     # -- serialization (mirrors FaultConfig.to_dict/from_dict) ---------
     def to_dict(self) -> dict:
@@ -318,6 +360,13 @@ class ServingDataPlane:
             bits = 16.0 * float(getattr(engine_factory, "d_model", 64))
         self._bits_per_token = float(bits)
 
+        # Always-on observability (repro.telemetry): recording is pure —
+        # it never influences admission, clocks, or routing, so the
+        # collector may run even when cfg.feedback is off.  Tests strip
+        # it (collector = None) to prove that differentially.
+        self.collector: Optional[TelemetryCollector] = TelemetryCollector(
+            topo.num_servers, window=cfg.feedback_window)
+
         self._rng = np.random.default_rng(cfg.arrival_seed)
         self._next_rid = 0
         self.requests: Dict[int, ServeRequest] = {}
@@ -473,6 +522,8 @@ class ServingDataPlane:
                 continue
             if len(pool.queue) >= cfg.queue_limit:
                 self.counters["shed"] += 1
+                if self.collector is not None:
+                    self.collector.on_shed(pool.z)
                 self._finish_device(req, t_arr, DEGRADED)
                 continue
             req.server = pool.z
@@ -497,6 +548,9 @@ class ServingDataPlane:
         """Complete a request on the user's own device in virtual time.
         Tokens are not materialized (the device runs the full model; the
         stream identity question only exists for edge engines)."""
+        if (status == DEGRADED and self.collector is not None
+                and req.server >= 0):
+            self.collector.on_degraded(req.server)
         req.status = status
         req.server = -1
         req.t_done = now + req.remaining * req.token_s
@@ -599,13 +653,16 @@ class ServingDataPlane:
                 continue
             if not hard and pool.clock >= t_end:
                 return
+            if self.collector is not None:
+                self.collector.on_occupancy(
+                    pool.z, len(pool.active) / max(pool.slots, 1))
             emitted = pool.get_engine().step()
             pool.clock += max(r.token_s for r in pool.active.values())
             for erid, tok in emitted:
                 req = pool.active.get(erid)
                 if req is None:
                     continue
-                self._stamp(req, tok, pool.clock)
+                self._stamp(req, tok, pool.clock, pool.z)
                 if req.remaining <= 0:
                     pool.get_engine().pop_result(erid)
                     del pool.active[erid]
@@ -620,12 +677,26 @@ class ServingDataPlane:
         eng = pool.get_engine()
         free = eng.free_slots
         pool.note_depth()
-        for _ in range(len(pool.queue)):
-            req = pool.queue.popleft()
-            if free <= 0 or req.t_ready > pool.clock:
-                pool.queue.append(req)   # order-preserving rotation
-                continue
-            free -= 1
+        # Ready = admissible now.  "edf" admits them earliest-deadline-
+        # first (a timed-out retry or a migrated stream, whose deadline
+        # predates the fresh arrivals queued ahead of it, jumps the
+        # line); rid ties restore arrival order, so a workload whose
+        # deadlines are uniform or arrival-ordered admits exactly like
+        # "fifo".  The skipped remainder keeps its arrival order.
+        ready = [r for r in pool.queue
+                 if r.t_ready <= pool.clock] if free > 0 else []
+        if self.cfg.admission_order == "edf":
+            ready.sort(key=lambda r: (r.deadline, r.rid))
+        take = ready[:free]
+        if take:
+            chosen = {r.rid for r in take}
+            keep = [r for r in pool.queue if r.rid not in chosen]
+            pool.queue.clear()
+            pool.queue.extend(keep)
+        for req in take:
+            if self.collector is not None:
+                self.collector.on_queue_delay(
+                    pool.z, pool.clock - req.t_ready)
             tokens = np.concatenate(
                 [np.asarray(req.prompt, np.int32),
                  np.asarray(req.tokens, np.int32)])
@@ -646,7 +717,7 @@ class ServingDataPlane:
             eng.admit()
             # prefill emits the first token synchronously at admission
             tok = eng.requests[erid].out[-1]
-            self._stamp(req, tok, pool.clock + req.token_s)
+            self._stamp(req, tok, pool.clock + req.token_s, pool.z)
             if req.remaining <= 0:
                 eng.pop_result(erid)
                 req.status = DONE
@@ -689,13 +760,20 @@ class ServingDataPlane:
         pool.queue.append(req)     # same server: the planner still maps
         pool.note_depth()          # the user there; reconcile moves it
 
-    def _stamp(self, req: ServeRequest, tok: int, t_tok: float) -> None:
+    def _stamp(self, req: ServeRequest, tok: int, t_tok: float,
+               z: int = -1) -> None:
         req.tokens.append(int(tok))
         if req.t_first is None:
             req.t_first = t_tok
-            self._ttft.append(t_tok - req.t_submit)
+            ttft = t_tok - req.t_submit
+            self._ttft.append(ttft)
+            if self.collector is not None and z >= 0:
+                self.collector.on_ttft(z, ttft)
         else:
-            self._tok_lat.append(max(t_tok - req.t_last, 0.0))
+            lat = max(t_tok - req.t_last, 0.0)
+            self._tok_lat.append(lat)
+            if self.collector is not None and z >= 0:
+                self.collector.on_token(z, lat)
         req.t_last = t_tok
 
     # -- telemetry -------------------------------------------------------
@@ -704,14 +782,27 @@ class ServingDataPlane:
         depth = max((p.queue_peak for p in self.pools), default=0)
         self.peak_concurrent = max(self.peak_concurrent, peak)
         self._queue_depth_peak = max(self._queue_depth_peak, depth)
+        queued_ps = [len(p.queue) for p in self.pools]
+        active_ps = [len(p.active) for p in self.pools]
+        occ_ps = [len(p.active) / max(p.slots, 1) for p in self.pools]
+        if self.collector is not None:
+            # end-of-step occupancy sample for every pool — idle pools
+            # emit the explicit zeros the estimator's decay feeds on
+            for z, occ in enumerate(occ_ps):
+                self.collector.on_occupancy(z, occ)
         sample = dict(
             t=float(t_end),
-            active=sum(len(p.active) for p in self.pools),
-            queued=sum(len(p.queue) for p in self.pools),
+            active=sum(active_ps),
+            queued=sum(queued_ps),
             peak_active=int(peak),
             queue_depth_max=int(depth),
             submitted=int(self.counters["submitted"]),
-            completed=int(self.counters["completed"]))
+            completed=int(self.counters["completed"]),
+            queued_per_server=queued_ps,
+            active_per_server=active_ps,
+            queue_peak_per_server=[int(p.queue_peak)
+                                   for p in self.pools],
+            occupancy_per_server=[round(o, 6) for o in occ_ps])
         self.tracks.append(sample)
         return sample
 
@@ -771,4 +862,40 @@ class ServingDataPlane:
                                   else None),
             "slots": [int(p.slots) for p in self.pools],
             "servers_up": int(sum(p.up for p in self.pools)),
+            "per_server": self._per_server_summary(),
         }
+
+    def _per_server_summary(self) -> dict:
+        """Per-server queue-depth / occupancy tracks (one entry per
+        control step, Z-wide rows) plus the collector's per-server
+        counters and windowed latency stats — the disaggregation the
+        telemetry loop consumes and ``SessionMetrics.serving``
+        surfaces."""
+        Z = len(self.pools)
+        q_rows = [s["queue_peak_per_server"] for s in self.tracks
+                  if "queue_peak_per_server" in s]
+        o_rows = [s["occupancy_per_server"] for s in self.tracks
+                  if "occupancy_per_server" in s]
+        out = {
+            "slots": [int(p.slots) for p in self.pools],
+            "up": [bool(p.up) for p in self.pools],
+            "queue_depth_track": q_rows,
+            "occupancy_track": o_rows,
+            "queue_depth_peak": [
+                max((row[z] for row in q_rows), default=0)
+                for z in range(Z)],
+            "occupancy_mean": [
+                float(np.mean([row[z] for row in o_rows])) if o_rows
+                else 0.0 for z in range(Z)],
+        }
+        c = self.collector
+        if c is not None:
+            for name in ("admitted", "tokens", "shed", "degraded"):
+                out[name] = [int(v) for v in c.totals(name)]
+            q50 = c.window_quantile("queue_delay_s", 0.5)
+            t50 = c.window_quantile("token_latency_s", 0.5)
+            out["queue_delay_p50_s"] = [
+                None if np.isnan(v) else float(v) for v in q50]
+            out["token_latency_p50_s"] = [
+                None if np.isnan(v) else float(v) for v in t50]
+        return out

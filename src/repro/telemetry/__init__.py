@@ -1,0 +1,25 @@
+"""Telemetry + adaptive feedback: serving load closes the loop back
+into the planner.
+
+``collector`` retains what the data plane observes (per-server ring
+buffers in virtual time); ``estimator`` turns the samples into a
+bounded, monotone, idle-decaying :class:`LoadSnapshot` of congestion
+multipliers that ``MCSAPlanner.update_load`` prices replans and
+admission against.  Dataflow, snapshot contract, and stability
+invariants: docs/ARCHITECTURE.md, "Telemetry & feedback".
+"""
+from repro.telemetry.collector import (COUNTERS, SAMPLERS, RingBuffer,
+                                       TelemetryCollector)
+from repro.telemetry.estimator import (LoadEstimator, LoadSnapshot, ewma,
+                                       ewma_update)
+
+__all__ = [
+    "COUNTERS",
+    "SAMPLERS",
+    "RingBuffer",
+    "TelemetryCollector",
+    "LoadEstimator",
+    "LoadSnapshot",
+    "ewma",
+    "ewma_update",
+]

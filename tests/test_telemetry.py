@@ -1,0 +1,455 @@
+"""Telemetry + adaptive feedback (docs/ARCHITECTURE.md, "Telemetry &
+feedback").
+
+Three layers of coverage:
+
+* **estimator contract** — property tests (through the hypothesis shim)
+  for the LoadSnapshot invariants: EWMA output bounded by the sample
+  range, congestion multipliers bounded in [1, max_mult] and monotone
+  in observed queue delay, geometric decay back to the identity when
+  idle.
+* **differential pins** — recording is pure (a data plane with its
+  collector stripped is trajectory-identical to one recording), and a
+  ``feedback=off`` session never perturbs the planner's static pricing
+  (``_edge_table_eff`` stays pointer-equal to the static table) — the
+  bit-for-bit guarantee for pre-existing scenarios.  EDF admission
+  equals FIFO whenever deadlines are arrival-ordered (the satellite's
+  regression pin) and strictly prioritizes an earlier deadline when
+  they are not.
+* **the closed loop** — a Session on the hotspot preset (shrunk) runs
+  dataplane -> collector -> estimator -> planner and the planner's
+  admission residuals actually shrink on the congested server.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import Session, get_scenario
+from repro.core.costs import apply_congestion, stack_edges_np
+from repro.serving.dataplane import (ServeConfig, ServeRequest,
+                                     ServingDataPlane)
+from repro.telemetry import (LoadEstimator, LoadSnapshot, RingBuffer,
+                             TelemetryCollector, ewma)
+from repro.testing.fake_engine import FakeEngine
+
+NUM_LAYERS = 4
+
+
+def _topo(Z=2, backhaul=1e6):
+    return SimpleNamespace(
+        num_servers=Z,
+        edges=[SimpleNamespace(B_backhaul=backhaul) for _ in range(Z)],
+        server_aps=np.arange(Z, dtype=np.int64),
+        hops=np.ones((Z, Z), np.float64))
+
+
+def _fleet(servers, splits, T=None):
+    servers = np.asarray(servers, np.int64)
+    T = np.ones(len(servers)) if T is None else np.asarray(T, np.float64)
+    return SimpleNamespace(server=servers,
+                           split=np.asarray(splits, np.int64), T=T)
+
+
+def _cfg(**kw):
+    base = dict(arrival_rate=2.0, arrival_seed=3, max_requests=8,
+                prompt_len=4, max_new=4, cache_len=16, deadline_s=100.0,
+                max_retries=2, backoff_s=1.0, queue_limit=64,
+                min_slots=2, max_slots=8, token_time_scale=4.0)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _plane(cfg, Z=2, slots=2, topo=None):
+    return ServingDataPlane(cfg, topo or _topo(Z), num_layers=NUM_LAYERS,
+                            slots=np.full(Z, slots),
+                            engine_factory=FakeEngine)
+
+
+def _harvest(Z=2, qd=0.0, tok=1.0, occ=0.0, admitted=1, tokens=1,
+             hot=None):
+    """Hand-built harvest bundle: uniform across servers, except the
+    ``hot`` server (if given) gets the scalar values; others idle."""
+    def vec(v, idle=0.0):
+        a = np.full(Z, v if hot is None else idle, np.float64)
+        if hot is not None:
+            a[hot] = v
+        return a
+    return {
+        "queue_delay_mean": vec(qd),
+        "queue_delay_p90": vec(qd),
+        "token_latency_mean": vec(tok, idle=tok),
+        "token_latency_p90": vec(tok, idle=tok),
+        "ttft_p90": vec(tok, idle=tok),
+        "occupancy_mean": vec(occ),
+        "admitted": vec(admitted, idle=0).astype(np.int64),
+        "tokens": vec(tokens, idle=tokens).astype(np.int64),
+        "shed": np.zeros(Z, np.int64),
+        "degraded": np.zeros(Z, np.int64),
+    }
+
+
+# ---------------------------------------------------------------------
+# collector: ring buffers + counters
+# ---------------------------------------------------------------------
+def test_ring_buffer_wraps_and_windows():
+    rb = RingBuffer(4)
+    assert len(rb) == 0 and rb.mean(default=-1.0) == -1.0
+    assert rb.quantile(0.5) is None
+    for x in (1.0, 2.0, 3.0):
+        rb.push(x)
+    assert len(rb) == 3 and rb.mean() == pytest.approx(2.0)
+    for x in (4.0, 5.0, 6.0):
+        rb.push(x)                      # overwrites 1.0 and 2.0
+    assert len(rb) == 4
+    assert sorted(rb.values()) == [3.0, 4.0, 5.0, 6.0]
+    assert rb.quantile(1.0) == pytest.approx(6.0)
+    assert rb.capacity == 4
+    rb.clear()
+    assert len(rb) == 0
+    with pytest.raises(ValueError):
+        RingBuffer(0)
+
+
+def test_collector_harvest_deltas_reset():
+    c = TelemetryCollector(2, window=8)
+    c.on_queue_delay(0, 2.0)
+    c.on_queue_delay(0, 4.0)
+    c.on_shed(1)
+    h = c.harvest()
+    assert h["admitted"].tolist() == [2, 0]
+    assert h["shed"].tolist() == [0, 1]
+    assert h["queue_delay_mean"][0] == pytest.approx(3.0)
+    assert np.isnan(h["queue_delay_p90"][1])    # no samples on server 1
+    h2 = c.harvest()                            # deltas reset...
+    assert h2["admitted"].tolist() == [0, 0]
+    assert c.totals("admitted").tolist() == [2, 0]   # ...totals persist
+    # the window itself is NOT reset by harvest — stats stay sliding
+    assert h2["queue_delay_mean"][0] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------
+# estimator contract (property tests through the hypothesis shim)
+# ---------------------------------------------------------------------
+@given(xs=st.lists(st.floats(min_value=-50.0, max_value=50.0),
+                   min_size=1, max_size=20),
+       alpha=st.floats(min_value=0.01, max_value=1.0))
+@settings(max_examples=25)
+def test_ewma_bounded_by_sample_range(xs, alpha):
+    y = ewma(xs, alpha)
+    assert min(xs) - 1e-9 <= y <= max(xs) + 1e-9
+
+
+@given(qds=st.lists(st.floats(min_value=0.0, max_value=100.0),
+                    min_size=1, max_size=12),
+       alpha=st.floats(min_value=0.05, max_value=0.9))
+@settings(max_examples=25)
+def test_multipliers_bounded_for_any_load(qds, alpha):
+    est = LoadEstimator(2, alpha=alpha, max_mult=8.0)
+    for qd in qds:
+        est.observe(_harvest(qd=qd, occ=min(qd / 10.0, 1.0)))
+    snap = est.snapshot()
+    assert np.all(snap.compute_mult >= 1.0)
+    assert np.all(snap.compute_mult <= 8.0)
+    assert np.all(snap.backhaul_mult >= 1.0)
+    assert np.all(snap.backhaul_mult <= 8.0)
+
+
+@given(qd_lo=st.floats(min_value=0.0, max_value=30.0),
+       qd_hi=st.floats(min_value=0.0, max_value=30.0))
+@settings(max_examples=25)
+def test_compute_mult_monotone_in_queue_delay(qd_lo, qd_hi):
+    qd_lo, qd_hi = sorted((qd_lo, qd_hi))
+    snaps = []
+    for qd in (qd_lo, qd_hi):
+        est = LoadEstimator(1, alpha=0.5, max_mult=8.0)
+        for _ in range(4):
+            est.observe(_harvest(Z=1, qd=qd, tok=2.0))
+        snaps.append(est.snapshot())
+    assert snaps[0].compute_mult[0] <= snaps[1].compute_mult[0] + 1e-12
+
+
+@given(o_lo=st.floats(min_value=0.0, max_value=1.0),
+       o_hi=st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=25)
+def test_backhaul_mult_monotone_in_occupancy(o_lo, o_hi):
+    o_lo, o_hi = sorted((o_lo, o_hi))
+    snaps = []
+    for occ in (o_lo, o_hi):
+        est = LoadEstimator(1, alpha=0.5, max_mult=4.0)
+        for _ in range(4):
+            est.observe(_harvest(Z=1, occ=occ))
+        snaps.append(est.snapshot())
+    assert snaps[0].backhaul_mult[0] <= snaps[1].backhaul_mult[0] + 1e-12
+
+
+def test_idle_decay_to_identity():
+    est = LoadEstimator(2, alpha=0.4, max_mult=8.0)
+    for _ in range(6):
+        est.observe(_harvest(qd=20.0, tok=1.0, occ=0.9))
+    loaded = est.snapshot()
+    assert loaded.compute_mult[0] > 2.0
+    assert loaded.backhaul_mult[0] > 2.0
+    assert not loaded.is_identity()
+    idle = _harvest(qd=0.0, occ=0.0, admitted=0, tokens=0)
+    for _ in range(60):
+        est.observe(idle)
+    calm = est.snapshot()
+    np.testing.assert_allclose(calm.compute_mult, 1.0, atol=1e-4)
+    np.testing.assert_allclose(calm.backhaul_mult, 1.0, atol=1e-4)
+    assert calm.is_identity(atol=1e-4)
+
+
+def test_estimator_validation_and_ewma_errors():
+    with pytest.raises(ValueError):
+        LoadEstimator(2, alpha=0.0)
+    with pytest.raises(ValueError):
+        LoadEstimator(2, max_mult=0.5)
+    with pytest.raises(ValueError):
+        ewma([], 0.5)
+    assert ewma([], 0.5, init=3.0) == 3.0
+
+
+def test_fresh_estimator_is_identity():
+    snap = LoadEstimator(3).snapshot(t=5.0)
+    assert snap.is_identity() and snap.t == 5.0
+    d = snap.to_dict()
+    assert d["compute_mult"] == [1.0, 1.0, 1.0]
+
+
+# ---------------------------------------------------------------------
+# apply_congestion: the cost-model entry point
+# ---------------------------------------------------------------------
+def test_apply_congestion_identity_is_pointer_equal():
+    table = stack_edges_np([SimpleNamespace(**{
+        k: float(i + 1) for i, k in enumerate(
+            ("c_min", "rho_min", "lam_a", "rho_B", "gamma_B", "B0",
+             "B_backhaul", "N0", "B_min", "B_max", "r_min", "r_max"))})
+        for _ in range(2)])
+    assert apply_congestion(table, None, None) is table
+    assert apply_congestion(table, np.ones(2), np.ones(2)) is table
+
+
+def test_apply_congestion_divides_and_clips():
+    table = {"c_min": np.asarray([100.0, 100.0]),
+             "B_backhaul": np.asarray([10.0, 10.0]),
+             "lam_a": np.asarray([0.85, 0.85])}
+    out = apply_congestion(table, np.asarray([2.0, 0.5]),
+                           np.asarray([4.0, 1.0]))
+    assert out is not table
+    np.testing.assert_allclose(out["c_min"], [50.0, 100.0])   # 0.5 -> 1
+    np.testing.assert_allclose(out["B_backhaul"], [2.5, 10.0])
+    np.testing.assert_allclose(out["lam_a"], table["lam_a"])  # untouched
+    np.testing.assert_allclose(table["c_min"], [100.0, 100.0])
+
+
+# ---------------------------------------------------------------------
+# ServeConfig knobs
+# ---------------------------------------------------------------------
+def test_serve_config_feedback_roundtrip_and_validation():
+    cfg = _cfg(feedback=True, feedback_alpha=0.5, feedback_interval=2,
+               feedback_window=16, feedback_max_mult=4.0,
+               admission_order="fifo")
+    assert ServeConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(ValueError):
+        _cfg(admission_order="lifo")
+    with pytest.raises(ValueError):
+        _cfg(feedback_alpha=0.0)
+    with pytest.raises(ValueError):
+        _cfg(feedback_interval=0)
+    with pytest.raises(ValueError):
+        _cfg(feedback_max_mult=0.5)
+
+
+# ---------------------------------------------------------------------
+# EDF admission (satellite): pin + priority
+# ---------------------------------------------------------------------
+def _request_trace(plane):
+    return [(r.rid, r.status, r.server, round(r.t_last, 9),
+             tuple(r.tokens)) for r in plane.requests.values()]
+
+
+def test_edf_equals_fifo_when_deadlines_arrival_ordered():
+    """Fresh arrivals carry deadline = t_arr + deadline_s, so deadlines
+    are arrival-ordered and EDF must admit exactly like FIFO — the
+    regression pin for no-deadline-pressure workloads."""
+    traces = []
+    for order in ("edf", "fifo"):
+        cfg = _cfg(arrival_rate=6.0, max_requests=24, deadline_s=1e6,
+                   max_retries=0, admission_order=order)
+        plane = _plane(cfg, Z=2, slots=2)
+        fleet = _fleet([0, 1, 0], [2, 2, 2], T=[1.0, 2.0, 3.0])
+        for i in range(4):
+            plane.step(10.0, 10.0 * i, fleet=fleet)
+        plane.drain()
+        traces.append(_request_trace(plane))
+    assert traces[0] == traces[1]
+
+
+def test_edf_prioritizes_earlier_deadline():
+    def req(rid, deadline):
+        return ServeRequest(rid=rid, user=rid,
+                            prompt=np.arange(4, dtype=np.int32),
+                            max_new=2, t_submit=0.0, deadline=deadline,
+                            token_s=1.0, t_ready=0.0, t_last=0.0,
+                            server=0)
+
+    plane = _plane(_cfg(max_requests=0, admission_order="edf"),
+                   Z=1, slots=1)
+    pool = plane.pools[0]
+    late, early = req(0, 100.0), req(1, 5.0)
+    plane.requests = {0: late, 1: early}
+    pool.queue.extend([late, early])     # arrival order: late first
+    plane._admit_pool(pool)
+    running = [r.rid for r in pool.active.values()]
+    assert running == [1]                # the earlier deadline won
+    assert [r.rid for r in pool.queue] == [0]
+    # fifo would have admitted rid 0 instead
+    plane2 = _plane(_cfg(max_requests=0, admission_order="fifo"),
+                    Z=1, slots=1)
+    l2, e2 = req(0, 100.0), req(1, 5.0)
+    plane2.requests = {0: l2, 1: e2}
+    plane2.pools[0].queue.extend([l2, e2])
+    plane2._admit_pool(plane2.pools[0])
+    assert [r.rid for r in plane2.pools[0].active.values()] == [0]
+
+
+# ---------------------------------------------------------------------
+# differential pins: observation is pure; feedback=off is static
+# ---------------------------------------------------------------------
+def test_collector_stripped_plane_is_trajectory_identical():
+    """The collector records but never steers: a plane with
+    ``collector = None`` (the pre-telemetry code path) must produce
+    byte-identical request trajectories and aggregate summaries."""
+    summaries, traces = [], []
+    for strip in (False, True):
+        cfg = _cfg(arrival_rate=8.0, max_requests=40, deadline_s=6.0,
+                   max_retries=1, queue_limit=4)
+        plane = _plane(cfg, Z=2, slots=2)
+        if strip:
+            plane.collector = None
+        fleet = _fleet([0, 1, 0, 1], [2, 2, NUM_LAYERS, 2],
+                       T=[1.0, 2.0, 1.0, 4.0])
+        for i in range(4):
+            plane.step(10.0, 10.0 * i, fleet=fleet)
+        plane.drain()
+        traces.append(_request_trace(plane))
+        s = plane.summary()
+        s.pop("per_server")       # collector-derived fields differ
+        summaries.append(s)
+    assert traces[0] == traces[1]
+    assert summaries[0] == summaries[1]
+
+
+def test_feedback_off_session_keeps_static_pricing():
+    sc = get_scenario("serve_hotspot_k3").replace(
+        num_users=24, steps=2)
+    off = sc.replace(serving=dataclasses.replace(sc.serving,
+                                                 feedback=False))
+    sess = Session(off)
+    assert sess.estimator is None
+    for _ in range(off.steps):
+        sess.step()
+    m = sess.run(0)
+    # never consumed: the effective edge table IS the static table
+    assert sess.policy._edge_table_eff is sess.policy._edge_table
+    assert sess.policy.load is None
+    assert m.telemetry is None
+    # ...but the collector still recorded (always-on observability)
+    assert m.serving["per_server"]["admitted"] is not None
+
+
+def test_feedback_on_session_closes_the_loop():
+    sc = get_scenario("serve_hotspot_k3").replace(num_users=24, steps=3)
+    sess = Session(sc)
+    assert sess.estimator is not None
+    for _ in range(sc.steps):
+        sess.step()
+    m = sess.run(0)
+    assert m.telemetry is not None
+    assert m.telemetry["updates"] == sc.steps
+    assert sess.load_snapshot is not None
+    snap = sess.load_snapshot
+    assert np.all(snap.compute_mult >= 1.0)
+    assert np.all(snap.compute_mult <= sc.serving.feedback_max_mult)
+    # the planner consumed it (identity snapshots normalize to None)
+    if not snap.is_identity():
+        assert sess.policy.load is snap
+        assert (sess.policy._edge_table_eff
+                is not sess.policy._edge_table)
+
+
+def test_planner_residuals_shrink_under_load():
+    """update_load with a hot server shrinks the observed residual the
+    waterfill sees on that server — priced via the same multiplier the
+    edge table was divided by."""
+    sc = get_scenario("serve_hotspot_k3").replace(num_users=24, steps=1)
+    sess = Session(sc)
+    pol = sess.policy
+    Z = sess.topo.num_servers
+    snap = LoadSnapshot(
+        t=0.0,
+        compute_mult=np.asarray([4.0] + [1.0] * (Z - 1)),
+        backhaul_mult=np.ones(Z),
+        queue_delay_s=np.zeros(Z), occupancy=np.zeros(Z),
+        token_ref_s=np.ones(Z), token_latency_p90_s=np.full(Z, np.nan))
+    base_r = pol.ledger.residual_r().copy()
+    pol.update_load(snap)
+    assert pol.load is snap
+    eff = pol._edge_table_eff
+    np.testing.assert_allclose(eff["c_min"][0],
+                               pol._edge_table["c_min"][0] / 4.0)
+    np.testing.assert_allclose(eff["c_min"][1:],
+                               pol._edge_table["c_min"][1:])
+    scaled = base_r / np.maximum(snap.compute_mult, 1.0)
+    assert scaled[0] == pytest.approx(base_r[0] / 4.0)
+    # identity snapshot restores the static path exactly
+    pol.update_load(LoadSnapshot(
+        t=1.0, compute_mult=np.ones(Z), backhaul_mult=np.ones(Z),
+        queue_delay_s=np.zeros(Z), occupancy=np.zeros(Z),
+        token_ref_s=np.ones(Z), token_latency_p90_s=np.full(Z, np.nan)))
+    assert pol.load is None
+    assert pol._edge_table_eff is pol._edge_table
+    pol.update_load(None)
+    assert pol._edge_table_eff is pol._edge_table
+
+
+# ---------------------------------------------------------------------
+# per-server tracks (satellite)
+# ---------------------------------------------------------------------
+def test_per_server_tracks_surface_in_summary():
+    cfg = _cfg(arrival_rate=8.0, max_requests=30, queue_limit=2,
+               deadline_s=50.0)
+    plane = _plane(cfg, Z=2, slots=2)
+    fleet = _fleet([0, 0, 0, 1], [2, 2, 2, 2], T=[1.0, 1.0, 1.0, 1.0])
+    for i in range(3):
+        sample = plane.step(10.0, 10.0 * i, fleet=fleet)
+        assert len(sample["queued_per_server"]) == 2
+        assert len(sample["occupancy_per_server"]) == 2
+    plane.drain()
+    per = plane.summary()["per_server"]
+    assert len(per["queue_depth_track"]) == 3
+    assert len(per["occupancy_track"]) == 3
+    assert all(len(row) == 2 for row in per["queue_depth_track"])
+    assert per["queue_depth_peak"][0] >= per["queue_depth_peak"][1]
+    assert sum(per["admitted"]) > 0
+    assert sum(per["shed"]) == plane.counters["shed"]
+    assert len(per["occupancy_mean"]) == 2
+    assert all(0.0 <= o <= 1.0 for o in per["occupancy_mean"])
+
+
+def test_collector_counts_degraded_per_server():
+    cfg = _cfg(arrival_rate=6.0, max_requests=20, deadline_s=2.0,
+               max_retries=0)
+    plane = _plane(cfg, Z=2, slots=1)
+    fleet = _fleet([0, 1, 0], [2, 2, 2], T=[5.0, 5.0, 5.0])
+    for i in range(3):
+        plane.step(10.0, 10.0 * i, fleet=fleet)
+    plane.drain()
+    per = plane.summary()["per_server"]
+    if plane.counters["degraded"] > plane.counters["shed"]:
+        # timeout-degraded requests were attributed to their server
+        assert sum(per["degraded"]) > 0

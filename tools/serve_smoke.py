@@ -16,13 +16,63 @@ data plane"):
   (``shed <= degraded``);
 * real tokens were emitted by the pools that stayed up.
 
+``--adaptive`` switches to the telemetry feedback smoke instead
+(docs/ARCHITECTURE.md, "Telemetry & feedback"): run the hotspot preset
+twice on the same seed — closed loop (``feedback=True``, the preset's
+own setting) vs open loop (``feedback=False``) — and assert the
+adaptive run strictly degrades fewer requests AND ends with a lower
+p99 virtual token latency.
+
 Run:  PYTHONPATH=src python tools/serve_smoke.py [--scenario NAME]
+      PYTHONPATH=src python tools/serve_smoke.py --adaptive
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 from repro.api import Session, get_scenario
+
+
+def _run_summary(sc):
+    sess = Session(sc)
+    for _ in range(sc.steps):
+        sess.step()
+    m = sess.run(0)
+    return m.serving, m.telemetry
+
+
+def adaptive_main(scenario: str) -> int:
+    sc = get_scenario(scenario)
+    if sc.serving is None:
+        raise SystemExit(f"scenario {sc.name!r} has no ServeConfig")
+    runs = {}
+    for fb in (False, True):
+        s = sc.replace(serving=dataclasses.replace(sc.serving,
+                                                   feedback=fb))
+        sv, tel = _run_summary(s)
+        runs[fb] = sv
+        mults = (tel["compute_mult_max"] if tel else [])
+        print(f"feedback={'on ' if fb else 'off'}  "
+              f"degraded={sv['degraded']:4d}  shed={sv['shed']:4d}  "
+              f"timeouts={sv['timeouts']:4d}  "
+              f"p99_tok={sv['token_latency_p99_s']:.3f}s  "
+              f"peak_mult={max(mults) if mults else 1.0:.2f}")
+        assert sv["lost"] == 0, f"feedback={fb} lost requests"
+    off, on = runs[False], runs[True]
+    assert on["degraded"] < off["degraded"], \
+        (f"closed loop must strictly degrade fewer requests: "
+         f"on={on['degraded']} off={off['degraded']}")
+    assert (on["token_latency_p99_s"] is not None
+            and off["token_latency_p99_s"] is not None
+            and on["token_latency_p99_s"] < off["token_latency_p99_s"]), \
+        (f"closed loop must lower p99 token latency: "
+         f"on={on['token_latency_p99_s']} "
+         f"off={off['token_latency_p99_s']}")
+    print(f"\nADAPTIVE_SMOKE_OK degraded {off['degraded']} -> "
+          f"{on['degraded']}, p99 {off['token_latency_p99_s']:.3f}s -> "
+          f"{on['token_latency_p99_s']:.3f}s")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -33,7 +83,14 @@ def main(argv=None) -> int:
     ap.add_argument("--min-failovers", type=int, default=1,
                     help="required mid-stream failover events (0 for "
                          "fault-free presets)")
+    ap.add_argument("--adaptive", nargs="?", const="serve_hotspot_k3",
+                    default=None, metavar="NAME",
+                    help="run the feedback on-vs-off comparison on NAME "
+                         "(default: serve_hotspot_k3) instead of the "
+                         "failover smoke")
     args = ap.parse_args(argv)
+    if args.adaptive is not None:
+        return adaptive_main(args.adaptive)
 
     sc = get_scenario(args.scenario)
     if sc.serving is None:
